@@ -1,0 +1,26 @@
+"""Fig. 4: per-app precision tuning tables (elements per precision bucket)
+for the three precision requirements."""
+FMT_ORDER = ("binary8", "binary16alt", "binary16", "binary32")
+
+
+def report(cache) -> dict:
+    print("\n== Fig. 4 analogue: tuned memory locations by format (V2) ==")
+    out = {}
+    for eps in cache["meta"]["eps_levels"]:
+        print(f"-- precision requirement eps={eps:g} "
+              f"(SQNR {-20 * __import__('math').log10(eps):.0f} dB)")
+        hdr = "app".ljust(8) + "".join(f"{f:>13}" for f in FMT_ORDER)
+        print(hdr)
+        for app, entry in cache["apps"].items():
+            key = f"eps{eps:g}|V2"
+            if key not in entry:
+                continue
+            sizes = entry[key]["sizes"]
+            fmts = entry[key]["formats"]
+            byf = {f: 0 for f in FMT_ORDER}
+            for v, f in fmts.items():
+                byf[f] = byf.get(f, 0) + sizes.get(v, 1)
+            out[(app, eps)] = byf
+            print(app.ljust(8) +
+                  "".join(f"{byf.get(f, 0):>13}" for f in FMT_ORDER))
+    return out

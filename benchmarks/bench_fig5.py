@@ -1,0 +1,24 @@
+"""Fig. 5: dynamic breakdown of FP operations by format, scalar vs vector."""
+
+
+def report(cache) -> dict:
+    print("\n== Fig. 5 analogue: FP op breakdown (V2) ==")
+    out = {}
+    for eps in cache["meta"]["eps_levels"]:
+        print(f"-- eps={eps:g}")
+        print(f"{'app':8s} {'narrow%':>8} {'vector%':>8}  by-format elems")
+        for app, entry in cache["apps"].items():
+            key = f"eps{eps:g}|V2"
+            if key not in entry:
+                continue
+            st = entry[key]["stats"]
+            byf = {}
+            for k, v in st["fp_elems"].items():
+                name, vec = k.split("|")
+                byf.setdefault(name, [0, 0])[int(vec)] += v
+            out[(app, eps)] = st
+            pieces = ", ".join(f"{n}={s}s/{v}v" for n, (s, v) in
+                               sorted(byf.items()))
+            print(f"{app:8s} {100*st['narrow_fraction']:>7.1f}% "
+                  f"{100*st['vector_fraction']:>7.1f}%  {pieces}")
+    return out

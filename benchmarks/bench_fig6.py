@@ -1,0 +1,23 @@
+"""Fig. 6: memory accesses and cycles, normalized to binary32 baseline."""
+
+
+def report(cache) -> dict:
+    print("\n== Fig. 6 analogue: memory accesses / cycles vs b32 (V2) ==")
+    out = {}
+    for eps in cache["meta"]["eps_levels"]:
+        print(f"-- eps={eps:g}")
+        print(f"{'app':8s} {'mem':>7} {'cycles':>8} {'casts':>8}")
+        for app, entry in cache["apps"].items():
+            key = f"eps{eps:g}|V2"
+            if key not in entry:
+                continue
+            rel = entry[key]["relative"]
+            out[(app, eps)] = rel
+            print(f"{app:8s} {rel['mem_accesses']:>7.3f} "
+                  f"{rel['cycles']:>8.3f} "
+                  f"{entry[key]['stats']['total_casts']:>8}")
+    avg = {m: sum(v[m] for v in out.values()) / max(len(out), 1)
+           for m in ("mem_accesses", "cycles")}
+    print(f"AVERAGE mem={avg['mem_accesses']:.3f} cycles={avg['cycles']:.3f} "
+          f"(paper: mem 0.73, cycles 0.88)")
+    return out

@@ -1,0 +1,29 @@
+"""Fig. 7: energy normalized to binary32 baseline, incl. PCA manual-vec."""
+
+
+def report(cache) -> dict:
+    print("\n== Fig. 7 analogue: energy vs b32 (V2) ==")
+    out = {}
+    hdr = f"{'app':8s}" + "".join(f"{f'eps={e:g}':>12}"
+                                  for e in cache["meta"]["eps_levels"])
+    print(hdr)
+    for app, entry in cache["apps"].items():
+        vals = []
+        for eps in cache["meta"]["eps_levels"]:
+            key = f"eps{eps:g}|V2"
+            r = entry.get(key, {}).get("relative", {}).get("energy",
+                                                           float("nan"))
+            out[(app, eps)] = r
+            vals.append(r)
+        print(f"{app:8s}" + "".join(f"{v:>12.3f}" for v in vals))
+    pv = [entry for app, entry in cache["apps"].items() if app == "PCA"]
+    if pv and any("manual_vec" in k for k in pv[0]):
+        vals = [pv[0].get(f"eps{e:g}|V2|manual_vec", {})
+                .get("relative", {}).get("energy", float("nan"))
+                for e in cache["meta"]["eps_levels"]]
+        print(f"{'PCA+vec':8s}" + "".join(f"{v:>12.3f}" for v in vals)
+              + "   (paper labels 1-3: 1.01 / 0.96 / 0.85)")
+    nums = [v for v in out.values() if v == v]
+    print(f"AVERAGE energy={sum(nums)/len(nums):.3f} "
+          f"min={min(nums):.3f} (paper: avg 0.82, best 0.70=KNN)")
+    return out

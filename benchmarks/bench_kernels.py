@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: wall time of the pure-jnp reference path (the
+Pallas kernels run in interpret mode on CPU -- their timing is meaningless
+here; correctness is asserted in tests, TPU timing comes from the roofline).
+Derived column: model-side bytes saved by packed storage."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BINARY8, BINARY16, BINARY16ALT
+from repro.core.qtensor import encode
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def report() -> list:
+    rows = []
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1024, 1024)),
+                    jnp.float32)
+    for fmt in (BINARY8, BINARY16, BINARY16ALT):
+        f = jax.jit(lambda v, fmt=fmt: ref.flexfloat_cast_ref(v, fmt))
+        us = _time(f, x)
+        rows.append((f"cast_{fmt.name}", us,
+                     f"bytes_ratio={fmt.container_dtype.dtype.itemsize/4}"))
+    a = jnp.asarray(np.random.default_rng(1).normal(size=(512, 512)),
+                    jnp.float32)
+    b = jnp.asarray(np.random.default_rng(2).normal(size=(512, 512)),
+                    jnp.float32)
+    for fmt in (BINARY8, BINARY16ALT):
+        ap, bp = encode(a, fmt), encode(b, fmt)
+        f = jax.jit(lambda u, v, fmt=fmt: ref.qmatmul_ref(u, v, fmt, fmt))
+        us = _time(f, ap, bp)
+        gflops = 2 * 512**3 / (us * 1e-6) / 1e9
+        rows.append((f"qmatmul_{fmt.name}", us, f"gflops={gflops:.1f}"))
+    return rows

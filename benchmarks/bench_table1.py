@@ -1,0 +1,22 @@
+"""Table I: variables classified by type under V1 vs V2 type systems."""
+from collections import defaultdict
+
+
+def report(cache) -> list:
+    rows = []
+    for ts in ("V1", "V2"):
+        counts = defaultdict(int)
+        for app, entry in cache["apps"].items():
+            key = f"eps{0.1:g}|{ts}"
+            if key not in entry:
+                continue
+            for v, fmt in entry[key]["formats"].items():
+                counts[fmt] += 1
+        rows.append((ts, counts["binary8"], counts["binary16"],
+                     counts["binary16alt"], counts["binary32"]))
+    print("\n== Table I analogue: tuned variables by type (eps=1e-1) ==")
+    print(f"{'':4s} {'b8':>4} {'b16':>4} {'b16alt':>7} {'b32':>4}   "
+          f"(paper V1: 10/29/-/72, V2: 19/10/41/41 on their var set)")
+    for ts, b8, b16, b16a, b32 in rows:
+        print(f"{ts:4s} {b8:>4} {b16:>4} {b16a:>7} {b32:>4}")
+    return rows

@@ -1,0 +1,119 @@
+"""Orchestrator: runs precision tuning + op/energy accounting for all six
+paper apps at the paper's three precision requirements, caches to JSON.
+
+Every bench_fig*.py reads this cache; ``python -m benchmarks.run`` refreshes
+it when missing/stale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict
+
+from repro.apps.common import TPContext
+from repro.apps.conv import Conv
+from repro.apps.dwt import Dwt
+from repro.apps.jacobi import Jacobi
+from repro.apps.knn import Knn
+from repro.apps.pca import Pca
+from repro.apps.svm import Svm
+from repro.core import energy
+from repro.core.tuning import tune
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "paper",
+                     "tuning_cache.json")
+EPS_LEVELS = [1e-1, 1e-2, 1e-3]
+
+
+def apps():
+    return [Jacobi(), Knn(), Pca(), Dwt(), Svm(), Conv()]
+
+
+def _stats_payload(stats) -> Dict:
+    return {
+        "fp_elems": {f"{k[0]}|{int(k[1])}": v
+                     for k, v in stats.fp_elems.items()},
+        "fp_instrs": {f"{k[0]}|{int(k[1])}": v
+                      for k, v in stats.fp_instrs.items()},
+        "casts": {f"{k[0]}|{k[1]}": v for k, v in stats.casts.items()},
+        "mem_words": {f"{k[0]}|{int(k[1])}": v
+                      for k, v in stats.mem_words.items()},
+        "other": stats.other_instrs,
+        "narrow_fraction": stats.narrow_fraction(),
+        "vector_fraction": stats.vector_fraction(),
+        "total_casts": stats.total_casts(),
+    }
+
+
+def _cost_payload(rep) -> Dict:
+    return {"cycles": rep.cycles, "energy_pj": rep.energy_pj,
+            "fp_pj": rep.energy_fp_pj, "mem_pj": rep.energy_mem_pj,
+            "other_pj": rep.energy_other_pj, "mem_words": rep.mem_words}
+
+
+def compute(force: bool = False, quick: bool = False) -> Dict:
+    if os.path.exists(CACHE) and not force:
+        with open(CACHE) as f:
+            return json.load(f)
+
+    out: Dict = {"apps": {}, "meta": {"eps_levels": EPS_LEVELS}}
+    for app in apps():
+        t0 = time.time()
+        entry: Dict = {}
+        inputs = app.gen_inputs(seed=1000)
+
+        # binary32 baseline counts
+        ctx32 = TPContext({})
+        app.run(ctx32, inputs)
+        base_cost = energy.cost(ctx32.stats)
+        entry["baseline"] = {"stats": _stats_payload(ctx32.stats),
+                             "cost": _cost_payload(base_cost)}
+
+        for eps in EPS_LEVELS:
+            for ts in (["V2"] if quick else ["V1", "V2"]):
+                res = tune(app, eps, n_input_sets=2 if quick else 3,
+                           type_system=ts)
+                ctx = TPContext(res.formats)
+                app.run(ctx, inputs)
+                rep = energy.cost(ctx.stats)
+                entry[f"eps{eps:g}|{ts}"] = {
+                    "formats": {k: v.name for k, v in res.formats.items()},
+                    "precisions": res.precisions,
+                    "sizes": res.sizes,
+                    "needs_wide": res.needs_wide,
+                    "final_error": res.final_error,
+                    "n_evals": res.n_evals,
+                    "stats": _stats_payload(ctx.stats),
+                    "cost": _cost_payload(rep),
+                    "relative": energy.relative(rep, base_cost),
+                }
+        # PCA manual-vectorization variants (paper Fig. 7 labels 1-3)
+        if app.name == "PCA":
+            for eps in EPS_LEVELS:
+                res = tune(app, eps, n_input_sets=2 if quick else 3,
+                           type_system="V2")
+                mv = Pca()
+                mv.manual_vec = True
+                ctxv = TPContext(res.formats)
+                mv.run(ctxv, inputs)
+                repv = energy.cost(ctxv.stats)
+                entry[f"eps{eps:g}|V2|manual_vec"] = {
+                    "cost": _cost_payload(repv),
+                    "relative": energy.relative(repv, base_cost),
+                    "stats": _stats_payload(ctxv.stats),
+                }
+        entry["_elapsed_s"] = round(time.time() - t0, 1)
+        out["apps"][app.name] = entry
+        print(f"[paper_results] {app.name} done in {entry['_elapsed_s']}s")
+
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    with open(CACHE, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    compute(force="--force" in sys.argv, quick="--quick" in sys.argv)

@@ -1,0 +1,51 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus the figure tables to stderr-
+style stdout above the CSV block)."""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_fig4, bench_fig5, bench_fig6, bench_fig7,
+                            bench_kernels, bench_llm, bench_table1,
+                            paper_results)
+
+    quick = "--quick" in sys.argv
+    cache = paper_results.compute(quick=quick)
+
+    bench_table1.report(cache)
+    fig4 = bench_fig4.report(cache)
+    bench_fig5.report(cache)
+    fig6 = bench_fig6.report(cache)
+    fig7 = bench_fig7.report(cache)
+
+    print("\n== CSV ==")
+    print("name,us_per_call,derived")
+    for (app, eps), rel in fig6.items():
+        print(f"fig6_{app}_eps{eps:g},0,"
+              f"mem={rel['mem_accesses']:.3f};cycles={rel['cycles']:.3f}")
+    for (app, eps), e in fig7.items():
+        print(f"fig7_{app}_eps{eps:g},0,energy={e:.3f}")
+    for name, us, derived in bench_kernels.report():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in bench_llm.report():
+        print(f"{name},{us:.1f},{derived}")
+
+    # roofline summary from the dry-run sweep, if present
+    import glob
+    import json
+    import os
+    files = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
+    for fn in files:
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        print(f"dryrun_{d['arch']}_{d['shape']}_{d['mesh']},0,"
+              f"dominant={r['dominant']};bound_s={r['bound_step_time_s']:.4f};"
+              f"useful={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: the transprecision FP type system in five minutes.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexfloat import ff_add, ff_mul, quantize
+from repro.core.formats import (BINARY8, BINARY16, BINARY16ALT, BINARY32,
+                                FpFormat)
+from repro.core.qtensor import QTensor
+
+# -- 1. the four paper formats (+ any flexfloat<e,m>) ------------------------
+x = jnp.asarray([3.14159, -0.001, 42000.0, 1e-9], jnp.float32)
+for fmt in (BINARY8, BINARY16, BINARY16ALT, BINARY32):
+    print(f"{fmt.name:12s} (1/{fmt.e}/{fmt.m})  ->", np.asarray(quantize(x, fmt)))
+print("flexfloat<6,9> ->", np.asarray(quantize(x, FpFormat(6, 9))))
+
+# -- 2. binary16 vs binary16alt: precision vs range --------------------------
+big = jnp.asarray([1e20], jnp.float32)
+print("\nbinary16   (5-bit exp) of 1e20:", float(quantize(big, BINARY16)[0]))
+print("binary16alt(8-bit exp) of 1e20:", float(quantize(big, BINARY16ALT)[0]))
+
+# -- 3. FlexFloat arithmetic: compute wide, sanitize narrow ------------------
+a = quantize(jnp.asarray([1.5]), BINARY8)
+b = quantize(jnp.asarray([0.25]), BINARY8)
+print("\nbinary8: 1.5*0.25 + 1.5 =", float(ff_add(ff_mul(a, b, BINARY8), a,
+                                                  BINARY8)[0]))
+
+# -- 4. packed storage: 4x fewer bytes for binary8 ---------------------------
+w = jnp.asarray(np.random.default_rng(0).normal(size=(128, 128)), jnp.float32)
+q8 = QTensor.quantize(w, BINARY8)
+print(f"\nf32 bytes: {w.size * 4:,}   binary8 QTensor bytes: {q8.nbytes:,}"
+      f"   (native dtype: {q8.to_native().dtype})")
+
+# -- 5. precision tuning on a paper app ---------------------------------------
+from repro.apps.dwt import Dwt
+from repro.core.tuning import tune
+
+res = tune(Dwt(), eps=1e-2, n_input_sets=2)
+print("\nDWT tuned formats @ eps=1e-2:",
+      {k: v.name for k, v in res.formats.items()},
+      f"(err={res.final_error:.2e}, {res.n_evals} evaluations)")

@@ -1,0 +1,8 @@
+"""Batched serving example: continuous batching with binary8 KV caches.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "llama3-8b", "--reduced", "--requests", "12",
+      "--slots", "4", "--max-new", "12", "--policy", "transprecision"])

@@ -1,0 +1,50 @@
+"""The paper's full transprecision programming flow on one app (Sec. III-B):
+replace types -> tune precision -> map formats -> collect statistics ->
+estimate energy vs the binary32 baseline.
+
+Run: PYTHONPATH=src python examples/tune_app.py [APP] [EPS]
+"""
+import sys
+
+from repro.apps.common import TPContext
+from repro.apps.conv import Conv
+from repro.apps.dwt import Dwt
+from repro.apps.jacobi import Jacobi
+from repro.apps.knn import Knn
+from repro.apps.pca import Pca
+from repro.apps.svm import Svm
+from repro.core import energy
+from repro.core.tuning import tune
+
+APPS = {a.name: a for a in (Jacobi(), Knn(), Pca(), Dwt(), Svm(), Conv())}
+
+name = (sys.argv[1] if len(sys.argv) > 1 else "KNN").upper()
+eps = float(sys.argv[2]) if len(sys.argv) > 2 else 1e-1
+app = APPS[name]
+
+print(f"== step 1-2: tune {name} to eps={eps:g} "
+      f"(SQNR {-20 * __import__('math').log10(eps):.0f} dB) ==")
+res = tune(app, eps, n_input_sets=3)
+print(f"evaluations: {res.n_evals}, final error: {res.final_error:.3g}")
+
+print("\n== step 3: variable -> format bindings ==")
+for v in app.variables:
+    print(f"  {v:10s} precision={res.precisions[v]:>2}b "
+          f"wide_range={str(res.needs_wide[v]):5s} -> {res.formats[v].name}")
+
+print("\n== step 4: operation/cast statistics ==")
+inputs = app.gen_inputs(0)
+ctx = TPContext(res.formats)
+app.run(ctx, inputs)
+print(f"  FP ops: {ctx.stats.total_fp_elems():,} "
+      f"({100 * ctx.stats.narrow_fraction():.0f}% below 32-bit, "
+      f"{100 * ctx.stats.vector_fraction():.0f}% vectorized)")
+print(f"  casts: {ctx.stats.total_casts():,}   "
+      f"memory words: {ctx.stats.total_mem_words():,}")
+
+print("\n== step 5: energy vs binary32 baseline ==")
+base_ctx = TPContext({})
+app.run(base_ctx, inputs)
+rel = energy.relative(energy.cost(ctx.stats), energy.cost(base_ctx.stats))
+print(f"  cycles: {rel['cycles']:.3f}x   memory accesses: "
+      f"{rel['mem_accesses']:.3f}x   energy: {rel['energy']:.3f}x")

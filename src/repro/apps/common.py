@@ -1,0 +1,178 @@
+"""TPContext: the FlexFloat programming model, instrumented.
+
+Apps are written against named *variables* (scalar vars or arrays -- the
+paper's tunable memory locations).  Every operation:
+  * loads its operands (counted, at the operand's format width; packed word
+    accesses when the section is vectorizable and the format is narrow),
+  * inserts an explicit cast when an operand's format differs from the
+    output variable's format (FlexFloat's strict typing -- casts are counted
+    and cost cycles/energy, reproducing the paper's PCA cast pathology),
+  * computes in the f32 container and sanitizes the result to the output
+    variable's format (bit-exact FlexFloat semantics),
+  * records the result's dynamic range (drives exponent-width selection).
+
+``vec=True`` marks ops inside sections the paper tags as vectorizable: with
+a <=16-bit format they count as SIMD issues and packed memory accesses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.flexfloat import quantize
+from repro.core.formats import BINARY32, FpFormat, get_format
+from repro.core.stats import OpStats
+
+import jax.numpy as jnp
+
+
+def _q(x: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    if fmt.is_binary32:
+        return np.asarray(x, np.float32)
+    return np.asarray(quantize(jnp.asarray(x, jnp.float32), fmt))
+
+
+@dataclasses.dataclass
+class TVal:
+    value: np.ndarray
+    name: str
+
+
+class TPContext:
+    def __init__(self, formats: Optional[Dict[str, FpFormat]] = None,
+                 count: bool = True):
+        self.formats = {k: get_format(v) for k, v in (formats or {}).items()}
+        self.count = count
+        self.stats = OpStats()
+        self.ranges: Dict[str, Tuple[float, float]] = {}
+        self.sizes: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- variables
+    def fmt(self, name: str) -> FpFormat:
+        return self.formats.get(name, BINARY32)
+
+    def var(self, name: str, value) -> TVal:
+        """Declare + store a named variable (input binding)."""
+        v = np.asarray(value, np.float32)
+        q = _q(v, self.fmt(name))
+        self.sizes[name] = max(self.sizes.get(name, 0), q.size)
+        self._range(name, q)
+        if self.count:
+            self.stats.mem(self.fmt(name), q.size, vec=False)  # initial store
+        return TVal(q, name)
+
+    def _range(self, name, v):
+        fin = np.abs(v[np.isfinite(v) & (v != 0)]) if v.size else np.array([])
+        if fin.size:
+            lo, hi = float(fin.min()), float(fin.max())
+            old = self.ranges.get(name, (np.inf, 0.0))
+            self.ranges[name] = (min(old[0], lo), max(old[1], hi))
+
+    # ------------------------------------------------------------------- ops
+    def _binary(self, kind, out_name, a: TVal, b: TVal, fn, vec: bool,
+                extra_other: int = 1) -> TVal:
+        ofmt = self.fmt(out_name)
+        av = a.value.astype(np.float32)
+        bv = b.value.astype(np.float32)
+        raw = fn(av, bv)
+        q = _q(raw, ofmt)
+        self.sizes[out_name] = max(self.sizes.get(out_name, 0), q.size)
+        self._range(out_name, q)
+        if self.count:
+            n = max(int(np.broadcast(av, bv).size), 1)
+            svec = vec and ofmt.bits <= 16
+            for t in (a, b):
+                tf = self.fmt(t.name)
+                self.stats.mem(tf, min(np.asarray(t.value).size, n),
+                               vec=svec and tf.bits <= 16)
+                self.stats.cast(tf, ofmt, min(np.asarray(t.value).size, n))
+            self.stats.fp_op(ofmt, n, vec=svec)
+            self.stats.mem(ofmt, q.size, vec=svec)   # result store
+            self.stats.other(extra_other)            # loop/addr overhead
+        return TVal(q, out_name)
+
+    def add(self, out, a, b, vec=False):
+        return self._binary("add", out, a, b, np.add, vec)
+
+    def sub(self, out, a, b, vec=False):
+        return self._binary("sub", out, a, b, np.subtract, vec)
+
+    def mul(self, out, a, b, vec=False):
+        return self._binary("mul", out, a, b, np.multiply, vec)
+
+    def fma(self, out, a, b, c, vec=False):
+        """mul -> round -> add -> round (the FPU has no fused narrow FMA)."""
+        t = self.mul(out, a, b, vec=vec)
+        return self.add(out, t, c, vec=vec)
+
+    def reduce_sum(self, out, a: TVal, axis=None, vec=False) -> TVal:
+        """Tree reduction: n-1 adds in the output format."""
+        ofmt = self.fmt(out)
+        av = a.value.astype(np.float32)
+        raw = np.sum(av, axis=axis, dtype=np.float32)
+        q = _q(raw, ofmt)
+        self.sizes[out] = max(self.sizes.get(out, 0), q.size)
+        self._range(out, q)
+        if self.count:
+            n_adds = max(av.size - q.size, 0)
+            svec = vec and ofmt.bits <= 16
+            self.stats.cast(self.fmt(a.name), ofmt, av.size)
+            self.stats.mem(self.fmt(a.name), av.size,
+                           vec=svec and self.fmt(a.name).bits <= 16)
+            self.stats.fp_op(ofmt, n_adds, vec=svec)
+            self.stats.mem(ofmt, q.size, vec=False)
+            self.stats.other(1)
+        return TVal(q, out)
+
+    def special(self, out, a: TVal, fn, n_equiv_b32_ops: int = 8) -> TVal:
+        """div/sqrt/exp etc.: executed as binary32 software/FPU sequences
+        (the transprecision FPU supports add/sub/mul/casts only)."""
+        raw = fn(a.value.astype(np.float32))
+        ofmt = self.fmt(out)
+        q = _q(raw, ofmt)
+        self.sizes[out] = max(self.sizes.get(out, 0), q.size)
+        self._range(out, q)
+        if self.count:
+            self.stats.mem(self.fmt(a.name), a.value.size, vec=False)
+            self.stats.fp_op(BINARY32, q.size * n_equiv_b32_ops, vec=False)
+            self.stats.cast(BINARY32, ofmt, q.size)
+            self.stats.mem(ofmt, q.size, vec=False)
+            self.stats.other(2)
+        return TVal(q, out)
+
+    def other(self, n: int):
+        if self.count:
+            self.stats.other(n)
+
+
+# ---------------------------------------------------------------------------
+# app protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AppSpec:
+    name: str
+    # variable name -> (is_vector_section, description)
+    variables: Sequence[str]
+
+    def run(self, ctx: TPContext, inputs) -> np.ndarray:  # pragma: no cover
+        raise NotImplementedError
+
+    def reference(self, inputs) -> np.ndarray:  # pragma: no cover
+        raise NotImplementedError
+
+    def gen_inputs(self, seed: int):  # pragma: no cover
+        raise NotImplementedError
+
+
+def rel_error(out: np.ndarray, ref: np.ndarray) -> float:
+    """Relative RMS error; the tuner's constraint (SQNR = -20 log10(eps))."""
+    ref = np.asarray(ref, np.float64)
+    out = np.asarray(out, np.float64)
+    denom = float(np.sqrt(np.mean(ref ** 2))) + 1e-300
+    if not np.all(np.isfinite(out)):
+        return float("inf")
+    return float(np.sqrt(np.mean((out - ref) ** 2)) / denom)

@@ -1,0 +1,40 @@
+"""Assigned input-shape sets (LM-family: seq_len x global_batch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token with a KV cache
+of seq_len); ``train_*`` lower ``train_step``; ``prefill_*`` lower
+``prefill_step``.  ``long_500k`` requires sub-quadratic attention: it runs
+for ssm/hybrid archs and is skipped (recorded) for pure full-attention ones.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs whose attention is sub-quadratic (may run long_500k)
+SUBQUADRATIC = {"rwkv6-1.6b", "recurrentgemma-2b"}
+
+
+def runnable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in SUBQUADRATIC
+    return True
+
+
+def skip_reason(arch_id: str, shape_name: str) -> str:
+    if shape_name == "long_500k" and arch_id not in SUBQUADRATIC:
+        return ("full quadratic attention: 512k-token KV/score working set "
+                "is infeasible; see DESIGN.md Arch-applicability")
+    return ""

@@ -1,0 +1,198 @@
+"""FlexFloat-in-JAX: bit-exact sanitization of f32 values to flexfloat<e, m>.
+
+The FlexFloat library (paper Sec. III-A) performs arithmetic in a wide native
+type and then *sanitizes* the result -- adjusting exponent and mantissa so the
+stored value is exactly what a hardware unit of the target format would have
+produced.  This module is the vectorized JAX equivalent: ``quantize(x, fmt)``
+rounds an f32 array to format (e, m) with round-to-nearest-even, IEEE gradual
+underflow (denormals), and Inf/NaN semantics, entirely with f32/uint32 lane
+ops (TPU-friendly; no f64, no data-dependent control flow).
+
+Algorithm
+---------
+normal range (|x| >= 2^emin_t after rounding):
+    integer round-to-nearest-even on the f32 bit pattern at cut position
+    ``shift = 23 - m``:  ``bits += ((1 << (shift-1)) - 1 + lsb); bits &= ~mask``.
+    Mantissa overflow carries into the exponent field for free; a post-check
+    turns exponents > emax_t into +/-Inf (IEEE RNE overflow rule).
+subnormal range (|x| < 2^emin_t):
+    the magic-constant trick: ``r = (|x| + 2^(qe+23)) - 2^(qe+23)`` rounds to
+    the denormal quantum 2^qe = 2^(emin_t - m) with RNE, exactly (both ops are
+    single f32 roundings; the subtraction is exact).
+Inf/NaN: passed through (NaN canonicalized, sign preserved).
+
+Bit-exactness is validated exhaustively against native float8_e5m2 / float16 /
+bfloat16 casts in tests/test_formats.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .formats import FpFormat, format_constants, get_format
+
+_U32 = jnp.uint32
+_SIGN = np.uint32(0x8000_0000)
+_MAG = np.uint32(0x7FFF_FFFF)
+_EXP_F32 = np.uint32(0x7F80_0000)
+_QNAN = np.uint32(0x7FC0_0000)
+_INF = np.uint32(0x7F80_0000)
+
+
+def _bits(x):
+    return lax.bitcast_convert_type(x, _U32)
+
+
+def _float(u):
+    return lax.bitcast_convert_type(u, jnp.float32)
+
+
+def quantize(x: jax.Array, fmt: Union[FpFormat, str], *,
+             saturate: bool = False,
+             key: Optional[jax.Array] = None) -> jax.Array:
+    """Sanitize ``x`` (any float dtype) to format ``fmt``; returns float32.
+
+    saturate: clamp overflow to +/-max_normal instead of +/-Inf (beyond-paper
+        knob, matches ML-style saturating fp8 semantics).
+    key: if given, use stochastic rounding in the normal range (beyond-paper;
+        used for gradient compression).  Subnormal range stays RNE.
+    """
+    fmt = get_format(fmt)
+    x = jnp.asarray(x)
+    if x.dtype != jnp.float32:
+        x = x.astype(jnp.float32)
+    if fmt.is_binary32 and key is None:
+        return x
+    return _quantize_f32_jit(x, fmt.e, fmt.m, saturate, key)
+
+
+def quantize_math(x, e, m, saturate=False, key=None):
+    """The raw quantization math (pure jnp lane ops, unjitted).
+
+    Shared verbatim by the jitted wrapper below and by the Pallas kernel body
+    in ``repro.kernels.flexfloat_cast`` -- one source of truth for the bit
+    manipulation, validated exhaustively against native casts.
+    """
+    c = format_constants(e, m)
+    u = _bits(x)
+    sign = u & _SIGN
+    mag = u & _MAG
+    ef = (mag >> 23).astype(jnp.int32)  # biased f32 exponent, 0..255
+    is_naninf = ef == 255
+    is_nan = is_naninf & ((mag & ~_EXP_F32) != 0)
+
+    # ---- normal path: integer RNE (or stochastic) at cut `shift` ----------
+    shift = c["shift"]
+    if shift > 0:
+        if key is None:
+            lsb = (mag >> shift) & np.uint32(1)
+            rnd = np.uint32((1 << (shift - 1)) - 1) + lsb
+        else:
+            rnd = jax.random.bits(key, mag.shape, jnp.uint32) >> (32 - shift)
+        mag_r = (mag + rnd) & np.uint32(~((1 << shift) - 1) & 0xFFFFFFFF)
+    else:
+        mag_r = mag
+    ovf = (mag_r >> 23).astype(jnp.int32) > (c["emax"] + 127)
+    sat_bits = _bits(c["max_normal"])
+    mag_r = jnp.where(ovf, sat_bits if saturate else _INF, mag_r)
+    normal = _float(sign | mag_r)
+
+    # ---- subnormal path: pure-integer RNE to quantum 2^qe -----------------
+    # No FP arithmetic here: XLA CPU runs with DAZ/FTZ, so f32-denormal
+    # operands/results of adds and muls are flushed to zero (verified), while
+    # bit manipulation is exact.  value = sig * 2^exp2 with
+    #   sig  = 2^23 + M (normal input)  |  M (f32-denormal input)
+    #   exp2 = max(ef, 1) - 150
+    # and we RNE-shift sig right by S = qe - exp2 (in [1, 25] after clamping;
+    # S >= 25 provably yields 0 because sig < 2^24).
+    qe = c["qe"]
+    mant_f = mag & np.uint32(0x7F_FFFF)
+    is_norm_in = ef > 0
+    sig = jnp.where(is_norm_in, mant_f | np.uint32(1 << 23), mant_f)
+    exp2 = jnp.maximum(ef, 1) - 150
+    s_amt = jnp.clip(qe - exp2, 1, 25).astype(_U32)
+    half = (np.uint32(1) << (s_amt - 1))
+    rem = sig & ((np.uint32(1) << s_amt) - 1)
+    out_i = sig >> s_amt
+    round_up = (rem > half) | ((rem == half) & ((out_i & 1) == 1))
+    out_i = out_i + round_up.astype(_U32)
+    # reconstruct |out_i * 2^qe| as f32 bits without FP math:
+    #   normal result  (out_i >= 2^(-126-qe)): bits(float(out_i)) + (qe << 23)
+    #   denormal result: out_i << (qe + 149)
+    thresh = np.uint32(1) << max(0, min(-126 - qe, 23))
+    as_f = out_i.astype(jnp.float32)  # exact: out_i <= 2^23
+    norm_bits = (_bits(as_f).astype(jnp.int32) + np.int32(qe << 23)
+                 ).astype(_U32)
+    den_bits = out_i << np.uint32(max(qe + 149, 0))
+    sub_mag_bits = jnp.where(out_i >= thresh, norm_bits, den_bits)
+    sub_mag_bits = jnp.where(out_i == 0, np.uint32(0), sub_mag_bits)
+    sub = _float(sign | sub_mag_bits)  # reapply sign (handles +/-0)
+
+    use_sub = (ef - 127) < c["emin"]
+    out = jnp.where(use_sub, sub, normal)
+
+    # ---- Inf / NaN ---------------------------------------------------------
+    special = _float(sign | jnp.where(is_nan, _QNAN, _INF))
+    out = jnp.where(is_naninf, special, out)
+    return out
+
+
+_quantize_f32_jit = jax.jit(quantize_math, static_argnums=(1, 2, 3))
+
+
+def quantize_pytree(tree, fmt, **kw):
+    """Apply ``quantize`` to every floating leaf of a pytree."""
+    fmt = get_format(fmt)
+
+    def q(leaf):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            return quantize(leaf, fmt, **kw)
+        return leaf
+
+    return jax.tree_util.tree_map(q, tree)
+
+
+# ---------------------------------------------------------------------------
+# Transprecision arithmetic (FlexFloat operator semantics): each op computes
+# in the container type (f32) and sanitizes the result to the *output* format.
+# Operands must already be sanitized members of their formats -- matching
+# FlexFloat's strict no-implicit-cast typing -- which the caller guarantees by
+# construction (every producer quantizes).
+# ---------------------------------------------------------------------------
+
+def ff_add(a, b, fmt, **kw):
+    return quantize(a + b, fmt, **kw)
+
+
+def ff_sub(a, b, fmt, **kw):
+    return quantize(a - b, fmt, **kw)
+
+
+def ff_mul(a, b, fmt, **kw):
+    return quantize(a * b, fmt, **kw)
+
+
+def ff_div(a, b, fmt, **kw):
+    return quantize(a / b, fmt, **kw)
+
+
+def ff_fma(a, b, c_, fmt, **kw):
+    # The paper's FPU has no fused 8/16-bit FMA (add/sub/mul only); model as
+    # mul -> round -> add -> round, exactly what two slice ops produce.
+    return quantize(quantize(a * b, fmt, **kw) + c_, fmt, **kw)
+
+
+def ff_cast(x, src_fmt, dst_fmt, **kw):
+    """Explicit cast between formats (counted by the stats layer)."""
+    del src_fmt  # value is already exact in src; re-rounding to dst suffices
+    return quantize(x, dst_fmt, **kw)
+
+
+def quantization_error(x, fmt):
+    """|x - Q(x)| -- used by tuning diagnostics and property tests."""
+    return jnp.abs(x - quantize(x, fmt))

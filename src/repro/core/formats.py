@@ -1,0 +1,191 @@
+"""Floating-point format descriptors for the transprecision type system.
+
+The paper's extended FP type system (Tagliavini et al., Fig. 1):
+
+    binary8     1s / 5e / 2m    -- new: mirrors binary16's dynamic range
+    binary16    1s / 5e / 10m   -- IEEE 754 half
+    binary16alt 1s / 8e / 7m    -- new: mirrors binary32's dynamic range
+    binary32    1s / 8e / 23m   -- IEEE 754 single
+
+All four map exactly onto modern ML dtypes (e5m2 / f16 / bf16 / f32), which is
+what makes the paper's "step 5: replace simulated ops with native ones" a real
+deployment path on TPUs.  Arbitrary ``flexfloat<e, m>`` formats (1 <= e <= 8,
+1 <= m <= 23) are supported for exploration, exactly like the FlexFloat
+template class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FpFormat:
+    """An IEEE-754-style binary format with ``e`` exponent and ``m`` mantissa bits.
+
+    Semantics follow IEEE 754 (and FlexFloat): one sign bit, biased exponent,
+    implicit leading one, gradual underflow (denormals), +/-Inf and NaN.
+    """
+
+    e: int
+    m: int
+    name: str = dataclasses.field(default="", compare=False)
+
+    def __post_init__(self):
+        if not (1 <= self.e <= 8):
+            raise ValueError(f"exponent bits must be in [1, 8], got {self.e}")
+        if not (1 <= self.m <= 23):
+            raise ValueError(f"mantissa bits must be in [1, 23], got {self.m}")
+        if not self.name:
+            object.__setattr__(self, "name", f"flexfloat<{self.e},{self.m}>")
+
+    # -- derived parameters -------------------------------------------------
+    @property
+    def bits(self) -> int:
+        return 1 + self.e + self.m
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.e - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        return self.bias
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_normal(self) -> float:
+        return float((2.0 - 2.0 ** (-self.m)) * 2.0 ** self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.emin)
+
+    @property
+    def min_denormal(self) -> float:
+        return float(2.0 ** (self.emin - self.m))
+
+    @property
+    def precision(self) -> int:
+        """Precision in bits (mantissa + implicit one), the tuner's unit."""
+        return self.m + 1
+
+    @property
+    def container_dtype(self):
+        """Narrowest unsigned integer dtype that holds the packed bit field."""
+        if self.bits <= 8:
+            return jnp.uint8
+        if self.bits <= 16:
+            return jnp.uint16
+        return jnp.uint32
+
+    @property
+    def native_dtype(self) -> Optional[jnp.dtype]:
+        """The native JAX dtype with identical (e, m), if one exists."""
+        return _NATIVE.get((self.e, self.m))
+
+    @property
+    def is_binary32(self) -> bool:
+        return self.e == 8 and self.m == 23
+
+    # -- bit-field helpers ---------------------------------------------------
+    @property
+    def exp_mask(self) -> int:
+        return ((1 << self.e) - 1) << self.m
+
+    @property
+    def mant_mask(self) -> int:
+        return (1 << self.m) - 1
+
+    @property
+    def sign_mask(self) -> int:
+        return 1 << (self.e + self.m)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+_NATIVE = {
+    (5, 2): jnp.float8_e5m2,
+    (4, 3): jnp.float8_e4m3,
+    (5, 10): jnp.float16,
+    (8, 7): jnp.bfloat16,
+    (8, 23): jnp.float32,
+}
+
+# The paper's four formats (Fig. 1).
+BINARY8 = FpFormat(5, 2, "binary8")
+BINARY16 = FpFormat(5, 10, "binary16")
+BINARY16ALT = FpFormat(8, 7, "binary16alt")
+BINARY32 = FpFormat(8, 23, "binary32")
+
+PAPER_FORMATS = (BINARY8, BINARY16, BINARY16ALT, BINARY32)
+BY_NAME = {f.name: f for f in PAPER_FORMATS}
+# Beyond-paper: e4m3 (more precision, less range than binary8) for comparison.
+BINARY8ALT = FpFormat(4, 3, "binary8alt")
+BY_NAME[BINARY8ALT.name] = BINARY8ALT
+
+
+def get_format(name_or_fmt) -> FpFormat:
+    if isinstance(name_or_fmt, FpFormat):
+        return name_or_fmt
+    if isinstance(name_or_fmt, str):
+        if name_or_fmt in BY_NAME:
+            return BY_NAME[name_or_fmt]
+        if name_or_fmt.startswith("flexfloat<"):
+            e, m = name_or_fmt[len("flexfloat<"):-1].split(",")
+            return FpFormat(int(e), int(m))
+    raise KeyError(f"unknown format {name_or_fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# The paper's precision->format mapping (Sec. III-A):
+#   precision (0, 3]  -> 5 exponent bits  => binary8
+#   precision (0, 11] -> 5 exponent bits  => binary16
+#   precision (0, 8]  -> 8 exponent bits  => binary16alt
+# V1 = {binary8, binary16, binary32};  V2 = V1 + {binary16alt}.
+# ---------------------------------------------------------------------------
+
+def map_precision_to_format(precision_bits: int, *, type_system: str = "V2",
+                            needs_wide_range: bool = False) -> FpFormat:
+    """Map a tuned precision (in bits, incl. implicit one) to a storage format.
+
+    ``needs_wide_range`` selects the 8-bit-exponent family when the variable's
+    dynamic range exceeds what a 5-bit exponent covers (the paper's wrapper
+    extracts this from a configuration map; we derive it from observed ranges).
+    """
+    if type_system not in ("V1", "V2"):
+        raise ValueError(type_system)
+    if precision_bits <= 3 and not needs_wide_range:
+        return BINARY8
+    if type_system == "V2" and precision_bits <= 8:
+        # binary16alt covers binary32's range; preferred whenever 8 bits of
+        # precision suffice (cheap casts to/from binary32).
+        return BINARY16ALT
+    if precision_bits <= 11 and not needs_wide_range:
+        return BINARY16
+    return BINARY32
+
+
+@lru_cache(maxsize=None)
+def format_constants(e: int, m: int):
+    """Pre-computed numpy constants used by the quantizers (hashable args)."""
+    fmt = FpFormat(e, m)
+    qe = fmt.emin - fmt.m  # exponent of the smallest denormal quantum
+    return dict(
+        bias=fmt.bias,
+        emax=fmt.emax,
+        emin=fmt.emin,
+        qe=qe,
+        shift=23 - fmt.m,
+        magic=np.float32(2.0 ** (qe + 23)),  # qe + 23 >= -126: representable
+        max_normal=np.float32(fmt.max_normal),
+        min_normal=np.float32(fmt.min_normal),
+    )

@@ -1,0 +1,134 @@
+"""Precision policies: the transprecision type system applied to models.
+
+A :class:`PrecisionPolicy` assigns an FP format to every tensor *role* in a
+model (weights, activations, KV cache, gradients, optimizer state, ...),
+mirroring the paper's per-variable format bindings after precision tuning.
+
+Two execution modes:
+
+``native``
+    Formats map to native ML dtypes (binary8 -> float8_e5m2, binary16 ->
+    float16, binary16alt -> bfloat16, binary32 -> float32) and the model
+    actually stores/computes in them -- the paper's programming-flow step 5
+    ("replace simulated operations with native ones").  This is the mode the
+    multi-pod dry-run and roofline use: narrow formats genuinely shrink HBM
+    bytes and collective bytes.
+
+``emulated``
+    Tensors stay f32 and every annotated edge inserts a FlexFloat
+    sanitization (bit-exact (e, m) rounding).  This is the exploration mode
+    the tuner drives -- any (e, m), not just the native four.
+
+Roles used by the model substrate:
+    embed_w, attn_w, ffn_w, router_w, norm_w   -- parameters (by layer kind)
+    act                                         -- residual-stream activations
+    attn_probs, router_probs                    -- softmax outputs
+    kv_cache                                    -- decode-time KV storage
+    logits                                      -- final LM head output
+    grad_comm, optim_m, optim_v, master         -- training-side tensors
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import jax.numpy as jnp
+
+from .flexfloat import quantize
+from .formats import (BINARY8, BINARY16ALT, BINARY32, FpFormat, get_format)
+
+DEFAULT_ROLES = (
+    "embed_w", "attn_w", "ffn_w", "router_w", "norm_w", "act", "attn_probs",
+    "router_probs", "kv_cache", "logits", "grad_comm", "optim_m", "optim_v",
+    "master",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    formats: Mapping[str, FpFormat]
+    mode: str = "native"  # "native" | "emulated"
+    default_fmt: FpFormat = BINARY32
+
+    def __post_init__(self):
+        if self.mode not in ("native", "emulated"):
+            raise ValueError(self.mode)
+        if self.mode == "native":
+            for role, fmt in self.formats.items():
+                if get_format(fmt).native_dtype is None:
+                    raise ValueError(
+                        f"role {role}: {fmt} has no native dtype; use "
+                        f"mode='emulated'")
+
+    # -- queries -------------------------------------------------------------
+    def fmt(self, role: str) -> FpFormat:
+        return get_format(self.formats.get(role, self.default_fmt))
+
+    def dtype(self, role: str):
+        """Storage dtype for ``role`` in native mode (f32 in emulated)."""
+        if self.mode == "native":
+            return self.fmt(role).native_dtype
+        return jnp.float32
+
+    # -- tensor transforms ----------------------------------------------------
+    def store(self, x, role: str):
+        """Bring ``x`` into the storage representation for ``role``."""
+        fmt = self.fmt(role)
+        if self.mode == "native":
+            return x.astype(fmt.native_dtype)
+        return quantize(x, fmt)
+
+    def compute(self, x, role: str):
+        """Bring a stored tensor into compute representation.
+
+        Native mode computes *in* the narrow dtype (MXU consumes bf16/f8
+        directly, accumulating in f32); emulated mode computes in f32 on
+        already-sanitized values.  Either way this is a no-op cast here --
+        matmul helpers pass ``preferred_element_type=f32``.
+        """
+        del role
+        return x
+
+    def with_overrides(self, **roles) -> "PrecisionPolicy":
+        f = dict(self.formats)
+        f.update({k: get_format(v) for k, v in roles.items()})
+        return dataclasses.replace(self, formats=f)
+
+    def describe(self) -> str:
+        rows = [f"  {r:<14} -> {self.fmt(r).name}" for r in DEFAULT_ROLES]
+        return f"PrecisionPolicy(mode={self.mode})\n" + "\n".join(rows)
+
+
+def binary32_policy(mode: str = "native") -> PrecisionPolicy:
+    """The paper's baseline: everything binary32."""
+    return PrecisionPolicy(formats={}, mode=mode, default_fmt=BINARY32)
+
+
+def transprecision_policy(mode: str = "native",
+                          kv_fmt: Optional[FpFormat] = None,
+                          ) -> PrecisionPolicy:
+    """The framework default after tuning: weights/acts binary16alt (bf16 --
+    the paper's wide-range 16-bit format), KV cache binary8 (e5m2), router /
+    logits / optimizer accumulators binary32.  Matches the paper's observed
+    binding pattern: ~90 % of ops at <=16 bit, accumulations and
+    range-critical variables at binary32."""
+    f = {
+        "embed_w": BINARY16ALT, "attn_w": BINARY16ALT, "ffn_w": BINARY16ALT,
+        "router_w": BINARY32, "norm_w": BINARY32,
+        "act": BINARY16ALT, "attn_probs": BINARY16ALT,
+        "router_probs": BINARY32,
+        "kv_cache": kv_fmt if kv_fmt is not None else BINARY8,
+        "logits": BINARY32, "grad_comm": BINARY8,
+        "optim_m": BINARY16ALT, "optim_v": BINARY32, "master": BINARY32,
+    }
+    return PrecisionPolicy(formats=f, mode=mode)
+
+
+POLICIES = {
+    "binary32": binary32_policy,
+    "transprecision": transprecision_policy,
+}
+
+
+def get_policy(name: str, **kw) -> PrecisionPolicy:
+    return POLICIES[name](**kw)

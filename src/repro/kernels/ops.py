@@ -1,0 +1,53 @@
+"""Public jitted wrappers around the Pallas kernels (with ref fallback).
+
+``use_pallas`` defaults to True; on non-TPU backends kernels run in
+interpret mode (bit-exact, slow), which is how this CPU-only container
+validates them.  Callers wanting raw speed on CPU set use_pallas=False and
+get the identical pure-jnp reference path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.core.formats import get_format
+from . import ref
+from .flexfloat_cast import dequantize_decode, flexfloat_cast, quantize_encode
+from .qmatmul import qmatmul
+
+
+@partial(jax.jit, static_argnames=("fmt", "saturate", "use_pallas"))
+def cast(x, fmt, *, saturate: bool = False, use_pallas: bool = True):
+    """Sanitize to (e, m); f32 in/out."""
+    fmt = get_format(fmt)
+    if use_pallas:
+        return flexfloat_cast(x, fmt, saturate=saturate)
+    return ref.flexfloat_cast_ref(x, fmt, saturate=saturate)
+
+
+@partial(jax.jit, static_argnames=("fmt", "use_pallas"))
+def pack(x, fmt, *, use_pallas: bool = True):
+    """Fused sanitize + pack into the narrow container."""
+    fmt = get_format(fmt)
+    if use_pallas:
+        return quantize_encode(x, fmt)
+    return ref.quantize_encode_ref(x, fmt)
+
+
+@partial(jax.jit, static_argnames=("fmt", "use_pallas"))
+def unpack(payload, fmt, *, use_pallas: bool = True):
+    fmt = get_format(fmt)
+    if use_pallas:
+        return dequantize_decode(payload, fmt)
+    return ref.dequantize_ref(payload, fmt)
+
+
+@partial(jax.jit, static_argnames=("fmt_a", "fmt_b", "out_fmt", "use_pallas"))
+def matmul(a_payload, b_payload, fmt_a=None, fmt_b=None,
+           out_fmt: Optional[str] = None, *, use_pallas: bool = True):
+    """Transprecision matmul on packed operands, f32 accumulation."""
+    if use_pallas:
+        return qmatmul(a_payload, b_payload, fmt_a, fmt_b, out_fmt)
+    return ref.qmatmul_ref(a_payload, b_payload, fmt_a, fmt_b, out_fmt)

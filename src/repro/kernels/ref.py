@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in ``repro.kernels`` must produce results that match these
+references bit-for-bit (quantization) or to f32 matmul tolerance (qmatmul).
+The test suite sweeps shapes/dtypes/formats and asserts closeness.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.flexfloat import quantize
+from repro.core.formats import FpFormat, get_format
+from repro.core.qtensor import decode, encode
+
+
+def flexfloat_cast_ref(x, fmt, *, saturate: bool = False):
+    """Oracle for the cast kernel: sanitize f32 -> (e, m), return f32."""
+    return quantize(x, fmt, saturate=saturate)
+
+
+def quantize_encode_ref(x, fmt):
+    """Oracle for the fused quantize+pack kernel: f32 -> packed container."""
+    return encode(x, get_format(fmt))
+
+
+def dequantize_ref(payload, fmt):
+    return decode(payload, get_format(fmt))
+
+
+def qmatmul_ref(a_payload, b_payload, fmt_a: FpFormat, fmt_b: FpFormat,
+                out_fmt: Optional[FpFormat] = None):
+    """Oracle for the transprecision matmul.
+
+    Decodes packed operands to f32 (exact), multiplies with f32 accumulation
+    (the MXU contract), optionally sanitizes the result to ``out_fmt``.
+    """
+    a = (decode(a_payload, get_format(fmt_a)) if fmt_a is not None
+         else jnp.asarray(a_payload, jnp.float32))
+    b = (decode(b_payload, get_format(fmt_b)) if fmt_b is not None
+         else jnp.asarray(b_payload, jnp.float32))
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if out_fmt is not None:
+        out = quantize(out, get_format(out_fmt))
+    return out

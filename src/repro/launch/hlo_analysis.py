@@ -1,0 +1,115 @@
+"""HLO post-compile analysis: collective bytes, op census, roofline terms.
+
+``cost_analysis()`` gives FLOPs and bytes but not collective traffic, so we
+parse the (post-SPMD) HLO text and sum operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  Models in
+this repo lower to loop-free HLO (DESIGN.md), so no trip-count scaling is
+needed; a while-loop detector asserts that invariant.
+
+Roofline constants (TPU v5e class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3fn": 1, "bf16": 2,
+    "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' shape literal."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _result_bytes(line: str) -> int:
+    """Sum bytes of the result shape(s) on an HLO instruction line."""
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return 0
+    # result shape appears right after '=': e.g.
+    #   %ag = bf16[16,1024]{1,0} all-gather(...)
+    #   %ar = (f32[8,128], f32[8,128]) all-reduce(...)
+    rhs = lhs[1].strip()
+    if rhs.startswith("("):
+        inner = rhs[1:rhs.index(")")]
+        return sum(_shape_bytes(s) for s in inner.split(","))
+    return _shape_bytes(rhs)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from HLO text (result shapes --
+    the data volume leaving each collective)."""
+    stats: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    n_while = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        if re.search(r"\bwhile\(", s):
+            n_while += 1
+            continue
+        for kind in _COLLECTIVES:
+            # match op name: "kind(" or "kind-start("
+            if re.search(rf"\b{kind}(-start)?\(", s):
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _result_bytes(s)
+                break
+    stats["_while_loops"] = {"count": n_while, "bytes": 0.0}
+    return stats
+
+
+def total_collective_bytes(stats: Dict) -> float:
+    return sum(v["bytes"] for k, v in stats.items()
+               if not k.startswith("_"))
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             coll_bytes_per_device: float, n_chips: int,
+             model_flops_global: float) -> Dict[str, float]:
+    """The three roofline terms in seconds (per-device quantities in,
+    which already embody the 1/chips division of the spec formulas)."""
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = coll_bytes_per_device / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_collective, "collective"))[1]
+    hlo_flops_global = flops_per_device * n_chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_step_time_s": max(t_compute, t_memory, t_collective),
+        "model_flops": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": (model_flops_global / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "roofline_fraction": (
+            t_compute / max(t_compute, t_memory, t_collective)
+            if max(t_compute, t_memory, t_collective) > 0 else 0.0),
+    }

@@ -1,0 +1,90 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from the JSON
+results.  ``python -m repro.launch.report [results/dryrun]``"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname, mesh, policy="transprecision", tag=None):
+    cells = {}
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh or d.get("policy") != policy:
+            continue
+        if (d.get("tag") or None) != tag:
+            continue
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.1f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b/1e3:.0f}K"
+
+
+def roofline_table(cells) -> str:
+    hdr = ("| arch | shape | kind | t_compute | t_memory | t_collective | "
+           "dominant | MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for (arch, shape), d in sorted(cells.items()):
+        if d["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | *skipped:"
+                        f" sub-quadratic attention required* | — | — |")
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {d['kind']} | {r['t_compute_s']:.4g} s | "
+            f"{r['t_memory_s']:.4g} s | {r['t_collective_s']:.4g} s | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.3f} | "
+            f"{100*r['roofline_fraction']:.1f}% |")
+    return hdr + "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    hdr = ("| arch | shape | flops/dev | bytes/dev | coll bytes/dev | "
+           "AG / AR / RS / A2A / CP | compile |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for (arch, shape), d in sorted(cells.items()):
+        if d["status"] != "ok":
+            continue
+        c = d["collectives"]
+        kinds = "/".join(str(int(c[k]["count"])) for k in
+                         ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {arch} | {shape} | {d['flops_per_device']:.3g} | "
+            f"{fmt_bytes(d['bytes_per_device'])} | "
+            f"{fmt_bytes(d['collective_bytes_per_device'])} | {kinds} | "
+            f"{d['compile_s']:.0f}s |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for mesh in ("single", "multi"):
+        cells = load(dirname, mesh)
+        if not cells:
+            continue
+        n_ok = sum(1 for d in cells.values() if d["status"] == "ok")
+        print(f"\n### {mesh} mesh ({n_ok} ok / {len(cells)} cells)\n")
+        print(roofline_table(cells))
+        print()
+        print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

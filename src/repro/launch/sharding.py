@@ -1,0 +1,137 @@
+"""Sharding rules: logical roles -> PartitionSpec on the production mesh.
+
+MaxText/t5x-style: a table of (path-keyword, dim-preference) rules, applied
+with divisibility checks and replicate fallback so every assigned arch
+(6-head whisper, 10-head recurrentgemma, 49155-vocab granite, ...) gets a
+valid sharding on a 16-wide model axis.  Megatron pairing: column-parallel
+in-projections, row-parallel out-projections => one all-reduce per block.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for a parameter identified by its flattened path."""
+    m = mesh.shape["model"]
+    path = path.lower()
+    nd = len(shape)
+
+    def col(last_first=True):
+        """shard the output (last) dim, else the input dim, else replicate."""
+        dims = [None] * nd
+        order = [nd - 1, 0] if last_first else [0, nd - 1]
+        for d in order:
+            if _div(shape[d], m):
+                dims[d] = "model"
+                return P(*dims)
+        return P(*dims)
+
+    if nd <= 1 or "norm" in path or "ln_" in path or "|mu" in path \
+            or "lam" in path or "conv" in path or "b_" in path \
+            or "w0" in path or "|u" in path or "cm_mu" in path:
+        # small/1D: shard only if it's a wide vector divisible by m
+        if nd == 1 and shape[0] >= 4096 and _div(shape[0], m):
+            return P("model")
+        return P(*([None] * nd))
+
+    if "router" in path:
+        return P(*([None] * nd))  # tiny, routing-critical: replicate
+
+    if "embed" in path:
+        # (vocab, d): prefer vocab sharding (gather stays local-ish; logits
+        # matmul becomes column-parallel when tied)
+        if _div(shape[0], m):
+            return P("model", None)
+        if _div(shape[1], m):
+            return P(None, "model")
+        return P(None, None)
+
+    if "head" in path:  # (d, vocab) -> column-parallel over vocab
+        if _div(shape[1], m):
+            return P(None, "model")
+        if _div(shape[0], m):
+            return P("model", None)
+        return P(None, None)
+
+    if nd == 3:  # MoE experts (E, d, ff) / (E, ff, d): expert-parallel
+        if _div(shape[0], m):
+            return P("model", None, None)
+        return P(*([None] * nd))
+
+    # row-parallel out-projections (match the column-parallel producers)
+    if any(k in path for k in ("wo", "w_out", "cm_v")):
+        return col(last_first=False)
+
+    # column-parallel in-projections: wq/wk/wv/wg, ffn w_in/w_gate, rwkv
+    # r/k/v/g, rglru branch/gate, cm_k, cm_r, rec/in gates
+    return col(last_first=True)
+
+
+def batch_spec(batch_size: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over as many DP axes as divide it."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if _div(batch_size, prod * mesh.shape[a]):
+            axes.append(a)
+            prod *= mesh.shape[a]
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * extra_dims))
+
+
+def tree_param_shardings(params, mesh: Mesh):
+    """NamedSharding pytree matching ``params`` structure."""
+    def one(path, leaf):
+        key = "|".join(_pstr(p) for p in path)
+        return NamedSharding(mesh, param_spec(key, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def tree_state_shardings(state, mesh: Mesh, batch_size: int):
+    """Shardings for decode states / KV caches: batch over DP axes; the
+    heads-or-head_dim axis over model when divisible."""
+    m = mesh.shape["model"]
+    bspec = batch_spec(batch_size, mesh, extra_dims=0)
+    blead = bspec[0] if len(bspec) else None
+
+    def one(path, leaf):
+        shape = leaf.shape
+        dims: list = [None] * len(shape)
+        if len(shape) and shape[0] == batch_size:
+            dims[0] = blead
+        # shard the largest non-batch dim divisible by m (kv heads, head_dim,
+        # rglru width, rwkv dh)
+        cands = sorted(range(1, len(shape)), key=lambda d: -shape[d])
+        for d in cands:
+            if _div(shape[d], m) and shape[d] >= m:
+                dims[d] = "model"
+                break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _pstr(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)

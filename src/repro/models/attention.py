@@ -1,0 +1,271 @@
+"""Grouped-query attention with transprecision KV caches.
+
+Paths:
+  * full       -- training / short prefill: materialized (B, H, S, S) scores
+                  (per-layer remat bounds the live buffer).
+  * chunked    -- long prefill: Python-unrolled q-chunks, each attending the
+                  causal KV prefix; score memory is O(chunk * S) and the HLO
+                  stays loop-free (exact cost_analysis; see DESIGN.md).
+  * decode     -- one token against a cached KV of length S_max.
+
+The KV cache is stored in the policy's ``kv_cache`` format (binary8/e5m2 by
+default policy => 4x less HBM per token than f32, the paper's
+memory-access reduction applied to serving).  Sliding-window archs keep a
+ring buffer of ``window`` entries.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from .layers import act_cast, dense_init, pdot, peinsum, rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, dh) in kv_cache dtype
+    v: jax.Array
+    pos: jax.Array  # () int32 -- next write position (monotonic)
+
+    @property
+    def capacity(self):
+        return self.k.shape[1]
+
+
+def attn_init(key, cfg, dtype, cross: bool = False):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), dtype=dtype),
+    }
+
+
+def init_cache(cfg, batch, length, policy: PrecisionPolicy,
+               layer_kinds=None) -> list:
+    """Per-layer KV caches (attention layers only; None elsewhere)."""
+    kinds = layer_kinds if layer_kinds is not None else cfg.attn_pattern
+    dt = policy.dtype("kv_cache")
+    caches = []
+    for kind in kinds:
+        if kind != "attn":
+            caches.append(None)
+            continue
+        cap = length if cfg.window is None else min(length, cfg.window)
+        z = jnp.zeros((batch, cap, cfg.n_kv, cfg.head_dim), dt)
+        caches.append(KVCache(k=z, v=z, pos=jnp.zeros((), jnp.int32)))
+    return caches
+
+
+def _split_heads(x, n, dh):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, dh)
+
+
+def _gqa_scores(q, k, policy):
+    """q: (B, Sq, n_kv, G, dh); k: (B, Skv, n_kv, dh) -> (B, n_kv, G, Sq, Skv)
+    f32 accumulation."""
+    return peinsum("bqhgd,bkhd->bhgqk", q, k, policy, "attn_w", out_act=False)
+
+
+def _softmax_weighted(scores_f32, v, policy):
+    """softmax in f32 (range-critical), probs re-cast to attn_probs format,
+    then prob @ v with f32 accumulation."""
+    probs = jax.nn.softmax(scores_f32, axis=-1)
+    probs = act_cast(probs, policy, "attn_probs")
+    out = peinsum("bhgqk,bkhd->bqhgd", probs, v, policy, "attn_w")
+    return out
+
+
+def _causal_mask(sq, skv, q_offset, window: Optional[int]):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(skv)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m  # (sq, skv) bool
+
+
+def mha(p, x, cfg, policy: PrecisionPolicy, *,
+        positions=None, causal: bool = True,
+        prefix_len: int = 0,
+        cache: Optional[KVCache] = None,
+        kv_source=None,
+        chunk: Optional[int] = None):
+    """General attention entry point.
+
+    kv_source: cross-attention source sequence (enc-dec); disables causal.
+    prefix_len: bidirectional prefix (prefix-LM / VLM).
+    cache: decode mode -- x is (B, 1, d), cache is updated and returned.
+    chunk: q-chunked long prefill.
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    n_kv, dh = cfg.n_kv, cfg.head_dim
+    G = cfg.n_heads // n_kv
+
+    q = _split_heads(pdot(x, p["wq"], policy, "attn_w"), cfg.n_heads, dh)
+    if kv_source is None:
+        k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), n_kv, dh)
+        v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), n_kv, dh)
+    else:
+        k = _split_heads(pdot(kv_source, p["wk"], policy, "attn_w"), n_kv, dh)
+        v = _split_heads(pdot(kv_source, p["wv"], policy, "attn_w"), n_kv, dh)
+        causal = False
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+        if cache is not None:
+            positions = positions + cache.pos
+    if kv_source is None and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(k.shape[1])[None, :] +
+                 (cache.pos if cache is not None else 0), cfg.rope_theta)
+
+    scale = np.float32(1.0 / np.sqrt(dh))
+    qg = q.reshape(B, S, n_kv, G, dh)
+
+    new_cache = None
+    if cache is not None:
+        # ---- decode: append k/v then attend over the cache ----------------
+        kq = k.astype(cache.k.dtype)
+        vq = v.astype(cache.v.dtype)
+        if cfg.window is not None and cache.capacity == cfg.window:
+            slot = jnp.mod(cache.pos, cache.capacity)
+        else:
+            slot = jnp.minimum(cache.pos, cache.capacity - 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
+        new_cache = KVCache(k=ck, v=cv, pos=cache.pos + S)
+        # valid positions: slot index occupied (pos' = pos + S)
+        idx = jnp.arange(cache.capacity)
+        if cfg.window is not None and cache.capacity == cfg.window:
+            valid = idx < jnp.minimum(cache.pos + S, cache.capacity)
+        else:
+            valid = idx < (cache.pos + S)
+        mesh = jax.sharding.get_abstract_mesh()
+        if (getattr(cfg, "decode_impl", "xla") == "flash_shmap"
+                and mesh is not None and "model" in (mesh.axis_names or ())
+                and cache.capacity % mesh.shape["model"] == 0):
+            out = _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy)
+        else:
+            if policy.mode == "native" and ck.dtype != jnp.float32:
+                # dequantize straight to the compute dtype: one fusable cast
+                # instead of the f8 -> f32 -> act-format double
+                # materialization (EXPERIMENTS.md Perf #3, iteration 2).
+                # e5m2 -> bf16 is exact (2-bit significand subset), and the
+                # dot still accumulates in f32.
+                kk = ck.astype(jnp.bfloat16)
+                vv = cv.astype(jnp.bfloat16)
+            else:
+                kk = act_cast(ck.astype(jnp.float32), policy)
+                vv = act_cast(cv.astype(jnp.float32), policy)
+            scores = _gqa_scores(qg, kk, policy).astype(jnp.float32) * scale
+            scores = jnp.where(valid[None, None, None, None, :], scores,
+                               NEG_INF)
+            out = _softmax_weighted(scores, vv, policy)
+    elif chunk is not None and S > chunk and causal:
+        # ---- unrolled q-chunked causal prefill -----------------------------
+        n_chunks = (S + chunk - 1) // chunk
+        outs = []
+        for ci in range(n_chunks):
+            lo, hi = ci * chunk, min((ci + 1) * chunk, S)
+            kv_hi = hi if prefix_len <= hi else max(hi, prefix_len)
+            qs = jax.lax.slice_in_dim(qg, lo, hi, axis=1)
+            ks = jax.lax.slice_in_dim(k, 0, kv_hi, axis=1)
+            vs = jax.lax.slice_in_dim(v, 0, kv_hi, axis=1)
+            scores = _gqa_scores(qs, ks, policy).astype(jnp.float32) * scale
+            m = _causal_mask(hi - lo, kv_hi, lo, cfg.window)
+            if prefix_len:
+                pm = (jnp.arange(kv_hi)[None, :] < prefix_len)
+                m = m | pm
+            scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
+            outs.append(_softmax_weighted(scores, vs, policy))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        # ---- full attention -------------------------------------------------
+        scores = _gqa_scores(qg, k, policy).astype(jnp.float32) * scale
+        if causal:
+            m = _causal_mask(S, k.shape[1], 0, cfg.window)
+            if prefix_len:
+                m = m | (jnp.arange(k.shape[1])[None, :] < prefix_len)
+            scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
+        out = _softmax_weighted(scores, v, policy)
+
+    out = out.reshape(B, S, cfg.q_dim)
+    return pdot(out, p["wo"], policy, "attn_w"), new_cache
+
+
+def _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy):
+    """Distributed flash-decode (EXPERIMENTS.md Perf #3).
+
+    Hypothesis (from the baseline roofline): with the KV cache sequence-
+    sharded over "model", GSPMD all-gathers the whole cache to every device
+    before the softmax => decode reads n_model x its shard bytes.  Computing
+    the online-softmax partials (running max / sum / weighted-V) per shard
+    and combining with three tiny psums makes each device read only its own
+    1/n_model of the cache -- exact softmax attention, flash-decode style.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    B = qg.shape[0]
+    bspec = dp if B % max(
+        int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 else None
+
+    def local(q_blk, k_blk, v_blk, valid_blk):
+        # q_blk: (B_loc, 1, n_kv, G, dh); k/v_blk: (B_loc, S_loc, n_kv, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid_blk[None, None, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)                          # (B,h,g,1)
+        gm = jax.lax.pmax(m, "model")
+        e = jnp.exp(s - gm[..., None])
+        denom = jax.lax.psum(jnp.sum(e, axis=-1), "model")
+        wv = jnp.einsum("bhgqk,bkhd->bqhgd", e, v_blk.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        wv = jax.lax.psum(wv, "model")
+        out = wv / jnp.transpose(denom, (0, 3, 1, 2))[..., None]
+        return out
+
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P("model")),
+        out_specs=P(bspec, None, None, None, None),
+    )(qg, ck, cv, valid)
+    return act_cast(out, policy)
+
+
+def prefill_to_cache(p, x, cfg, policy, capacity: int, positions=None,
+                     prefix_len: int = 0, chunk=None):
+    """Run prefill attention AND produce the populated cache for decode."""
+    B, S, _ = x.shape
+    out, _ = mha(p, x, cfg, policy, positions=positions, causal=True,
+                 prefix_len=prefix_len, chunk=chunk)
+    k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), cfg.n_kv,
+                     cfg.head_dim)
+    v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), cfg.n_kv,
+                     cfg.head_dim)
+    if cfg.rope_theta > 0:
+        k = rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
+    dt = policy.dtype("kv_cache")
+    cap = capacity if cfg.window is None else min(capacity, cfg.window)
+    ck = jnp.zeros((B, cap, cfg.n_kv, cfg.head_dim), dt)
+    cv = jnp.zeros_like(ck)
+    take = min(S, cap)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        ck, k[:, S - take:].astype(dt), 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cv, v[:, S - take:].astype(dt), 0, axis=1)
+    return out, KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32))

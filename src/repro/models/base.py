@@ -1,0 +1,141 @@
+"""Model substrate: configuration dataclass shared by all 10 architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes any member of the supported families.
+
+    family: "dense" | "moe" | "ssm" (rwkv6) | "hybrid" (rg-lru+local attn) |
+            "vlm" (prefix-LM over stub patch embeddings) |
+            "audio" (enc-dec over stub frame embeddings)
+    """
+
+    arch: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    capacity_factor: float = 1.25
+
+    # attention details
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None          # sliding-window size (local attn)
+    attn_pattern: Tuple[str, ...] = ()    # per-layer kind; default all "attn"
+    use_bias: bool = False
+    norm: str = "rmsnorm"                 # "rmsnorm" | "layernorm"
+    act_fn: str = "silu"                  # ffn nonlinearity
+    gated_ffn: bool = True                # SwiGLU/GeGLU style
+    tied_embeddings: bool = False
+    embed_scale: bool = False             # gemma-style sqrt(d) embed scaling
+
+    # ssm (rwkv6)
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 128
+    rwkv_fused: int = 0                   # fuse token-shift projections
+
+    # hybrid (recurrentgemma)
+    rglru_width: Optional[int] = None     # recurrent branch width (d_model)
+    conv_width: int = 4
+
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_len: int = 1500               # stub frame-embedding count
+
+    # vlm
+    prefix_len: int = 0                   # stub patch-embedding count
+
+    # execution knobs
+    moe_impl: str = "dense"               # "dense" | "shard_map" (EP)
+    decode_impl: str = "xla"              # "xla" | "flash_shmap"
+    attn_chunk: int = 4096                # q-chunk for long prefill
+    loss_chunks: int = 4                  # chunked cross-entropy
+    remat: bool = True
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+        if not self.attn_pattern:
+            if self.family == "ssm":
+                pat = ("rwkv",) * self.n_layers
+            elif self.family == "hybrid":
+                # recurrentgemma: 2 recurrent blocks then 1 local-attention
+                pat = tuple("attn" if (i % 3) == 2 else "rglru"
+                            for i in range(self.n_layers))
+            else:
+                pat = ("attn",) * self.n_layers
+            object.__setattr__(self, "attn_pattern", pat)
+        if self.rglru_width is None and self.family == "hybrid":
+            object.__setattr__(self, "rglru_width", self.d_model)
+
+    # ---- derived sizes ------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv * self.head_dim
+
+    def param_count(self) -> int:
+        """Exact parameter count (cross-checked against init in tests)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        nrm = d if self.norm == "rmsnorm" else 2 * d  # gamma (+beta)
+        attn_p = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.gated_ffn:
+            ffn_p = 2 * d * ff + ff * d
+        else:
+            ffn_p = 2 * d * ff + (ff + d if self.use_bias else 0)
+        n = v * d  # embedding
+        if not self.tied_embeddings:
+            n += v * d
+        for kind in self.attn_pattern:
+            n += 2 * nrm  # norm1 + norm2
+            if kind == "attn":
+                n += attn_p
+            elif kind == "rwkv":
+                # time-mix: 5 square proj + mu(5d) + w0/u (2d) + rank-64
+                # decay lora (128d) + per-head groupnorm (2d)
+                n += 5 * d * d + 137 * d
+                # channel-mix: cm_mu(2d) + k/v (2*d*ff) + receptance (d^2)
+                n += 2 * d + 2 * d * ff + d * d
+            elif kind == "rglru":
+                w = self.rglru_width
+                n += 2 * d * w + w * d            # branch, gate, out
+                n += w * self.conv_width + w      # conv + bias
+                n += 2 * w * w + w                # rec/in gates + lambda
+            if kind != "rwkv":
+                if self.moe_experts:
+                    n += d * self.moe_experts  # router
+                    n += self.moe_experts * ((2 * d * ff + ff * d)
+                                             if self.gated_ffn
+                                             else 2 * d * ff)
+                else:
+                    n += ffn_p
+        n += nrm  # final norm
+        if self.encoder_layers:
+            per = attn_p + 2 * nrm + ffn_p
+            n += self.encoder_layers * per          # encoder blocks
+            n += len(self.attn_pattern) * (attn_p + nrm)  # cross-attn
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        per_expert = (2 * d * ff + ff * d) if self.gated_ffn else 2 * d * ff
+        inactive = (self.moe_experts - self.moe_topk) * per_expert
+        return self.param_count() - self.n_layers * inactive

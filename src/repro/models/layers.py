@@ -1,0 +1,212 @@
+"""Policy-aware neural-net primitives shared by all architectures.
+
+Every parameter-consuming op routes through :func:`pdot`, which implements
+the transprecision contract: operands in their assigned storage formats,
+accumulation in f32 (the MXU/FlexFloat "compute wide" rule), results
+re-sanitized (emulated mode) or kept in the activation dtype (native mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexfloat import quantize
+from repro.core.policy import PrecisionPolicy
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# transprecision matmul / elementwise helpers
+# ---------------------------------------------------------------------------
+
+def pdot(x, w, policy: PrecisionPolicy, role: str, *, out_act: bool = True):
+    """x @ w with the transprecision contract for weight-role ``role``."""
+    if policy.mode == "native":
+        # narrow operands, f32 accumulation, result back in activation dtype
+        cd = jnp.bfloat16
+        if w.dtype == jnp.float32 and x.dtype == jnp.float32:
+            cd = jnp.float32
+        y = jnp.dot(x.astype(cd), w.astype(cd),
+                    preferred_element_type=jnp.float32)
+        return y.astype(policy.dtype("act")) if out_act else y
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return quantize(y, policy.fmt("act")) if out_act else y
+
+
+def peinsum(expr, a, b, policy: PrecisionPolicy, role: str, *,
+            out_act: bool = True):
+    if policy.mode == "native":
+        cd = jnp.bfloat16
+        if a.dtype == jnp.float32 and b.dtype == jnp.float32:
+            cd = jnp.float32
+        y = jnp.einsum(expr, a.astype(cd), b.astype(cd),
+                       preferred_element_type=jnp.float32)
+        return y.astype(policy.dtype("act")) if out_act else y
+    y = jnp.einsum(expr, a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return quantize(y, policy.fmt("act")) if out_act else y
+
+
+def act_cast(x, policy: PrecisionPolicy, role: str = "act"):
+    if policy.mode == "native":
+        return x.astype(policy.dtype(role))
+    return quantize(x, policy.fmt(role))
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in f32 regardless of policy -- range-critical accumulations,
+# exactly the variables the paper's tuner pins at binary32)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, policy, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = y * (1.0 + gamma.astype(jnp.float32))
+    return act_cast(y, policy)
+
+
+def layernorm(x, gamma, beta, policy, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return act_cast(y, policy)
+
+
+def apply_norm(x, p, policy, kind):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["gamma"], policy)
+    return layernorm(x, p["gamma"], p["beta"], policy)
+
+
+def norm_init(d, kind):
+    if kind == "rmsnorm":
+        return {"gamma": jnp.zeros((d,), jnp.float32)}
+    return {"gamma": jnp.ones((d,), jnp.float32),
+            "beta": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (f32 math)
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = np.exp(-np.log(theta) * np.arange(half) / half)  # (half,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]  # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward (dense)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d, ff, gated, use_bias, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, ff), dtype=dtype),
+         "w_out": dense_init(ks[1], (ff, d), dtype=dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype=dtype)
+    if use_bias:
+        p["b_in"] = jnp.zeros((ff,), dtype)
+        p["b_out"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _nonlin(x, name):
+    x = x.astype(jnp.float32)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def ffn_apply(p, x, policy, cfg):
+    h = pdot(x, p["w_in"], policy, "ffn_w", out_act=False)
+    if "b_in" in p:
+        h = h + p["b_in"].astype(jnp.float32)
+    a = _nonlin(h, cfg.act_fn)
+    if "w_gate" in p:
+        g = pdot(x, p["w_gate"], policy, "ffn_w", out_act=False)
+        a = a * g
+    a = act_cast(a, policy)
+    y = pdot(a, p["w_out"], policy, "ffn_w")
+    if "b_out" in p:
+        y = act_cast(y.astype(jnp.float32) + p["b_out"].astype(jnp.float32),
+                     policy)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# embedding + LM head (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, tokens, policy, scale=False):
+    e = jnp.take(table, tokens, axis=0)
+    e = e.astype(policy.dtype("act") if policy.mode == "native"
+                 else jnp.float32)
+    if scale:
+        e = e * np.sqrt(table.shape[1]).astype(np.float32)
+    return act_cast(e, policy) if policy.mode == "emulated" else e
+
+
+def lm_head_loss(x, head_w, labels, policy, n_chunks: int = 4,
+                 label_mask=None):
+    """Mean cross-entropy, computed over sequence chunks so the (B, S, V)
+    logits tensor is never materialized whole (V up to 257k here)."""
+    B, S, D = x.shape
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    C = S // n_chunks
+    total = jnp.zeros((), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        xs = jax.lax.slice_in_dim(x, i * C, (i + 1) * C, axis=1)
+        ls = jax.lax.slice_in_dim(labels, i * C, (i + 1) * C, axis=1)
+        logits = pdot(xs, head_w, policy, "embed_w", out_act=False)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = lse - picked
+        if label_mask is not None:
+            ms = jax.lax.slice_in_dim(label_mask, i * C, (i + 1) * C, axis=1)
+            nll = nll * ms
+            count = count + jnp.sum(ms)
+        else:
+            count = count + np.float32(B * C)
+        total = total + jnp.sum(nll)
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_logits(x, head_w, policy):
+    y = pdot(x, head_w, policy, "embed_w", out_act=False)
+    if policy.mode == "emulated":
+        return quantize(y, policy.fmt("logits"))
+    return y.astype(policy.dtype("logits"))

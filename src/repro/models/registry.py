@@ -1,0 +1,17 @@
+"""Arch registry: ``--arch <id>`` -> (Model, ModelConfig)."""
+from __future__ import annotations
+
+from repro import configs
+from .base import ModelConfig
+from .transformer import Model
+
+ARCHS = configs.ARCHS
+
+
+def build(arch_id: str, reduced: bool = False):
+    cfg = configs.get(arch_id, reduced=reduced)
+    return Model(cfg), cfg
+
+
+def build_from_config(cfg: ModelConfig):
+    return Model(cfg)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin hybrid family).
+
+The recurrent branch is: linear -> causal depthwise conv1d (width 4) ->
+RG-LRU (gated diagonal linear recurrence), gated by a parallel GeLU branch.
+The diagonal recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is computed with ``lax.associative_scan`` over time (loop-free HLO, log
+depth -- also the right TPU formulation).  Decode carries (conv window,
+h state): O(1) per token, so the hybrid arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from .layers import act_cast, dense_init, pdot
+
+
+class RglruState(NamedTuple):
+    h: jax.Array        # (B, W) recurrence state
+    conv: jax.Array     # (B, conv_width-1, W) conv history
+
+
+_C_SCALE = 8.0  # "c" constant from the RecurrentGemma paper
+
+
+def rglru_init(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_branch": dense_init(ks[0], (d, w), dtype=dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype=dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), scale=0.5,
+                             dtype=jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_rec_gate": dense_init(ks[3], (w, w), dtype=dtype),
+        "w_in_gate": dense_init(ks[4], (w, w), dtype=dtype),
+        "lam": jax.random.uniform(ks[5], (w,), jnp.float32, 1.0, 8.0),
+        "w_out": dense_init(ks[6], (w, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, history=None):
+    """depthwise causal conv; x: (B, S, W), w: (K, W)."""
+    K = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1).astype(jnp.float32)
+    out = jnp.zeros(x.shape[:2] + (x.shape[2],), jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out + b[None, None, :]
+
+
+def rglru_block(p, x, cfg, policy: PrecisionPolicy, state=None):
+    """x: (B, S, d) -> (out, new_state)."""
+    B, S, d = x.shape
+    gate = jax.nn.gelu(pdot(x, p["w_gate"], policy, "ffn_w",
+                            out_act=False).astype(jnp.float32))
+    br_pre = pdot(x, p["w_branch"], policy, "ffn_w")
+    hist = state.conv if state is not None else None
+    br = _causal_conv(br_pre, p["conv_w"], p["conv_b"], history=hist)
+    br = act_cast(br, policy)
+
+    # RG-LRU gates (f32 -- range-critical, paper pins accumulators wide)
+    r = jax.nn.sigmoid(pdot(br, p["w_rec_gate"], policy, "attn_w",
+                            out_act=False).astype(jnp.float32))
+    i = jax.nn.sigmoid(pdot(br, p["w_in_gate"], policy, "attn_w",
+                            out_act=False).astype(jnp.float32))
+    log_a = -_C_SCALE * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated_x = beta * (i * br.astype(jnp.float32))
+
+    if S == 1 and state is not None:
+        h = a[:, 0] * state.h.astype(jnp.float32) + gated_x[:, 0]
+        hs = h[:, None, :]
+    else:
+        def comb(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        h0 = (state.h.astype(jnp.float32) if state is not None
+              else jnp.zeros((B, br.shape[-1]), jnp.float32))
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, gated_x), axis=1)
+        hs = b_sc + a_sc * h0[:, None, :]
+        h = hs[:, -1]
+
+    y = act_cast(hs * gate, policy)
+    out = pdot(y, p["w_out"], policy, "ffn_w")
+
+    new_state = None
+    if state is not None:
+        K = cfg.conv_width
+        conv_hist = jnp.concatenate([state.conv.astype(br_pre.dtype),
+                                     br_pre], axis=1)[:, -(K - 1):, :]
+        new_state = RglruState(h=h.astype(state.h.dtype),
+                               conv=conv_hist.astype(state.conv.dtype))
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch, policy) -> RglruState:
+    dt = policy.dtype("kv_cache")
+    return RglruState(
+        h=jnp.zeros((batch, cfg.rglru_width), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.rglru_width), dt))

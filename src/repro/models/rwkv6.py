@@ -1,0 +1,269 @@
+"""RWKV6 "Finch" time-mix / channel-mix blocks (attention-free SSM family).
+
+Training/prefill uses the chunked-parallel form: within-chunk interactions
+are dense einsums (vmapped over chunks -- no sequential loop), cross-chunk
+state propagates through ``lax.associative_scan`` (log-depth, loop-free HLO,
+exact cost_analysis).  Decode keeps the O(1) recurrent state (B, H, dk, dv)
+per layer -- this is why rwkv6 runs the ``long_500k`` cell that quadratic
+attention archs must skip.
+
+Numerical-stability invariants (all per-channel, data-dependent decay):
+  * within a chunk, every exp() argument is <= 0 (decay ratios), so no
+    overflow; cross-chunk factors are likewise products of per-step decays.
+  * the (t, i, d) decay tensor is formed only inside an exp->mul->reduce
+    fusion; XLA never materializes it.
+Faithfulness note: the 5-way dynamic token-shift LoRA of full Finch is
+reduced to static per-projection mixing + data-dependent decay LoRA (the
+format-system contribution of this repo is orthogonal to that detail); see
+DESIGN.md assumptions log.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from .layers import act_cast, dense_init, pdot
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (B, H, dk, dv) wkv state
+    x_prev_tm: jax.Array  # (B, d) token-shift state, time-mix
+    x_prev_cm: jax.Array  # (B, d) token-shift state, channel-mix
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    rank = 64
+    if getattr(cfg, "rwkv_fused", False):
+        # EXPERIMENTS.md Perf #2: the five token-shift projections
+        # (r,k,v,g + decay-lora-in) collapse into two wide matmuls via
+        #   y_i = x @ W_i + (x_prev - x) @ (m_i * W_i)
+        # => per layer the backward activation-gradient reduction count
+        # drops from 5 to 2 (and channel-mix 2 -> 1).
+        return {
+            "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+            "wrkvg": dense_init(ks[1], (d, 4 * d + rank), dtype=dtype),
+            "wo": dense_init(ks[5], (d, d), dtype=dtype),
+            "w0": jnp.full((d,), -2.0, jnp.float32),
+            "wd2": dense_init(ks[7], (rank, d), scale=0.1,
+                              dtype=jnp.float32),
+            "u": jax.random.normal(ks[8], (d,), jnp.float32) * 0.1,
+            "ln_g": jnp.ones((H, cfg.rwkv_head_dim), jnp.float32),
+            "ln_b": jnp.zeros((H, cfg.rwkv_head_dim), jnp.float32),
+            "cm_mu": jax.random.uniform(ks[9], (2, d), jnp.float32),
+            "cm_kr": dense_init(ks[10], (d, cfg.d_ff + d), dtype=dtype),
+            "cm_v": dense_init(ks[11], (cfg.d_ff, d), dtype=dtype),
+        }
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # r,k,v,g,w mix
+        "wr": dense_init(ks[1], (d, d), dtype=dtype),
+        "wk": dense_init(ks[2], (d, d), dtype=dtype),
+        "wv": dense_init(ks[3], (d, d), dtype=dtype),
+        "wg": dense_init(ks[4], (d, d), dtype=dtype),
+        "wo": dense_init(ks[5], (d, d), dtype=dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),   # decay base
+        "wd1": dense_init(ks[6], (d, rank), dtype=jnp.float32),
+        "wd2": dense_init(ks[7], (rank, d), scale=0.1, dtype=jnp.float32),
+        "u": jax.random.normal(ks[8], (d,), jnp.float32) * 0.1,  # bonus
+        "ln_g": jnp.ones((H, cfg.rwkv_head_dim), jnp.float32),   # group norm
+        "ln_b": jnp.zeros((H, cfg.rwkv_head_dim), jnp.float32),
+        # channel mix
+        "cm_mu": jax.random.uniform(ks[9], (2, d), jnp.float32),
+        "cm_k": dense_init(ks[10], (d, cfg.d_ff), dtype=dtype),
+        "cm_v": dense_init(ks[11], (cfg.d_ff, d), dtype=dtype),
+        "cm_r": dense_init(jax.random.fold_in(key, 99), (d, d), dtype=dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """token shift: returns x_{t-1} sequence given chunk + carried state."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay_log(p, xw):
+    """per-channel log-decay in (-inf, 0): -exp(w0 + lora(x))."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["wd1"]) @ p["wd2"]
+    return -jnp.exp(p["w0"] + lora)
+
+
+def _group_norm(x, g, b, eps=1e-5):
+    """x: (..., H, dh) normalized per head."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (xf - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def time_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
+    """x: (B, S, d).  Returns (out, new_state) -- state only when given
+    (decode) or S % chunk == 0 (prefill-to-cache)."""
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    x_prev = (state.x_prev_tm if state is not None
+              else jnp.zeros((B, d), x.dtype))
+    xx = _shift(x, x_prev)
+    mu = p["mu"]
+
+    def mixed(i):
+        m = mu[i][None, None, :]
+        return act_cast(x.astype(jnp.float32) * (1 - m)
+                        + xx.astype(jnp.float32) * m, policy)
+
+    if "wrkvg" in p:
+        # fused path: y_i = x @ W_i + (xx - x) @ (m_i * W_i)
+        dxx = act_cast(xx.astype(jnp.float32) - x.astype(jnp.float32),
+                       policy)
+        rank = p["wrkvg"].shape[1] - 4 * d
+        mcat = jnp.concatenate(
+            [jnp.broadcast_to(mu[i][:, None], (d, d)) for i in range(4)]
+            + [jnp.broadcast_to(mu[4][:, None], (d, rank))], axis=1)
+        wm = (p["wrkvg"].astype(jnp.float32) * mcat).astype(p["wrkvg"].dtype)
+        y = (pdot(x, p["wrkvg"], policy, "attn_w", out_act=False)
+             + pdot(dxx, wm, policy, "attn_w", out_act=False))
+        r = act_cast(y[..., :d], policy)
+        k = act_cast(y[..., d:2 * d], policy)
+        v = act_cast(y[..., 2 * d:3 * d], policy)
+        g = jax.nn.silu(y[..., 3 * d:4 * d].astype(jnp.float32))
+        lora = jnp.tanh(y[..., 4 * d:].astype(jnp.float32)) @ p["wd2"]
+        lw = -jnp.exp(p["w0"] + lora)
+    else:
+        r = pdot(mixed(0), p["wr"], policy, "attn_w")
+        k = pdot(mixed(1), p["wk"], policy, "attn_w")
+        v = pdot(mixed(2), p["wv"], policy, "attn_w")
+        g = jax.nn.silu(pdot(mixed(3), p["wg"], policy, "attn_w")
+                        .astype(jnp.float32))
+        lw = _decay_log(p, mixed(4))                   # (B, S, d) <= 0
+
+    rh = r.reshape(B, S, H, dh).astype(jnp.float32)
+    kh = k.reshape(B, S, H, dh).astype(jnp.float32)
+    vh = v.reshape(B, S, H, dh).astype(jnp.float32)
+    lwh = lw.reshape(B, S, H, dh)
+    u = p["u"].reshape(H, dh)
+
+    if S == 1:
+        # ---- recurrent decode step -----------------------------------------
+        s_in = state.s.astype(jnp.float32)
+        kv = kh[:, 0, :, :, None] * vh[:, 0, :, None, :]      # (B,H,dk,dv)
+        o = jnp.einsum("bhk,bhkv->bhv", rh[:, 0],
+                       s_in + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lwh[:, 0])[:, :, :, None] * s_in + kv
+        wkv = o[:, None, :, :]                                # (B,1,H,dv)
+        new_state = RwkvState(s=s_new.astype(state.s.dtype),
+                              x_prev_tm=x[:, -1, :],
+                              x_prev_cm=state.x_prev_cm)
+    else:
+        # ---- chunked parallel form -----------------------------------------
+        C = min(cfg.rwkv_chunk, S)
+        while S % C:
+            C -= 1
+        nc = S // C
+        rc = rh.reshape(B, nc, C, H, dh)
+        kc = kh.reshape(B, nc, C, H, dh)
+        vc = vh.reshape(B, nc, C, H, dh)
+        lc = lwh.reshape(B, nc, C, H, dh)
+        cum = jnp.cumsum(lc, axis=2)                   # inclusive
+        cum_ex = cum - lc                              # exclusive
+        cum_end = cum[:, :, -1]                        # (B,nc,H,dh)
+
+        # intra-chunk: A[t,i] = sum_d r_t k_i exp(cum_ex[t] - cum[i]), i<t
+        expo = (cum_ex[:, :, :, None, :, :] - cum[:, :, None, :, :, :])
+        prod = (jnp.exp(expo) * rc[:, :, :, None, :, :]
+                * kc[:, :, None, :, :, :])
+        A = jnp.sum(prod, axis=-1)                     # (B,nc,C,C,H)
+        ti = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+        A = A * ti[None, None, :, :, None]
+        o_intra = jnp.einsum("bntih,bnihv->bnthv", A, vc)
+        # bonus (current token)
+        bonus = jnp.einsum("bnthd,bnthd->bnth",
+                           rc * u[None, None, None, :, :], kc)
+        o_intra = o_intra + bonus[..., None] * vc
+
+        # cross-chunk state via associative scan
+        k_tail = kc * jnp.exp(cum_end[:, :, None] - cum)   # decays to chunk end
+        contrib = jnp.einsum("bnthk,bnthv->bnhkv", k_tail, vc)
+        a_chunk = jnp.exp(cum_end)                         # (B,nc,H,dk)
+
+        def comb(left, right):
+            a1, s1 = left
+            a2, s2 = right
+            return a1 * a2, a2[..., None] * s1 + s2
+
+        a_sc, s_sc = jax.lax.associative_scan(comb, (a_chunk, contrib),
+                                              axis=1)
+        s0 = (state.s.astype(jnp.float32) if state is not None
+              else jnp.zeros((B, H, dh, dh), jnp.float32))
+        # inclusive -> exclusive (state entering each chunk), fold initial
+        s_in = jnp.concatenate(
+            [s0[:, None], a_sc[:, :-1, ..., None] * s0[:, None]
+             + s_sc[:, :-1]], axis=1)
+        r_tilde = rc * jnp.exp(cum_ex)
+        o_inter = jnp.einsum("bnthk,bnhkv->bnthv", r_tilde, s_in)
+
+        wkv = (o_intra + o_inter).reshape(B, S, H, dh)
+        new_state = None
+        if state is not None:
+            s_fin = a_sc[:, -1][..., None] * s0 + s_sc[:, -1]
+            new_state = RwkvState(s=s_fin.astype(state.s.dtype),
+                                  x_prev_tm=x[:, -1, :],
+                                  x_prev_cm=state.x_prev_cm)
+
+    o = _group_norm(wkv, p["ln_g"], p["ln_b"]).reshape(B, S, d)
+    o = act_cast(o * g, policy)
+    out = pdot(o, p["wo"], policy, "attn_w")
+    return out, new_state
+
+
+def channel_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
+    B, S, d = x.shape
+    x_prev = (state.x_prev_cm if state is not None
+              else jnp.zeros((B, d), x.dtype))
+    xx = _shift(x, x_prev)
+    m = p["cm_mu"]
+    if "cm_kr" in p:
+        ff = p["cm_v"].shape[0]
+        dxx = act_cast(xx.astype(jnp.float32) - x.astype(jnp.float32),
+                       policy)
+        mcat = jnp.concatenate(
+            [jnp.broadcast_to(m[0][:, None], (d, ff)),
+             jnp.broadcast_to(m[1][:, None], (d, d))], axis=1)
+        wm = (p["cm_kr"].astype(jnp.float32) * mcat).astype(p["cm_kr"].dtype)
+        y = (pdot(x, p["cm_kr"], policy, "ffn_w", out_act=False)
+             + pdot(dxx, wm, policy, "ffn_w", out_act=False))
+        kk = jnp.square(jax.nn.relu(y[..., :ff].astype(jnp.float32)))
+        kk = act_cast(kk, policy)
+        vv = pdot(kk, p["cm_v"], policy, "ffn_w")
+        rr = jax.nn.sigmoid(y[..., ff:].astype(jnp.float32))
+    else:
+        xk = act_cast(x.astype(jnp.float32) * (1 - m[0]) +
+                      xx.astype(jnp.float32) * m[0], policy)
+        xr = act_cast(x.astype(jnp.float32) * (1 - m[1]) +
+                      xx.astype(jnp.float32) * m[1], policy)
+        kk = pdot(xk, p["cm_k"], policy, "ffn_w", out_act=False)
+        kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32)))
+        kk = act_cast(kk, policy)
+        vv = pdot(kk, p["cm_v"], policy, "ffn_w")
+        rr = jax.nn.sigmoid(pdot(xr, p["cm_r"], policy, "ffn_w",
+                                 out_act=False).astype(jnp.float32))
+    out = act_cast(rr * vv.astype(jnp.float32), policy)
+    new_state = None
+    if state is not None:
+        new_state = state._replace(x_prev_cm=x[:, -1, :])
+    return out, new_state
+
+
+def rwkv_init_state(cfg, batch, policy) -> RwkvState:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    dt = policy.dtype("kv_cache")
+    adt = policy.dtype("act") if policy.mode == "native" else jnp.float32
+    return RwkvState(s=jnp.zeros((batch, H, dh, dh), dt),
+                     x_prev_tm=jnp.zeros((batch, d), adt),
+                     x_prev_cm=jnp.zeros((batch, d), adt))

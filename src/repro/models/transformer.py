@@ -1,0 +1,278 @@
+"""Model assembly: decoder-only LM, prefix-LM (VLM), and enc-dec (audio),
+with per-layer kinds (attn | rwkv | rglru) from ``cfg.attn_pattern``.
+
+Layers are Python-unrolled (loop-free HLO -- see DESIGN.md) and wrapped in
+``jax.checkpoint`` during training so activation memory stays one-layer deep.
+All parameter/activation tensors follow the :class:`PrecisionPolicy`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .base import ModelConfig
+from .layers import (apply_norm, dense_init, embed_lookup, ffn_apply,
+                     ffn_init, lm_head_loss, lm_logits, norm_init)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init_params(self, rng, policy: PrecisionPolicy) -> Dict[str, Any]:
+        cfg = self.cfg
+        wdt = policy.dtype("attn_w")
+        fdt = policy.dtype("ffn_w")
+        edt = policy.dtype("embed_w")
+        keys = jax.random.split(rng, cfg.n_layers + cfg.encoder_layers + 3)
+        params: Dict[str, Any] = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), scale=1.0,
+                                dtype=edt),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+            "layers": [],
+        }
+        if not cfg.tied_embeddings:
+            params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab),
+                                        dtype=edt)
+        for li, kind in enumerate(cfg.attn_pattern):
+            k = keys[2 + li]
+            ks = jax.random.split(k, 4)
+            layer: Dict[str, Any] = {"norm1": norm_init(cfg.d_model,
+                                                         cfg.norm)}
+            if kind == "attn":
+                layer["mix"] = attn.attn_init(ks[0], cfg, wdt)
+            elif kind == "rwkv":
+                layer["mix"] = rwkv_mod.rwkv_init(ks[0], cfg, wdt)
+            elif kind == "rglru":
+                layer["mix"] = rglru_mod.rglru_init(ks[0], cfg, fdt)
+            else:
+                raise ValueError(kind)
+            if kind != "rwkv":  # rwkv channel-mix lives inside its params
+                layer["norm2"] = norm_init(cfg.d_model, cfg.norm)
+                if cfg.moe_experts:
+                    layer["ffn"] = moe_mod.moe_init(ks[1], cfg, fdt)
+                else:
+                    layer["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                            cfg.gated_ffn, cfg.use_bias, fdt)
+            else:
+                layer["norm2"] = norm_init(cfg.d_model, cfg.norm)
+            if cfg.encoder_layers:  # decoder cross-attention
+                layer["norm_x"] = norm_init(cfg.d_model, cfg.norm)
+                layer["xattn"] = attn.attn_init(ks[2], cfg, wdt)
+            params["layers"].append(layer)
+
+        if cfg.encoder_layers:
+            enc = []
+            for li in range(cfg.encoder_layers):
+                k = keys[2 + cfg.n_layers + li]
+                ks = jax.random.split(k, 2)
+                enc.append({
+                    "norm1": norm_init(cfg.d_model, cfg.norm),
+                    "mix": attn.attn_init(ks[0], cfg, wdt),
+                    "norm2": norm_init(cfg.d_model, cfg.norm),
+                    "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.gated_ffn, cfg.use_bias, fdt),
+                })
+            params["encoder"] = enc
+        return params
+
+    # ------------------------------------------------------------- internals
+    def _encode(self, params, embeds, policy):
+        cfg = self.cfg
+        x = embeds
+        for layer in params["encoder"]:
+            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+            a, _ = attn.mha(layer["mix"], h, cfg, policy, causal=False)
+            x = x + a
+            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            x = x + ffn_apply(layer["ffn"], h, policy, cfg)
+        return x
+
+    def _layer(self, layer, kind, x, policy, *, prefix_len=0, state=None,
+               enc_out=None, chunk=None, positions=None):
+        """One decoder block.  Returns (x, new_state, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+        if kind == "attn":
+            a, new_state = attn.mha(layer["mix"], h, cfg, policy,
+                                    causal=True, prefix_len=prefix_len,
+                                    cache=state, chunk=chunk,
+                                    positions=positions)
+        elif kind == "rwkv":
+            a, new_state = rwkv_mod.time_mix(layer["mix"], h, cfg, policy,
+                                             state=state)
+        else:
+            a, new_state = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
+                                                 state=state)
+        x = x + a
+        if enc_out is not None:
+            h = apply_norm(x, layer["norm_x"], policy, cfg.norm)
+            a, _ = attn.mha(layer["xattn"], h, cfg, policy,
+                            kv_source=enc_out)
+            x = x + a
+        h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+        if kind == "rwkv":
+            f, new_state = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
+                                                state=new_state)
+        elif cfg.moe_experts:
+            f, aux = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+        else:
+            f = ffn_apply(layer["ffn"], h, policy, cfg)
+        return x + f, new_state, aux
+
+    def _backbone(self, params, x, policy, *, prefix_len=0, states=None,
+                  enc_out=None, chunk=None, positions=None, training=False):
+        cfg = self.cfg
+        new_states: List[Any] = []
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for li, layer in enumerate(params["layers"]):
+            st = states[li] if states is not None else None
+            kind = cfg.attn_pattern[li]
+
+            def run(xx, stt, layer=layer, kind=kind):
+                return self._layer(layer, kind, xx, policy,
+                                   prefix_len=prefix_len, state=stt,
+                                   enc_out=enc_out, chunk=chunk,
+                                   positions=positions)
+
+            if training and cfg.remat:
+                run = jax.checkpoint(run)
+            x, ns, aux = run(x, st)
+            new_states.append(ns)
+            aux_total = aux_total + aux
+        x = apply_norm(x, params["final_norm"], policy, cfg.norm)
+        return x, new_states, aux_total
+
+    def _head_w(self, params):
+        if self.cfg.tied_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    # ----------------------------------------------------------------- train
+    def train_loss(self, params, batch, policy: PrecisionPolicy):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        x = embed_lookup(params["embed"], tokens, policy,
+                         scale=cfg.embed_scale)
+        prefix_len = 0
+        label_mask = batch.get("label_mask")
+        enc_out = None
+        if cfg.prefix_len and "prefix_embeds" in batch:
+            pe = batch["prefix_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            prefix_len = pe.shape[1]
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["encoder_embeds"]
+                                   .astype(x.dtype), policy)
+        chunk = cfg.attn_chunk if x.shape[1] > cfg.attn_chunk else None
+        x, _, aux = self._backbone(params, x, policy, prefix_len=prefix_len,
+                                   enc_out=enc_out, chunk=chunk,
+                                   training=True)
+        if prefix_len:
+            x = x[:, prefix_len:]
+        loss = lm_head_loss(x, self._head_w(params), labels, policy,
+                            n_chunks=cfg.loss_chunks, label_mask=label_mask)
+        if cfg.moe_experts:
+            loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+        return loss
+
+    # ----------------------------------------------------------------- serve
+    def init_state(self, batch_size, capacity, policy):
+        cfg = self.cfg
+        states = []
+        for kind in cfg.attn_pattern:
+            if kind == "attn":
+                states.append(attn.init_cache(cfg, batch_size, capacity,
+                                              policy, layer_kinds=("attn",))[0])
+            elif kind == "rwkv":
+                states.append(rwkv_mod.rwkv_init_state(cfg, batch_size,
+                                                       policy))
+            else:
+                states.append(rglru_mod.rglru_init_state(cfg, batch_size,
+                                                         policy))
+        return states
+
+    def prefill(self, params, batch, policy: PrecisionPolicy,
+                capacity: Optional[int] = None):
+        """Full-sequence forward; returns (last-position logits, states)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        capacity = capacity or S
+        x = embed_lookup(params["embed"], tokens, policy,
+                         scale=cfg.embed_scale)
+        prefix_len = 0
+        if cfg.prefix_len and "prefix_embeds" in batch:
+            pe = batch["prefix_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            prefix_len = pe.shape[1]
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch["encoder_embeds"]
+                                   .astype(x.dtype), policy)
+        chunk = cfg.attn_chunk if x.shape[1] > cfg.attn_chunk else None
+
+        # run backbone while also building decode states
+        states = []
+        aux = jnp.zeros((), jnp.float32)
+        for kind, layer in zip(cfg.attn_pattern, params["layers"]):
+            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+            if kind == "attn":
+                a, st = attn.prefill_to_cache(layer["mix"], h, cfg, policy,
+                                              capacity,
+                                              prefix_len=prefix_len,
+                                              chunk=chunk)
+            elif kind == "rwkv":
+                st0 = rwkv_mod.rwkv_init_state(cfg, B, policy)
+                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, policy,
+                                          state=st0)
+            else:
+                st0 = rglru_mod.rglru_init_state(cfg, B, policy)
+                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
+                                              state=st0)
+            x = x + a
+            if enc_out is not None:
+                hx = apply_norm(x, layer["norm_x"], policy, cfg.norm)
+                a, _ = attn.mha(layer["xattn"], hx, cfg, policy,
+                                kv_source=enc_out)
+                x = x + a
+            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            if kind == "rwkv":
+                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
+                                             state=st)
+            elif cfg.moe_experts:
+                f, a2 = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+                aux = aux + a2
+            else:
+                f = ffn_apply(layer["ffn"], h, policy, cfg)
+            x = x + f
+            states.append(st)
+        x = apply_norm(x, params["final_norm"], policy, cfg.norm)
+        logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
+        return logits, states
+
+    def decode_step(self, params, tokens, states, policy: PrecisionPolicy,
+                    enc_out=None, encoder_embeds=None):
+        """tokens: (B, 1).  Returns (logits (B, 1, V), new states)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, policy,
+                         scale=cfg.embed_scale)
+        if cfg.encoder_layers and enc_out is None:
+            enc_out = self._encode(params, encoder_embeds.astype(x.dtype),
+                                   policy)
+        x, new_states, _ = self._backbone(params, x, policy, states=states,
+                                          enc_out=enc_out, training=False)
+        logits = lm_logits(x, self._head_w(params), policy)
+        return logits, new_states

@@ -1,0 +1,133 @@
+"""AdamW with transprecision state formats.
+
+The paper's type system applied to training state: master weights and the
+second moment stay binary32 (range/precision-critical accumulators -- the
+variables its tuner always pins wide, Fig. 4 rightmost column); the first
+moment tolerates binary16alt (bf16); model params are stored in the policy's
+weight formats.  On a 35B model this cuts optimizer+param HBM from 16 B/param
+(f32 m,v,master + f32 weights) to 11 B/param -- the paper's memory-access
+reduction applied to the training footprint.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexfloat import quantize
+from repro.core.policy import PrecisionPolicy
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any   # f32 (policy "master")
+    m: Any        # policy "optim_m"
+    v: Any        # policy "optim_v"
+
+
+def _roles_of(path_leaf_fmt, policy, role):
+    if policy.mode == "native":
+        return policy.dtype(role)
+    return jnp.float32
+
+
+def init(params, policy: PrecisionPolicy) -> AdamWState:
+    """``params`` are the (possibly narrow) model weights; master = f32."""
+    # NB: force a copy even when the param is already f32 -- params and
+    # master must never alias (both are donated by the train step).
+    master = jax.tree_util.tree_map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    m = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, _roles_of(None, policy, "optim_m")),
+        params)
+    v = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, _roles_of(None, policy, "optim_v")),
+        params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=master, m=m, v=v)
+
+
+def apply(grads, state: AdamWState, policy: PrecisionPolicy, *,
+          lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: float = 1.0):
+    """Returns (new_params_in_policy_formats, new_state)."""
+    step = state.step + 1
+    # global-norm clip (f32)
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)) + 1e-16)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+    else:
+        scale = jnp.float32(1.0)
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mm, vv, mw):
+        g = g.astype(jnp.float32) * scale
+        mf = mm.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = vv.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        upd = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        new_master = mw - lr * (upd + weight_decay * mw)
+        if policy.mode == "native":
+            return (mf.astype(mm.dtype), vf.astype(vv.dtype), new_master)
+        return (quantize(mf, policy.fmt("optim_m")),
+                quantize(vf, policy.fmt("optim_v")), new_master)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_w = treedef.flatten_up_to(state.master)
+    out = [upd(g, mm, vv, mw)
+           for g, mm, vv, mw in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    return new_master, AdamWState(step=step, master=new_master, m=new_m,
+                                  v=new_v)
+
+
+def materialize_params(state: AdamWState, params_like, policy):
+    """Cast master weights into the policy's storage formats (role derived
+    from the pytree path: 'embed'/'head' -> embed_w, 'ffn' -> ffn_w, else
+    attn_w; norms stay f32)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    out = []
+    for path, leaf in flat:
+        keys = "/".join(str(p) for p in path).lower()
+        if "norm" in keys or "ln_" in keys or "mu" in keys or "lam" in keys:
+            role = "norm_w"
+        elif "embed" in keys or "head" in keys:
+            role = "embed_w"
+        elif "ffn" in keys or "cm_" in keys or "w_in" in keys \
+                or "w_out" in keys or "conv" in keys:
+            role = "ffn_w"
+        elif "router" in keys:
+            role = "router_w"
+        else:
+            role = "attn_w"
+        master_leaf = _get_by_path(state.master, path)
+        if policy.mode == "native":
+            dt = policy.dtype(role)
+            # copy=True when dtype is unchanged: the result must not alias
+            # the master buffer (both trees are donated by the train step)
+            out.append(jnp.array(master_leaf, dtype=dt,
+                                 copy=(master_leaf.dtype == dt)))
+        else:
+            out.append(quantize(master_leaf, policy.fmt(role)))
+    return treedef.unflatten(out)
+
+
+def _get_by_path(tree, path):
+    node = tree
+    for p in path:
+        if hasattr(p, "key"):
+            node = node[p.key]
+        elif hasattr(p, "idx"):
+            node = node[p.idx]
+        else:
+            node = node[p]
+    return node

@@ -1,0 +1,51 @@
+"""Elastic scaling: rebuild mesh + shardings after device-count changes.
+
+Flow on failure (or planned resize):
+  1. the watchdog / control plane reports surviving device count D;
+  2. ``best_mesh_shape(D)`` picks the largest usable (data, model) grid --
+     model-parallel width is kept if possible (weights must still fit),
+     data-parallel shrinks;
+  3. shardings are re-derived with the same logical rules on the new mesh;
+  4. ``CheckpointManager.restore(..., shardings=new)`` reloads the last
+     committed step, the data pipeline skips ahead deterministically, and
+     training resumes.  No state is lost beyond the last checkpoint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def best_mesh_shape(n_devices: int, prefer_model: int = 16,
+                    min_model: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid with model width <= prefer_model, maximal
+    utilization, model a power-of-two divisor (ICI-friendly)."""
+    best = (1, 1)
+    best_used = 0
+    m = prefer_model
+    while m >= min_model:
+        data = n_devices // m
+        used = data * m
+        if used > best_used or (used == best_used and m > best[1]):
+            best, best_used = (data, m), used
+        m //= 2
+    return best
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None,
+                      prefer_model: int = 16):
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    data, model = best_mesh_shape(n, prefer_model=prefer_model)
+    usable = devs[: data * model]
+    arr = np.asarray(usable).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def surviving_devices_after(failed_host_ids, devices=None):
+    """Filter device list by failed hosts (process indices)."""
+    devices = devices if devices is not None else jax.devices()
+    bad = set(failed_host_ids)
+    return [d for d in devices if d.process_index not in bad]

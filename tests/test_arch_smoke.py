@@ -1,0 +1,77 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + finiteness (no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.policy import binary32_policy, transprecision_policy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import build
+
+POLICIES = {
+    "binary32": binary32_policy(),
+    "transprecision": transprecision_policy(),
+}
+
+
+def _setup(arch, batch=2, seq=32):
+    model, cfg = build(arch, reduced=True)
+    data = SyntheticLM(DataConfig(global_batch=batch, seq_len=seq), cfg)
+    return model, cfg, data.batch_at(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("policy_name", list(POLICIES))
+def test_train_step_smoke(arch, policy_name):
+    policy = POLICIES[policy_name]
+    model, cfg, batch = _setup(arch)
+    params = model.init_params(jax.random.PRNGKey(0), policy)
+    loss = jax.jit(lambda p, b: model.train_loss(p, b, policy))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}/{policy_name}: loss={loss}"
+    # a gradient step must also be finite
+    g = jax.grad(lambda p: model.train_loss(p, batch, policy))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert leaves, "no grads"
+    for leaf in leaves:
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32))), (
+            f"{arch}/{policy_name}: non-finite grad")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch):
+    policy = POLICIES["transprecision"]
+    model, cfg, batch = _setup(arch)
+    params = model.init_params(jax.random.PRNGKey(1), policy)
+    capacity = batch["tokens"].shape[1] + 4
+    logits, states = jax.jit(
+        lambda p, b: model.prefill(p, b, policy, capacity))(params, batch)
+    B = batch["tokens"].shape[0]
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+    enc_kwargs = {}
+    if cfg.encoder_layers:
+        enc_kwargs["encoder_embeds"] = batch["encoder_embeds"]
+    logits2, states2 = jax.jit(
+        lambda p, t, s: model.decode_step(p, t, s, policy, **enc_kwargs)
+    )(params, nxt, states)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_formula(arch):
+    """cfg.param_count() must track the real init within 2% (loras/small
+    extras are approximated in the formula)."""
+    policy = POLICIES["binary32"]
+    model, cfg = build(arch, reduced=True)
+    params = model.init_params(jax.random.PRNGKey(0), policy)
+    actual = sum(int(np.prod(l.shape))
+                 for l in jax.tree_util.tree_leaves(params))
+    predicted = cfg.param_count()
+    assert abs(actual - predicted) / actual < 0.05, (
+        f"{arch}: predicted {predicted} actual {actual}")

@@ -1,0 +1,200 @@
+"""Distributed-substrate tests: checkpoint/restart, elasticity, straggler
+watchdog, compressed gradients, optimizer formats."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.formats import BINARY8, BINARY16ALT
+from repro.core.policy import binary32_policy, transprecision_policy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.registry import build
+from repro.optim import adamw, grad_compress
+from repro.runtime.elastic import best_mesh_shape
+from repro.runtime.watchdog import StepWatchdog
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": [jnp.ones((2,), jnp.bfloat16),
+                  {"c": jnp.asarray(3, jnp.int32)}]}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree.map(lambda x: x * s, tree),
+                 extra={"step": s})
+    assert mgr.all_steps() == [2, 3]  # keep-last-2 gc
+    restored, meta = mgr.restore(3, tree)
+    assert meta["extra"]["step"] == 3
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves(jax.tree.map(lambda x: x * 3, tree))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomicity_no_partial(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(5, {"x": jnp.ones(3)})
+    # simulate a dying writer: leftover .tmp must be invisible
+    os.makedirs(tmp_path / "step_9.tmp")
+    assert mgr.all_steps() == [5]
+    assert mgr.latest_step() == 5
+
+
+def test_train_restart_bitexact(tmp_path):
+    """Crash/restart must reproduce the uninterrupted run exactly
+    (deterministic data + checkpointed state)."""
+    pol = binary32_policy()
+    model, cfg = build("llama3-8b", reduced=True)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=32), cfg)
+    params = model.init_params(jax.random.PRNGKey(0), pol)
+    opt = adamw.init(params, pol)
+
+    from repro.launch.train import make_train_step
+    step = jax.jit(make_train_step(model, pol, 1e-3))
+
+    # uninterrupted: 6 steps
+    p1, o1 = params, opt
+    for i in range(6):
+        _, p1, o1 = step(p1, o1, data.batch_at(i))
+
+    # interrupted at 3 + restore + 3 more
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    p2, o2 = params, opt
+    for i in range(3):
+        _, p2, o2 = step(p2, o2, data.batch_at(i))
+    mgr.save(2, (p2, o2), extra={"data": data.state(2)})
+    (p2, o2), meta = mgr.restore(2, (p2, o2))
+    for i in range(meta["extra"]["data"]["step"] + 1, 6):
+        _, p2, o2 = step(p2, o2, data.batch_at(i))
+
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ------------------------------------------------------------------- elastic
+def test_best_mesh_shape():
+    assert best_mesh_shape(512, prefer_model=16) == (32, 16)
+    assert best_mesh_shape(256, prefer_model=16) == (16, 16)
+    assert best_mesh_shape(240, prefer_model=16) == (15, 16)
+    assert best_mesh_shape(12, prefer_model=16) == (3, 4)
+    assert best_mesh_shape(1, prefer_model=16) == (1, 1)
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Checkpoint saved under one sharding restores under another."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    mgr.save(1, {"w": x})
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P(None, "model"))}
+    restored, _ = mgr.restore(1, {"w": x}, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+    assert restored["w"].sharding == sh["w"]
+
+
+# ------------------------------------------------------------------ watchdog
+def test_watchdog_flags_stragglers():
+    events = []
+    wd = StepWatchdog(k_sigma=3.0, min_ratio=1.4, warmup_steps=3,
+                      on_straggler=lambda s, dt: events.append(s))
+    for i in range(20):
+        wd.observe(i, 0.1 + 0.001 * (i % 3))
+    assert not events
+    wd.observe(20, 0.5)  # 5x slower
+    assert events == [20]
+    # a permanent slowdown becomes the new normal eventually
+    for i in range(21, 60):
+        wd.observe(i, 0.5)
+    assert wd.mean > 0.3
+
+
+# ----------------------------------------------------------- grad compression
+def test_compress_roundtrip_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(scale=1e-3, size=(256,)), jnp.float32)
+    payload, res = grad_compress.compress(g, None, BINARY8)
+    assert payload.dtype == jnp.uint8
+    deq = grad_compress.decompress(payload, BINARY8)
+    # residual is exactly the rounding error
+    np.testing.assert_allclose(np.asarray(deq + res), np.asarray(g),
+                               rtol=0, atol=1e-9)
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the time-averaged transmitted signal tracks the true mean
+    far better than independent rounding."""
+    rng = np.random.default_rng(1)
+    true = jnp.asarray(rng.normal(scale=1e-4, size=(512,)), jnp.float32)
+    acc_ef = np.zeros(512)
+    acc_naive = np.zeros(512)
+    res = None
+    T = 64
+    for _ in range(T):
+        payload, res = grad_compress.compress(true, res, BINARY8)
+        acc_ef += np.asarray(grad_compress.decompress(payload, BINARY8))
+        p2, _ = grad_compress.compress(true, None, BINARY8)
+        acc_naive += np.asarray(grad_compress.decompress(p2, BINARY8))
+    err_ef = np.linalg.norm(acc_ef / T - np.asarray(true))
+    err_naive = np.linalg.norm(acc_naive / T - np.asarray(true))
+    assert err_ef < err_naive * 0.2, (err_ef, err_naive)
+
+
+def test_compressed_training_converges():
+    """e5m2+EF compressed 'reduction' keeps the training loss trajectory
+    close to the uncompressed one on the tiny model."""
+    pol = binary32_policy()
+    model, cfg = build("llama3-8b", reduced=True)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=32), cfg)
+    params0 = model.init_params(jax.random.PRNGKey(0), pol)
+
+    def run(compressed, steps=20):
+        params = params0
+        opt = adamw.init(params, pol)
+        res = None
+        losses = []
+        for i in range(steps):
+            batch = data.batch_at(i)
+            loss, grads = jax.value_and_grad(
+                lambda p: model.train_loss(p, batch, pol))(params)
+            if compressed:
+                if res is None:
+                    res = jax.tree.map(
+                        lambda g: jnp.zeros_like(g, jnp.float32), grads)
+                out = jax.tree_util.tree_map(
+                    lambda g, r: grad_compress.compress(g, r, BINARY8),
+                    grads, res, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+                grads = jax.tree.map(
+                    lambda pr: grad_compress.decompress(pr[0], BINARY8),
+                    out, is_leaf=lambda x: isinstance(x, tuple))
+                res = jax.tree.map(lambda pr: pr[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            _, opt = adamw.apply(grads, opt, pol, lr=1e-3)
+            params = adamw.materialize_params(opt, params, pol)
+            losses.append(float(loss))
+        return losses
+
+    base = run(False)
+    comp = run(True)
+    assert comp[-1] < base[0] * 0.85          # it learns
+    assert abs(comp[-1] - base[-1]) < 0.35    # and tracks the fp32 run
+
+
+# ----------------------------------------------------- optimizer state formats
+def test_adamw_transprecision_states():
+    pol = transprecision_policy()
+    model, cfg = build("llama3-8b", reduced=True)
+    params = model.init_params(jax.random.PRNGKey(0), pol)
+    opt = adamw.init(params, pol)
+    m_leaf = jax.tree.leaves(opt.m)[0]
+    v_leaf = jax.tree.leaves(opt.v)[0]
+    assert m_leaf.dtype == jnp.bfloat16   # optim_m = binary16alt
+    assert v_leaf.dtype == jnp.float32    # optim_v = binary32
+    master_leaf = jax.tree.leaves(opt.master)[0]
+    assert master_leaf.dtype == jnp.float32

@@ -1,0 +1,195 @@
+"""Bit-exactness tests for the flexfloat quantizer and packed codec.
+
+The strongest check available: binary8/binary16/binary16alt coincide with
+native float8_e5m2/float16/bfloat16, so our generic (e, m) path must match
+XLA's native casts bit-for-bit -- exhaustively over every representable
+16-bit pattern and over dense f32 samples.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexfloat as ff
+from repro.core import qtensor as qt
+from repro.core.formats import (BINARY8, BINARY16, BINARY16ALT, BINARY32,
+                                FpFormat, get_format, map_precision_to_format)
+
+jax.config.update("jax_enable_x64", False)
+
+NATIVE_CASES = [
+    (BINARY8, jnp.float8_e5m2),
+    (FpFormat(4, 3, "binary8alt"), jnp.float8_e4m3),
+    (BINARY16, jnp.float16),
+    (BINARY16ALT, jnp.bfloat16),
+]
+
+
+def _all_f32_near_format(fmt, n=400_000, seed=0):
+    """Dense f32 samples: uniform bit patterns + values near format edges."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+    x = bits.view(np.float32)
+    edges = np.array([0.0, -0.0, fmt.min_denormal, fmt.min_normal,
+                      fmt.max_normal, np.inf, -np.inf, np.nan,
+                      fmt.max_normal * (1 + 2.0 ** (-fmt.m - 1)),
+                      fmt.max_normal * (1 + 2.0 ** (-fmt.m)),
+                      fmt.min_denormal / 2, fmt.min_denormal * 0.4999,
+                      fmt.min_denormal * 1.5, 1.0, -1.0], dtype=np.float32)
+    # halfway points between representable values around 1.0
+    k = np.arange(1, 64, dtype=np.float32)
+    half = (1.0 + (2 * k + 1) * 2.0 ** (-fmt.m - 1)).astype(np.float32)
+    return np.concatenate([x, edges, half, -half])
+
+
+def _assert_bits_equal(ours_f32, native_f32, msg=""):
+    a = np.asarray(ours_f32).view(np.uint32)
+    b = np.asarray(native_f32).view(np.uint32)
+    nan_a = np.isnan(np.asarray(ours_f32))
+    nan_b = np.isnan(np.asarray(native_f32))
+    np.testing.assert_array_equal(nan_a, nan_b, err_msg=f"NaN mismatch {msg}")
+    ok = nan_a | (a == b)
+    bad = np.where(~ok)[0]
+    assert bad.size == 0, (
+        f"{msg}: {bad.size} mismatches, first at {bad[:5]}: "
+        f"in={np.asarray(ours_f32)[bad[:5]]} ours={a[bad[:5]]} native={b[bad[:5]]}")
+
+
+@pytest.mark.parametrize("fmt,dtype", NATIVE_CASES,
+                         ids=[f.name for f, _ in NATIVE_CASES])
+def test_quantize_matches_native_cast(fmt, dtype):
+    x = _all_f32_near_format(fmt)
+    ours = np.asarray(ff.quantize(jnp.asarray(x), fmt))
+    native = np.asarray(jnp.asarray(x).astype(dtype).astype(jnp.float32))
+    _assert_bits_equal(ours, native, msg=fmt.name)
+
+
+@pytest.mark.parametrize("fmt,dtype", NATIVE_CASES,
+                         ids=[f.name for f, _ in NATIVE_CASES])
+def test_decode_matches_native_exhaustive(fmt, dtype):
+    """decode() of every possible bit pattern == native dtype reinterpret."""
+    n = 1 << fmt.bits
+    patterns = np.arange(n, dtype=np.uint32).astype(
+        np.dtype(fmt.container_dtype.__name__))
+    ours = np.asarray(qt.decode(jnp.asarray(patterns), fmt))
+    native = np.asarray(
+        jax.lax.bitcast_convert_type(jnp.asarray(patterns), dtype)
+        .astype(jnp.float32))
+    _assert_bits_equal(ours, native, msg=f"decode {fmt.name}")
+
+
+@pytest.mark.parametrize("fmt,dtype", NATIVE_CASES,
+                         ids=[f.name for f, _ in NATIVE_CASES])
+def test_encode_matches_native_exhaustive_roundtrip(fmt, dtype):
+    """encode(decode(bits)) == bits for every non-NaN pattern."""
+    n = 1 << fmt.bits
+    patterns = np.arange(n, dtype=np.uint32).astype(
+        np.dtype(fmt.container_dtype.__name__))
+    vals = qt.decode(jnp.asarray(patterns), fmt)
+    back = np.asarray(qt.encode(vals, fmt))
+    valsn = np.asarray(vals)
+    not_nan = ~np.isnan(valsn)
+    # -0.0 and +0.0 both encode faithfully; NaNs canonicalize.
+    np.testing.assert_array_equal(back[not_nan], np.asarray(patterns)[not_nan])
+    nan_mask = np.isnan(np.asarray(qt.decode(jnp.asarray(back), fmt)))
+    np.testing.assert_array_equal(nan_mask, ~not_nan)
+
+
+@pytest.mark.parametrize("e,m", [(5, 2), (5, 10), (8, 7), (6, 9), (3, 4),
+                                 (8, 17), (2, 1), (7, 12), (8, 22), (4, 19)])
+def test_quantize_idempotent_and_exact(e, m):
+    fmt = FpFormat(e, m)
+    x = jnp.asarray(_all_f32_near_format(fmt, n=100_000, seed=e * 31 + m))
+    q1 = ff.quantize(x, fmt)
+    q2 = ff.quantize(q1, fmt)
+    _assert_bits_equal(np.asarray(q1), np.asarray(q2), msg=f"idempotent {fmt}")
+    # encode/decode roundtrip is exact on quantized values
+    rt = qt.decode(qt.encode(q1, fmt, assume_quantized=True), fmt)
+    _assert_bits_equal(np.asarray(q1), np.asarray(rt), msg=f"codec {fmt}")
+
+
+@pytest.mark.parametrize("e,m", [(5, 2), (8, 7), (6, 9), (3, 4)])
+def test_quantize_error_bound(e, m):
+    """RNE error <= 0.5 ulp for in-range values."""
+    fmt = FpFormat(e, m)
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-fmt.max_normal / 4, fmt.max_normal / 4,
+                    size=50_000).astype(np.float32)
+    q = np.asarray(ff.quantize(jnp.asarray(x), fmt))
+    fin = np.isfinite(x) & (np.abs(x) >= fmt.min_normal)
+    e_unb = np.floor(np.log2(np.abs(x[fin])))
+    ulp = 2.0 ** (e_unb - m)
+    assert np.all(np.abs(q[fin] - x[fin]) <= 0.5 * ulp + 1e-30)
+
+
+def test_overflow_and_saturation_semantics():
+    x = jnp.asarray([1e9, -1e9, 70000.0, -70000.0], jnp.float32)
+    q = np.asarray(ff.quantize(x, BINARY16))
+    assert np.isinf(q[0]) and np.isinf(q[1]) and q[1] < 0
+    qs = np.asarray(ff.quantize(x, BINARY16, saturate=True))
+    assert np.all(np.isfinite(qs))
+    assert qs[0] == BINARY16.max_normal and qs[1] == -BINARY16.max_normal
+
+
+def test_binary16alt_range_vs_binary16():
+    """The paper's motivation: binary16alt never saturates converting from
+    binary32's range; binary16 does."""
+    big = jnp.asarray([1e20, 3e38, -2.5e30], jnp.float32)
+    assert np.all(np.isinf(np.asarray(ff.quantize(big, BINARY16))))
+    assert np.all(np.isfinite(np.asarray(ff.quantize(big, BINARY16ALT))))
+    # and binary8 mirrors binary16's range (same 5-bit exponent): any binade
+    # representable in b16 is representable in b8
+    assert BINARY8.emax == BINARY16.emax and BINARY8.emin == BINARY16.emin
+    binades = jnp.asarray([2.0 ** k for k in range(BINARY8.emin,
+                                                   BINARY8.emax + 1)],
+                          jnp.float32)
+    q8 = np.asarray(ff.quantize(binades, BINARY8))
+    np.testing.assert_array_equal(q8, np.asarray(binades))
+
+
+def test_stochastic_rounding_unbiased():
+    fmt = BINARY8
+    x = jnp.full((200_000,), 1.0 + 2.0 ** -5, jnp.float32)  # 1/8 between grid
+    keys = jax.random.PRNGKey(0)
+    q = np.asarray(ff.quantize(x, fmt, key=keys))
+    up = np.mean(q > 1.0)
+    assert 0.08 < up < 0.17  # expect ~1/8 round up
+    assert np.allclose(np.mean(q), np.mean(np.asarray(x)), rtol=3e-3)
+
+
+def test_pack_unpack_words():
+    rng = np.random.default_rng(3)
+    for dt in (np.uint8, np.uint16, np.uint32):
+        a = rng.integers(0, np.iinfo(dt).max, size=(3, 16), dtype=dt)
+        w = qt.pack_words(jnp.asarray(a))
+        b = np.asarray(qt.unpack_words(w, dt))
+        np.testing.assert_array_equal(a, b)
+        assert w.dtype == jnp.uint32
+        assert w.shape[-1] == a.shape[-1] // (4 // dt().itemsize)
+
+
+def test_qtensor_roundtrip_and_footprint():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 32)),
+                    jnp.float32)
+    for fmt in (BINARY8, BINARY16, BINARY16ALT, BINARY32):
+        q = qt.QTensor.quantize(x, fmt)
+        assert q.nbytes == 64 * 32 * fmt.container_dtype.dtype.itemsize
+        _assert_bits_equal(np.asarray(q.dequantize()),
+                           np.asarray(ff.quantize(x, fmt)), msg=fmt.name)
+        if fmt.native_dtype is not None:
+            nat = np.asarray(q.to_native().astype(jnp.float32))
+            _assert_bits_equal(np.asarray(q.dequantize()), nat,
+                               msg=f"native {fmt.name}")
+
+
+def test_precision_to_format_mapping():
+    # the paper's wrapper mapping, V1 vs V2 (Sec. III-A)
+    assert map_precision_to_format(3) is BINARY8
+    assert map_precision_to_format(3, needs_wide_range=True) is BINARY16ALT
+    assert map_precision_to_format(8) is BINARY16ALT
+    assert map_precision_to_format(8, type_system="V1") is BINARY16
+    assert map_precision_to_format(11, type_system="V1") is BINARY16
+    assert map_precision_to_format(9, needs_wide_range=True) is BINARY32
+    assert map_precision_to_format(12) is BINARY32
+    assert get_format("binary16alt") is BINARY16ALT
+    assert get_format("flexfloat<6,9>") == FpFormat(6, 9)

@@ -1,0 +1,108 @@
+"""Kernel validation: sweep shapes/dtypes/formats, assert against ref.py
+oracles (bit-exact for casts/codecs, allclose for matmul)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import (BINARY8, BINARY16, BINARY16ALT, BINARY32,
+                                FpFormat)
+from repro.core.qtensor import encode
+from repro.kernels import ops, ref
+
+FORMATS = [BINARY8, BINARY16, BINARY16ALT, FpFormat(6, 9), FpFormat(3, 4)]
+SHAPES = [(8,), (128,), (1, 1), (7, 129), (256, 256), (3, 5, 64), (300, 513)]
+
+
+def _rand(shape, seed, scale=4.0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=scale, size=shape).astype(np.float32)
+    # sprinkle specials and denormals
+    flat = x.reshape(-1)
+    if flat.size >= 8:
+        flat[0], flat[1], flat[2] = np.inf, -np.inf, np.nan
+        flat[3], flat[4] = 0.0, -0.0
+        flat[5] = 1e-30
+        flat[6] = -3e38
+        flat[7] = 6e-8
+    return jnp.asarray(x)
+
+
+def _bits_equal(a, b, msg=""):
+    a, b = np.asarray(a), np.asarray(b)
+    nan_a, nan_b = np.isnan(a), np.isnan(b)
+    np.testing.assert_array_equal(nan_a, nan_b, err_msg=msg)
+    if a.dtype == np.float32:
+        a, b = a.view(np.uint32), b.view(np.uint32)
+    np.testing.assert_array_equal(np.where(nan_a, 0, a),
+                                  np.where(nan_b, 0, b), err_msg=msg)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_cast_kernel_matches_oracle(fmt, shape):
+    x = _rand(shape, hash((fmt.e, fmt.m, shape)) % 2**31)
+    got = ops.cast(x, fmt, use_pallas=True)
+    want = ref.flexfloat_cast_ref(x, fmt)
+    assert got.shape == x.shape and got.dtype == jnp.float32
+    _bits_equal(got, want, msg=f"{fmt} {shape}")
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(128,), (7, 129), (256, 256)], ids=str)
+def test_pack_unpack_kernels_match_oracle(fmt, shape):
+    x = _rand(shape, 11)
+    packed = ops.pack(x, fmt, use_pallas=True)
+    want_packed = ref.quantize_encode_ref(x, fmt)
+    assert packed.dtype == fmt.container_dtype
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(want_packed))
+    got = ops.unpack(packed, fmt, use_pallas=True)
+    want = ref.dequantize_ref(want_packed, fmt)
+    _bits_equal(got, want, msg=f"unpack {fmt} {shape}")
+
+
+@pytest.mark.parametrize("fmt_a,fmt_b,out_fmt", [
+    (BINARY8, BINARY8, None),
+    (BINARY8, BINARY16, None),
+    (BINARY16ALT, BINARY16ALT, BINARY16ALT),
+    (BINARY16, BINARY16ALT, BINARY32),
+    (None, BINARY8, None),
+], ids=["b8b8", "b8b16", "b16alt+q", "mixed+q32", "f32xb8"])
+@pytest.mark.parametrize("mkn", [(32, 32, 32), (128, 256, 64),
+                                 (300, 140, 70), (257, 129, 511)], ids=str)
+def test_qmatmul_matches_oracle(fmt_a, fmt_b, out_fmt, mkn):
+    m, k, n = mkn
+    rng = np.random.default_rng(m * n)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    ap = encode(a, fmt_a) if fmt_a is not None else a
+    bp = encode(b, fmt_b) if fmt_b is not None else b
+    got = ops.matmul(ap, bp, fmt_a, fmt_b, out_fmt, use_pallas=True)
+    want = ref.qmatmul_ref(ap, bp, fmt_a, fmt_b, out_fmt)
+    assert got.shape == (m, n)
+    # identical decode + f32 accumulate; only summation order may differ
+    # between the tiled kernel and the single jnp.dot -> tight tolerance.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_vs_native_bf16():
+    """binary16alt operands == native bf16 matmul with f32 accumulation."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(96, 48)), jnp.float32)
+    ap, bp = encode(a, BINARY16ALT), encode(b, BINARY16ALT)
+    got = ops.matmul(ap, bp, BINARY16ALT, BINARY16ALT, use_pallas=True)
+    native = jnp.dot(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(native),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cast_kernel_grid_boundary_padding():
+    """Non-multiple shapes must not leak padding into results."""
+    x = jnp.asarray(np.full((257, 300), 3.14159), jnp.float32)
+    got = np.asarray(ops.cast(x, BINARY8, use_pallas=True))
+    want = np.asarray(ref.flexfloat_cast_ref(x, BINARY8))
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (257, 300)

@@ -1,0 +1,112 @@
+"""Hypothesis property-based tests on the transprecision type system's
+invariants (FlexFloat semantics, IEEE 754 rounding laws)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flexfloat as ff
+from repro.core import qtensor as qt
+from repro.core.formats import FpFormat
+
+fmt_strategy = st.builds(
+    FpFormat,
+    e=st.integers(min_value=2, max_value=8),
+    m=st.integers(min_value=1, max_value=22),
+)
+
+floats32 = st.floats(width=32, allow_nan=False, allow_infinity=True)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fmt=fmt_strategy, xs=st.lists(floats32, min_size=1, max_size=32))
+def test_idempotent(fmt, xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q = ff.quantize(x, fmt)
+    q2 = ff.quantize(q, fmt)
+    np.testing.assert_array_equal(
+        np.asarray(q).view(np.uint32), np.asarray(q2).view(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(fmt=fmt_strategy, xs=st.lists(floats32, min_size=1, max_size=32))
+def test_sign_symmetry(fmt, xs):
+    """Q(-x) == -Q(x) (RNE is sign-symmetric)."""
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    a = np.asarray(ff.quantize(-x, fmt))
+    b = -np.asarray(ff.quantize(x, fmt))
+    np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+@settings(max_examples=150, deadline=None)
+@given(fmt=fmt_strategy,
+       xs=st.lists(st.floats(width=32, allow_nan=False, allow_infinity=False),
+                   min_size=2, max_size=32))
+def test_monotone(fmt, xs):
+    """x <= y implies Q(x) <= Q(y) (rounding is monotone)."""
+    x = np.sort(np.asarray(xs, np.float32))
+    q = np.asarray(ff.quantize(jnp.asarray(x), fmt))
+    assert np.all(np.diff(q) >= 0) or not np.all(np.isfinite(q))
+
+
+@settings(max_examples=150, deadline=None)
+@given(fmt=fmt_strategy, xs=st.lists(floats32, min_size=1, max_size=16))
+def test_codec_roundtrip(fmt, xs):
+    """decode(encode(x)) == quantize(x) bit-for-bit (non-NaN)."""
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q = np.asarray(ff.quantize(x, fmt))
+    rt = np.asarray(qt.decode(qt.encode(x, fmt), fmt))
+    nn = ~np.isnan(q)
+    np.testing.assert_array_equal(q[nn].view(np.uint32),
+                                  rt[nn].view(np.uint32))
+    np.testing.assert_array_equal(np.isnan(q), np.isnan(rt))
+
+
+@settings(max_examples=100, deadline=None)
+@given(fmt=fmt_strategy,
+       xs=st.lists(st.floats(min_value=-(2.0 ** 100), max_value=2.0 ** 100,
+                             width=32, allow_nan=False),
+                   min_size=1, max_size=16))
+def test_error_half_ulp(fmt, xs):
+    """|x - Q(x)| <= max(0.5 ulp(x), 0.5 quantum) for finite results."""
+    x = np.asarray(xs, np.float32)
+    q = np.asarray(ff.quantize(jnp.asarray(x), fmt))
+    fin = np.isfinite(q)
+    ax = np.abs(x[fin]).astype(np.float64)
+    e = np.where(ax > 0, np.floor(np.log2(np.maximum(ax, 1e-300))), fmt.emin)
+    e = np.maximum(e, fmt.emin)
+    ulp = 2.0 ** (e - fmt.m)
+    assert np.all(np.abs(q[fin].astype(np.float64) - ax * np.sign(x[fin]))
+                  <= 0.5 * ulp + 1e-300)
+
+
+@settings(max_examples=100, deadline=None)
+@given(fmt=fmt_strategy,
+       xs=st.lists(st.floats(min_value=-1e4, max_value=1e4, width=32),
+                   min_size=1, max_size=8),
+       ys=st.lists(st.floats(min_value=-1e4, max_value=1e4, width=32),
+                   min_size=1, max_size=8))
+def test_ff_add_commutes(fmt, xs, ys):
+    n = min(len(xs), len(ys))
+    a = jnp.asarray(np.asarray(xs[:n], np.float32))
+    b = jnp.asarray(np.asarray(ys[:n], np.float32))
+    r1 = np.asarray(ff.ff_add(ff.quantize(a, fmt), ff.quantize(b, fmt), fmt))
+    r2 = np.asarray(ff.ff_add(ff.quantize(b, fmt), ff.quantize(a, fmt), fmt))
+    np.testing.assert_array_equal(r1.view(np.uint32), r2.view(np.uint32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(xs=st.lists(st.floats(min_value=-65000, max_value=65000, width=32),
+                   min_size=1, max_size=16))
+def test_paper_conversion_chain(xs):
+    """b32 -> b16alt -> b8 loses only precision (never range), per the
+    paper's format-design rationale."""
+    from repro.core.formats import BINARY8, BINARY16, BINARY16ALT
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    via16 = ff.quantize(ff.quantize(x, BINARY16), BINARY8)
+    direct = ff.quantize(x, BINARY8)
+    # double rounding through an intermediate format with the same exponent
+    # width may differ by at most one quantum, but range behaviour agrees
+    a, d = np.asarray(via16), np.asarray(direct)
+    np.testing.assert_array_equal(np.isinf(a) & (np.abs(np.asarray(x)) >
+                                                 70000), np.isinf(d) &
+                                  (np.abs(np.asarray(x)) > 70000))

@@ -1,0 +1,108 @@
+"""Equivalence tests for the recurrent families: the chunked/parallel
+training formulations must match step-by-step recurrent decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import binary32_policy
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.base import ModelConfig
+
+POLICY = binary32_policy()
+
+
+def _rwkv_cfg(chunk):
+    return ModelConfig(arch="t", family="ssm", n_layers=1, d_model=32,
+                       n_heads=2, n_kv=2, d_ff=64, vocab=64,
+                       rwkv_head_dim=16, rwkv_chunk=chunk, rope_theta=0.0,
+                       norm="layernorm", act_fn="relu2", gated_ffn=False)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_rwkv_chunked_equals_recurrent(chunk):
+    """Chunked parallel wkv == token-by-token recurrence (same params)."""
+    cfg = _rwkv_cfg(chunk)
+    p = rwkv_mod.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+
+    st0 = rwkv_mod.rwkv_init_state(cfg, B, POLICY)
+    out_chunked, st_chunked = rwkv_mod.time_mix(p, x, cfg, POLICY, state=st0)
+
+    # step-by-step
+    st = rwkv_mod.rwkv_init_state(cfg, B, POLICY)
+    outs = []
+    for t in range(S):
+        o, st = rwkv_mod.time_mix(p, x[:, t:t + 1], cfg, POLICY, state=st)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(out_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunked.s), np.asarray(st.s),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_chunk_size_invariance():
+    """Different chunk sizes give the same function."""
+    B, S = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, 32), jnp.float32)
+    outs = []
+    for chunk in (4, 6, 24):
+        cfg = _rwkv_cfg(chunk)
+        p = rwkv_mod.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        o, _ = rwkv_mod.time_mix(p, x, cfg, POLICY, state=None)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_equals_recurrent():
+    cfg = ModelConfig(arch="t", family="hybrid", n_layers=3, d_model=32,
+                      n_heads=2, n_kv=1, d_ff=64, vocab=64, head_dim=16,
+                      window=8, rglru_width=32, norm="rmsnorm",
+                      act_fn="gelu", gated_ffn=True)
+    p = rglru_mod.rglru_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+
+    st0 = rglru_mod.rglru_init_state(cfg, B, POLICY)
+    out_par, st_par = rglru_mod.rglru_block(p, x, cfg, POLICY, state=st0)
+
+    st = rglru_mod.rglru_init_state(cfg, B, POLICY)
+    outs = []
+    for t in range(S):
+        o, st = rglru_mod.rglru_block(p, x[:, t:t + 1], cfg, POLICY,
+                                      state=st)
+        outs.append(o)
+    out_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_seq),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_par.h), np.asarray(st.h),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_attention_decode_matches_prefill():
+    """Prefill logits at position t == decode-step logits after feeding
+    tokens one at a time (KV cache correctness)."""
+    from repro.models.registry import build
+    model, cfg = build("llama3-8b", reduced=True)
+    params = model.init_params(jax.random.PRNGKey(0), POLICY)
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+
+    logits_pref, _ = model.prefill(params, {"tokens": toks}, POLICY,
+                                   capacity=S + 2)
+
+    states = model.init_state(B, S + 2, POLICY)
+    logits_step = None
+    for t in range(S):
+        logits_step, states = model.decode_step(params, toks[:, t:t + 1],
+                                                states, POLICY)
+    np.testing.assert_allclose(np.asarray(logits_pref[:, -1]),
+                               np.asarray(logits_step[:, -1]),
+                               rtol=2e-3, atol=2e-3)
