@@ -1,0 +1,96 @@
+"""Decode-step attention benchmark: packed KV cache vs f32.
+
+Reports, per paper KV format:
+  * decode-step wall time of the XLA dequantize path (jitted; on CPU this
+    is the honest baseline -- the Pallas kernel runs in interpret mode off
+    TPU, so its wall time is meaningless and is reported only when
+    explicitly requested);
+  * attention HBM bytes per decode step for the packed cache vs an f32
+    cache (the paper's Fig. 6 memory-access reduction on the serving hot
+    path), both analytic and as XLA ``cost_analysis`` bytes for evidence
+    that the dequantize path really materializes the wide copy.
+
+``python -m benchmarks.bench_attention [--time-interpret]`` for a
+standalone table; ``report()`` feeds the benchmarks/run.py CSV.
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import cost_analysis
+from repro.core.formats import PAPER_FORMATS
+from repro.core.qtensor import encode
+from repro.kernels.flash_attention import (attention_hbm_bytes, flash_decode,
+                                           flash_decode_reference)
+
+# decode_32k-flavoured cell scaled for CPU: 4 seqs x 4k tokens, 8 KV heads
+B, S, H, G, DH = 4, 4096, 8, 4, 64
+
+
+def _time_us(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def report(time_interpret: bool = False) -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, H, G, DH)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, DH)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, DH)), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    bytes_f32 = attention_hbm_bytes(B, S, H, DH, None, g=G)
+
+    for fmt in PAPER_FORMATS:
+        kp, vp = encode(k, fmt), encode(v, fmt)
+
+        ref = jax.jit(lambda qq, kk, vv, ll, fmt=fmt:
+                      flash_decode_reference(qq, kk, vv, fmt, ll))
+        us_ref = _time_us(ref, q, kp, vp, lengths)
+        cost = cost_analysis(ref.lower(q, kp, vp, lengths).compile())
+        xla_bytes = int(cost.get("bytes accessed", 0))
+
+        bytes_packed = attention_hbm_bytes(B, S, H, DH, fmt, g=G)
+        ratio = bytes_f32 / bytes_packed
+        derived = (f"kv_hbm_bytes={bytes_packed}"
+                   f";f32_hbm_bytes={bytes_f32}"
+                   f";bytes_ratio={ratio:.2f}"
+                   f";xla_dequant_bytes_accessed={xla_bytes}")
+        if time_interpret:
+            us_fl = _time_us(
+                lambda qq, kk, vv, ll, fmt=fmt:
+                flash_decode(qq, kk, vv, fmt, ll), q, kp, vp, lengths, reps=1)
+            derived += f";interpret_us={us_fl:.0f}"
+        rows.append((f"attn_decode_{fmt.name}", us_ref, derived))
+    return rows
+
+
+def main():
+    rows = report(time_interpret="--time-interpret" in sys.argv)
+    print(f"decode step: B={B} S={S} n_kv={H} G={G} dh={DH} "
+          f"(q/scores f32; cache packed)")
+    print(f"{'kv format':<14} {'xla decode us':>14} {'kv HBM bytes':>14} "
+          f"{'vs f32':>8}")
+    for name, us, derived in rows:
+        d = dict(kv.split("=") for kv in derived.split(";"))
+        print(f"{name[12:]:<14} {us:>14.0f} {d['kv_hbm_bytes']:>14} "
+              f"{float(d['bytes_ratio']):>7.2f}x"
+              + (f"  interpret_us={d['interpret_us']}"
+                 if "interpret_us" in d else ""))
+    print("\n(bytes = K+V payload + query per step; the flash kernel "
+          "moves exactly kv_hbm_bytes, the XLA path additionally "
+          "materializes the f32 dequantized copy -- see "
+          "xla_dequant_bytes_accessed in the CSV row.)")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_fig4, bench_fig5, bench_fig6, bench_fig7,
-                            bench_kernels, bench_llm, bench_table1,
-                            paper_results)
+    from benchmarks import (bench_attention, bench_fig4, bench_fig5,
+                            bench_fig6, bench_fig7, bench_kernels, bench_llm,
+                            bench_table1, paper_results)
 
     quick = "--quick" in sys.argv
     cache = paper_results.compute(quick=quick)
@@ -26,6 +26,8 @@ def main() -> None:
     for (app, eps), e in fig7.items():
         print(f"fig7_{app}_eps{eps:g},0,energy={e:.3f}")
     for name, us, derived in bench_kernels.report():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in bench_attention.report():
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_llm.report():
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,111 @@
+"""JAX version compatibility shims, resolved once at import time.
+
+The public JAX API has renamed or moved several symbols this repo depends
+on; every call site imports the resolved name from here instead of probing
+``hasattr`` locally.  Policy: when a symbol exists under multiple names
+across the supported JAX range (see requirements.txt), this module binds
+the one the installed version provides; when a newer concept has no old
+equivalent (the ambient *abstract* mesh), it degrades to the closest older
+semantics (the thread-local *physical* mesh) so callers keep one code path.
+
+Resolved symbols:
+
+``CompilerParams``
+    ``pltpu.CompilerParams`` (new) or ``pltpu.TPUCompilerParams``
+    (<= 0.4.x).  Same constructor signature for the fields we use
+    (``dimension_semantics``, ``vmem_limit_bytes``).
+
+``shard_map``
+    ``jax.shard_map`` (new) or ``jax.experimental.shard_map.shard_map``.
+    Both accept ``(f, mesh=..., in_specs=..., out_specs=...)``.
+
+``get_abstract_mesh()``
+    Newer JAX returns the ambient abstract mesh set by
+    ``jax.sharding.set_mesh``.  On older versions this falls back to the
+    thread-local physical mesh activated by ``with mesh:`` (or ``None``
+    when no mesh is active).  Either return value supports ``.axis_names``,
+    ``.shape`` and can be passed to :func:`shard_map`.
+
+``make_mesh(axis_shapes, axis_names, axis_types=None)``
+    Forwards ``axis_types`` only where supported (the older API has no
+    explicit/auto axis distinction -- every axis behaves as Auto).
+
+``use_mesh(mesh)``
+    Context manager making ``mesh`` ambient: ``jax.sharding.set_mesh`` on
+    newer JAX, the plain ``Mesh`` context manager otherwise.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+__all__ = [
+    "CompilerParams", "cost_analysis", "get_abstract_mesh", "make_mesh",
+    "shard_map", "use_mesh",
+]
+
+# -- Pallas TPU compiler params (renamed TPUCompilerParams -> CompilerParams)
+CompilerParams = getattr(_pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = _pltpu.TPUCompilerParams
+
+# -- shard_map graduated from jax.experimental to the top-level namespace
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F811
+
+
+def get_abstract_mesh():
+    """The ambient mesh model code may shard over, or ``None``.
+
+    Newer JAX: the abstract mesh from ``jax.sharding.set_mesh`` (mapped to
+    ``None`` when empty).  Older JAX: the thread-local physical mesh from
+    ``with mesh:`` (again ``None`` when empty), which equally supports
+    ``.axis_names`` / ``.shape`` lookups and ``shard_map``.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is None or not mesh.axis_names:
+            return None
+        return mesh
+    from jax._src.mesh import thread_resources
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty:
+        return None
+    return mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` that tolerates the ``axis_types`` kwarg everywhere.
+
+    ``axis_types`` is dropped on JAX versions without explicit sharding
+    (where every mesh axis already has Auto semantics).
+    """
+    if axis_types is not None and hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def cost_analysis(compiled):
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    Older JAX wraps the per-program dict in a single-element list.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` as the ambient mesh.
+
+    Prefers ``jax.sharding.set_mesh`` (so model code can reach the abstract
+    mesh for shard_map paths); falls back to the bare ``Mesh`` context
+    manager, whose thread-local mesh :func:`get_abstract_mesh` also finds.
+    """
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

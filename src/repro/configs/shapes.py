@@ -4,8 +4,14 @@
 of seq_len); ``train_*`` lower ``train_step``; ``prefill_*`` lower
 ``prefill_step``.  ``long_500k`` requires sub-quadratic attention: it runs
 for ssm/hybrid archs and is skipped (recorded) for pure full-attention ones.
+
+``decode_impl`` pins the attention backend for the cell (None = model
+default).  The ``*_flash`` variants live in ``FLASH_SHAPES`` -- selectable
+by name everywhere shapes are, but outside the standard ``SHAPES`` sweep so
+the 40-cell dry-run matrix stays stable.
 """
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -14,6 +20,12 @@ class ShapeSpec:
     kind: str          # "train" | "prefill" | "decode"
     seq_len: int
     global_batch: int
+    decode_impl: Optional[str] = None  # "xla" | "flash_pallas" | "flash_shmap"
+
+    def cfg_overrides(self) -> dict:
+        """Model-config overrides this shape pins (merged by the dry-run)."""
+        return ({"decode_impl": self.decode_impl}
+                if self.decode_impl is not None else {})
 
 
 SHAPES = {
@@ -22,6 +34,16 @@ SHAPES = {
     "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
     "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
 }
+
+# Fused-kernel serving variants (the tentpole path of kernels/
+# flash_attention.py): same traffic as decode_32k, attention forced through
+# the packed-KV Pallas kernel.
+FLASH_SHAPES = {
+    "decode_32k_flash": ShapeSpec("decode_32k_flash", "decode", 32768, 128,
+                                  decode_impl="flash_pallas"),
+}
+
+ALL_SHAPES = {**SHAPES, **FLASH_SHAPES}
 
 # archs whose attention is sub-quadratic (may run long_500k)
 SUBQUADRATIC = {"rwkv6-1.6b", "recurrentgemma-2b"}

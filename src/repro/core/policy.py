@@ -44,15 +44,28 @@ DEFAULT_ROLES = (
 )
 
 
+DECODE_IMPLS = (None, "xla", "flash_pallas", "flash_shmap")
+
+
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
     formats: Mapping[str, FpFormat]
     mode: str = "native"  # "native" | "emulated"
     default_fmt: FpFormat = BINARY32
+    # Serving-time attention-backend override (None defers to the model
+    # config's ``decode_impl``): "flash_pallas" streams the packed kv_cache
+    # payload through the fused kernel so decode HBM bytes shrink by the
+    # container ratio -- the knob rides the policy because it is precision
+    # plumbing (which bits move), not model architecture.
+    decode_impl: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in ("native", "emulated"):
             raise ValueError(self.mode)
+        if self.decode_impl not in DECODE_IMPLS:
+            raise ValueError(
+                f"decode_impl must be one of {DECODE_IMPLS}, "
+                f"got {self.decode_impl!r}")
         if self.mode == "native":
             for role, fmt in self.formats.items():
                 if get_format(fmt).native_dtype is None:
@@ -99,13 +112,19 @@ class PrecisionPolicy:
         return f"PrecisionPolicy(mode={self.mode})\n" + "\n".join(rows)
 
 
-def binary32_policy(mode: str = "native") -> PrecisionPolicy:
-    """The paper's baseline: everything binary32."""
-    return PrecisionPolicy(formats={}, mode=mode, default_fmt=BINARY32)
+def binary32_policy(mode: str = "native",
+                    kv_fmt: Optional[FpFormat] = None,
+                    decode_impl: Optional[str] = None) -> PrecisionPolicy:
+    """The paper's baseline: everything binary32 (``kv_fmt`` optionally
+    swaps just the KV-cache storage format -- the serving ablation axis)."""
+    f = {} if kv_fmt is None else {"kv_cache": get_format(kv_fmt)}
+    return PrecisionPolicy(formats=f, mode=mode, default_fmt=BINARY32,
+                           decode_impl=decode_impl)
 
 
 def transprecision_policy(mode: str = "native",
                           kv_fmt: Optional[FpFormat] = None,
+                          decode_impl: Optional[str] = None,
                           ) -> PrecisionPolicy:
     """The framework default after tuning: weights/acts binary16alt (bf16 --
     the paper's wide-range 16-bit format), KV cache binary8 (e5m2), router /
@@ -121,7 +140,7 @@ def transprecision_policy(mode: str = "native",
         "logits": BINARY32, "grad_comm": BINARY8,
         "optim_m": BINARY16ALT, "optim_v": BINARY32, "master": BINARY32,
     }
-    return PrecisionPolicy(formats=f, mode=mode)
+    return PrecisionPolicy(formats=f, mode=mode, decode_impl=decode_impl)
 
 
 POLICIES = {

@@ -20,8 +20,9 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
 
-from repro import configs                      # noqa: E402
-from repro.configs.shapes import SHAPES, runnable, skip_reason  # noqa: E402
+from repro import compat, configs              # noqa: E402
+from repro.configs.shapes import (ALL_SHAPES, SHAPES, runnable,  # noqa: E402
+                                  skip_reason)
 from repro.core.policy import get_policy       # noqa: E402
 from repro.launch import hlo_analysis          # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -65,7 +66,7 @@ def input_specs(arch: str, shape_name: str, mesh, policy,
     cfg = configs.get(arch)
     if cfg_overrides:
         cfg = _dc.replace(cfg, **cfg_overrides)
-    spec = SHAPES[shape_name]
+    spec = ALL_SHAPES[shape_name]
     model = build_from_config(cfg)
     params = jax.eval_shape(
         lambda: model.init_params(jax.random.PRNGKey(0), policy))
@@ -149,12 +150,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              policy_name: str = "transprecision",
              cfg_overrides=None, kv_fmt=None, tag: str = "",
              verbose: bool = True) -> Dict[str, Any]:
-    spec = SHAPES[shape_name]
+    spec = ALL_SHAPES[shape_name]
     if not runnable(arch, shape_name):
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi" if multi_pod else "single",
                 "policy": policy_name, "status": "skipped",
                 "reason": skip_reason(arch, shape_name)}
+    # shape-pinned overrides (e.g. decode_impl for the *_flash variants)
+    cfg_overrides = {**spec.cfg_overrides(), **(cfg_overrides or {})}
 
     if kv_fmt is not None:
         from repro.core.formats import get_format as _gf
@@ -164,9 +167,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     t0 = time.time()
-    # set_mesh (not the bare Mesh context manager) so model code can reach
-    # the ambient abstract mesh for shard_map paths (MoE EP, flash-decode)
-    with jax.sharding.set_mesh(mesh):
+    # set_mesh (not the bare Mesh context manager) where available so model
+    # code can reach the ambient abstract mesh for shard_map paths (MoE EP,
+    # flash-decode); compat falls back to the Mesh context manager
+    with compat.use_mesh(mesh):
         model, cfg, ins = input_specs(arch, shape_name, mesh, policy,
                                       cfg_overrides)
         step = make_step_fn(model, cfg, spec.kind, policy)
@@ -188,7 +192,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
 
     coll = hlo_analysis.collective_stats(hlo)

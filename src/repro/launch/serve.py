@@ -8,6 +8,9 @@ Serving loop:
   * KV caches stored in the policy's ``kv_cache`` format (binary8/e5m2 by
     default -- 4x smaller working set, the paper's trick on the serving
     bottleneck);
+  * ``--decode-impl flash_pallas`` additionally streams the packed payload
+    through the fused flash kernel (kernels/flash_attention.py), so the
+    bandwidth-bound decode step also *moves* 4x fewer bytes;
   * finished sequences free their slot immediately.
 """
 from __future__ import annotations
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.policy import get_policy
+from repro.core.policy import DECODE_IMPLS, get_policy
 from repro.models.registry import build
 
 
@@ -44,9 +47,15 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--policy", default="transprecision")
+    ap.add_argument("--decode-impl", default=None,
+                    choices=[i for i in DECODE_IMPLS if i is not None],
+                    help="attention backend (default: model config; "
+                         "flash_pallas = fused packed-KV kernel)")
     args = ap.parse_args(argv)
 
-    policy = get_policy(args.policy)
+    # the policy-level override wins inside attention.decode_impl(), so no
+    # config rewrite / model rebuild is needed
+    policy = get_policy(args.policy, decode_impl=args.decode_impl)
     model, cfg = build(args.arch, reduced=args.reduced)
     params = model.init_params(jax.random.PRNGKey(0), policy)
     rng = np.random.default_rng(0)
@@ -114,7 +123,8 @@ def main(argv=None):
     total_tokens = sum(len(r.generated) for r in reqs)
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
           f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
-          f"(kv format: {policy.fmt('kv_cache').name})")
+          f"(kv format: {policy.fmt('kv_cache').name}, "
+          f"decode: {args.decode_impl or cfg.decode_impl})")
     return reqs
 
 

@@ -12,6 +12,24 @@ The KV cache is stored in the policy's ``kv_cache`` format (binary8/e5m2 by
 default policy => 4x less HBM per token than f32, the paper's
 memory-access reduction applied to serving).  Sliding-window archs keep a
 ring buffer of ``window`` entries.
+
+Decode backends (``decode_impl`` on the config, overridable per policy):
+  * "xla"          -- dequantize the cache through XLA, then dot/softmax/dot
+                      (oracle and fallback).
+  * "flash_pallas" -- fused Pallas kernel (kernels/flash_attention.py) that
+                      reads the packed KV payload bits directly and decodes
+                      tiles in-register: the bandwidth-bound decode step
+                      moves container-width bytes (4x less than f32 for
+                      binary8).  Also serves causal prefill (differentiable;
+                      backward recomputes via the XLA reference).  Runs in
+                      interpret mode off-TPU.  Precision note: operand
+                      *storage* formats are honored (values enter the kernel
+                      exactly as stored), but softmax probabilities live and
+                      die in VMEM registers, so the ``attn_probs`` narrowing
+                      the XLA paths apply to their *materialized* probs does
+                      not occur -- the fused paths are strictly wider
+                      (f32 probs/accumulation), never narrower.
+  * "flash_shmap"  -- sequence-sharded distributed flash-decode (below).
 """
 from __future__ import annotations
 
@@ -21,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.policy import PrecisionPolicy
 from .layers import act_cast, dense_init, pdot, peinsum, rope
 
@@ -131,6 +150,7 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
 
     scale = np.float32(1.0 / np.sqrt(dh))
     qg = q.reshape(B, S, n_kv, G, dh)
+    impl = decode_impl(cfg, policy)
 
     new_cache = None
     if cache is not None:
@@ -144,17 +164,20 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
         ck = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
         new_cache = KVCache(k=ck, v=cv, pos=cache.pos + S)
-        # valid positions: slot index occupied (pos' = pos + S)
-        idx = jnp.arange(cache.capacity)
+        # valid positions: slot index occupied (pos' = pos + S); a full ring
+        # buffer has every slot valid (order is irrelevant under softmax)
         if cfg.window is not None and cache.capacity == cfg.window:
-            valid = idx < jnp.minimum(cache.pos + S, cache.capacity)
+            n_valid = jnp.minimum(cache.pos + S, cache.capacity)
         else:
-            valid = idx < (cache.pos + S)
-        mesh = jax.sharding.get_abstract_mesh()
-        if (getattr(cfg, "decode_impl", "xla") == "flash_shmap"
+            n_valid = cache.pos + S
+        valid = jnp.arange(cache.capacity) < n_valid
+        mesh = compat.get_abstract_mesh()
+        if (impl == "flash_shmap"
                 and mesh is not None and "model" in (mesh.axis_names or ())
                 and cache.capacity % mesh.shape["model"] == 0):
             out = _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy)
+        elif impl == "flash_pallas" and S == 1:
+            out = _flash_decode_pallas(qg, ck, cv, n_valid, scale, policy)
         else:
             if policy.mode == "native" and ck.dtype != jnp.float32:
                 # dequantize straight to the compute dtype: one fusable cast
@@ -171,6 +194,10 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
             scores = jnp.where(valid[None, None, None, None, :], scores,
                                NEG_INF)
             out = _softmax_weighted(scores, vv, policy)
+    elif impl == "flash_pallas" and causal and kv_source is None:
+        # ---- fused chunked-causal prefill (one kernel, no Python unroll) --
+        out = _flash_prefill_pallas(qg, k, v, cfg, policy, scale,
+                                    prefix_len, chunk)
     elif chunk is not None and S > chunk and causal:
         # ---- unrolled q-chunked causal prefill -----------------------------
         n_chunks = (S + chunk - 1) // chunk
@@ -201,6 +228,54 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
 
     out = out.reshape(B, S, cfg.q_dim)
     return pdot(out, p["wo"], policy, "attn_w"), new_cache
+
+
+def decode_impl(cfg, policy: PrecisionPolicy) -> str:
+    """Resolve the attention backend: the policy override (serving-time
+    knob, no model rebuild) wins over the config default."""
+    return (getattr(policy, "decode_impl", None)
+            or getattr(cfg, "decode_impl", "xla"))
+
+
+def _flash_decode_pallas(qg, ck, cv, n_valid, scale, policy):
+    """Fused packed-KV flash decode (kernels/flash_attention.py).
+
+    The cache's native narrow dtype is bit-identical to the packed (e, m)
+    container (QTensor.from_native), so the payload reaches the kernel as a
+    pure bitcast and HBM streams container-width bytes -- the paper's
+    memory-access reduction applied *inside* the bandwidth-bound step.
+    """
+    from repro.kernels.flash_attention import flash_decode
+
+    fmt = policy.fmt("kv_cache")
+    if policy.mode == "native" and not fmt.is_binary32:
+        kp = jax.lax.bitcast_convert_type(ck, fmt.container_dtype)
+        vp = jax.lax.bitcast_convert_type(cv, fmt.container_dtype)
+    else:
+        # emulated mode stores already-sanitized f32 values; binary32 is f32
+        kp, vp, fmt = ck.astype(jnp.float32), cv.astype(jnp.float32), None
+    B = qg.shape[0]
+    q = qg[:, 0].astype(jnp.float32)                  # (B, n_kv, G, dh)
+    lengths = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32)[None], (B,))
+    out = flash_decode(q, kp, vp, fmt, lengths, scale=scale)
+    return act_cast(out[:, None], policy)
+
+
+def _flash_prefill_pallas(qg, k, v, cfg, policy, scale, prefix_len, chunk):
+    """Causal prefill through the fused kernel: the q-chunk loop lives in
+    the Pallas grid instead of unrolled Python, score memory is
+    O(block_q * block_kv) VMEM.  Differentiable (training-time forward
+    also lands here): backward recomputes via the XLA reference."""
+    from repro.kernels.flash_attention import (DEFAULT_BLOCK_Q,
+                                               flash_prefill_diff)
+
+    # chunk is the XLA path's q-chunk (up to attn_chunk=4096); as a Pallas
+    # block it only tiles the grid, so clamp it to a VMEM-sized block
+    out = flash_prefill_diff(
+        qg.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        scale=scale, window=cfg.window, prefix_len=prefix_len,
+        block_q=min(chunk or DEFAULT_BLOCK_Q, DEFAULT_BLOCK_Q))
+    return act_cast(out, policy)
 
 
 def _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy):
@@ -236,7 +311,7 @@ def _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy):
         out = wv / jnp.transpose(denom, (0, 3, 1, 2))[..., None]
         return out
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, None, None, None, None),
                   P(bspec, "model", None, None),

@@ -58,7 +58,8 @@ class ModelConfig:
 
     # execution knobs
     moe_impl: str = "dense"               # "dense" | "shard_map" (EP)
-    decode_impl: str = "xla"              # "xla" | "flash_shmap"
+    decode_impl: str = "xla"              # "xla" | "flash_pallas" (fused
+    #                                       packed-KV kernel) | "flash_shmap"
     attn_chunk: int = 4096                # q-chunk for long prefill
     loss_chunks: int = 4                  # chunked cross-entropy
     remat: bool = True

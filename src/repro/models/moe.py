@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.policy import PrecisionPolicy
 from .layers import _nonlin, act_cast, dense_init, pdot
 
@@ -39,7 +40,7 @@ def moe_apply(p, x, cfg, policy: PrecisionPolicy):
     for it and a mesh with a "model" axis is active (see moe_apply_sharded).
     """
     if getattr(cfg, "moe_impl", "dense") == "shard_map":
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is not None and "model" in (mesh.axis_names or ()):
             return moe_apply_sharded(p, x, cfg, policy, mesh)
     return _moe_apply_global(p, x, cfg, policy)
@@ -213,6 +214,6 @@ def moe_apply_sharded(p, x, cfg, policy: PrecisionPolicy, mesh):
     if has_gate:
         args.append(p["w_gate"])
     args.append(p["w_out"])
-    y, aux = jax.shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
-                           out_specs=out_specs)(*args)
+    y, aux = compat.shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                              out_specs=out_specs)(*args)
     return y, aux

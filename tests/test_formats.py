@@ -58,9 +58,15 @@ def _assert_bits_equal(ours_f32, native_f32, msg=""):
 @pytest.mark.parametrize("fmt,dtype", NATIVE_CASES,
                          ids=[f.name for f, _ in NATIVE_CASES])
 def test_quantize_matches_native_cast(fmt, dtype):
+    # The native oracle is ml_dtypes' numpy cast (the reference
+    # implementation of these dtypes), NOT jnp.astype: XLA:CPU emulates the
+    # f32->f8 down-casts and mis-rounds them on some versions (observed on
+    # jaxlib 0.4.37: e4m3 values exactly representable at m=3 round as if
+    # m=2), while ml_dtypes is exact RNE.
     x = _all_f32_near_format(fmt)
     ours = np.asarray(ff.quantize(jnp.asarray(x), fmt))
-    native = np.asarray(jnp.asarray(x).astype(dtype).astype(jnp.float32))
+    with np.errstate(invalid="ignore", over="ignore"):
+        native = x.astype(np.dtype(dtype)).astype(np.float32)
     _assert_bits_equal(ours, native, msg=fmt.name)
 
 

@@ -1,19 +1,14 @@
 """Equivalence tests for the §Perf optimization variants: every hillclimb
 change must be numerically identical to its baseline path."""
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from conftest import run_child
 from repro.core.policy import binary32_policy
 from repro.models import rwkv6 as rw
 from repro.models.base import ModelConfig
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 POLICY = binary32_policy()
 
 
@@ -73,8 +68,11 @@ from repro.models.base import ModelConfig
 from repro.models.registry import build_from_config
 from repro.configs import get
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+
+# Auto axis semantics on every JAX version (compat drops axis_types where
+# the explicit-sharding API does not exist yet).
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 pol = binary32_policy()
 
 # --- MoE: shard_map dispatch == dense dispatch (high capacity: no drops) ---
@@ -87,7 +85,7 @@ import repro.models.moe as mm
 taken = []
 orig = mm.moe_apply_sharded
 mm.moe_apply_sharded = lambda *a, **k: (taken.append(1), orig(*a, **k))[1]
-with jax.sharding.set_mesh(mesh):
+with compat.use_mesh(mesh):
     y_d, _ = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg, pol))(p, x)
     cfg2 = dataclasses.replace(cfg, moe_impl="shard_map")
     y_s, _ = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg2, pol))(p, x)
@@ -104,7 +102,7 @@ import repro.models.attention as att
 fd = []
 origf = att._flash_decode_shmap
 att._flash_decode_shmap = lambda *a, **k: (fd.append(1), origf(*a, **k))[1]
-with jax.sharding.set_mesh(mesh):
+with compat.use_mesh(mesh):
     _, states = jax.jit(lambda p, b: model.prefill(p, b, pol, 32))(
         params, {"tokens": toks})
     nxt = jnp.zeros((4, 1), jnp.int32)
@@ -122,8 +120,4 @@ print("PERF_VARIANTS_OK")
 
 
 def test_shard_map_variants_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_EQ],
-                       capture_output=True, text=True, timeout=480, env=env)
-    assert "PERF_VARIANTS_OK" in r.stdout, r.stderr[-3000:]
+    run_child(_SUBPROCESS_EQ, "PERF_VARIANTS_OK", timeout=480)

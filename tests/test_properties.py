@@ -2,6 +2,9 @@
 invariants (FlexFloat semantics, IEEE 754 rounding laws)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import flexfloat as ff

@@ -2,11 +2,11 @@
 import glob
 import json
 import os
-import subprocess
-import sys
 
 import numpy as np
 import pytest
+
+from conftest import run_child
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN_DIR = os.path.join(ROOT, "results", "dryrun")
@@ -63,12 +63,13 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            "--xla_backend_optimization_level=0")
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.core.policy import get_policy
 from repro.launch.sharding import tree_param_shardings, batch_spec
 from repro.models.registry import build
 from repro.optim import adamw
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 policy = get_policy("transprecision")
 model, cfg = build("llama3-8b", reduced=True)
 with mesh:
@@ -92,14 +93,11 @@ with mesh:
         return loss, adamw.materialize_params(no, p, policy), no
 
     compiled = jax.jit(step).lower(params, opt, batch).compile()
-    assert compiled.cost_analysis()["flops"] > 0
-    print("SMALL_MESH_OK", compiled.cost_analysis()["flops"])
+    cost = compat.cost_analysis(compiled)
+    assert cost["flops"] > 0
+    print("SMALL_MESH_OK", cost["flops"])
 """
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=420, env=env)
-    assert "SMALL_MESH_OK" in r.stdout, r.stderr[-3000:]
+    run_child(code, "SMALL_MESH_OK", timeout=420)
 
 
 # ----------------------------------------------------------------- train/serve
