@@ -1,14 +1,19 @@
-"""Decode-step attention benchmark: packed KV cache vs f32.
+"""Decode-step attention benchmark: packed KV cache vs f32, per backend.
 
-Reports, per paper KV format:
-  * decode-step wall time of the XLA dequantize path (jitted; on CPU this
-    is the honest baseline -- the Pallas kernel runs in interpret mode off
-    TPU, so its wall time is meaningless and is reported only when
-    explicitly requested);
-  * attention HBM bytes per decode step for the packed cache vs an f32
-    cache (the paper's Fig. 6 memory-access reduction on the serving hot
-    path), both analytic and as XLA ``cost_analysis`` bytes for evidence
-    that the dequantize path really materializes the wide copy.
+``collect()`` produces schema-stable entries for every (paper KV format x
+attention backend) cell -- ``xla`` (the dequantize path; its jitted wall
+time is the honest CPU baseline), ``flash_pallas`` (the fused packed-KV
+kernel) and the composed ``flash_shmap+flash_pallas`` (sequence-sharded
+fused kernel) -- which ``benchmarks/run.py`` aggregates into
+``BENCH_attention.json`` at the repo root so the perf trajectory is
+diffable across PRs.
+
+Off TPU the Pallas kernels run in interpret mode, so their wall time is
+meaningless and recorded only when explicitly requested (``--time-interpret``
+/ the CI smoke run, flagged ``"interpret": true``); the HBM-byte columns are
+analytic and platform-independent (the paper's Fig. 6 memory-access
+reduction on the serving hot path), with XLA ``cost_analysis`` bytes as
+evidence that the dequantize path really materializes the wide copy.
 
 ``python -m benchmarks.bench_attention [--time-interpret]`` for a
 standalone table; ``report()`` feeds the benchmarks/run.py CSV.
@@ -22,12 +27,16 @@ import numpy as np
 
 from repro.compat import cost_analysis
 from repro.core.formats import PAPER_FORMATS
+from repro.core.policy import transprecision_policy
 from repro.core.qtensor import encode
-from repro.kernels.flash_attention import (attention_hbm_bytes, flash_decode,
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import (attention_hbm_bytes,
                                            flash_decode_reference)
 
 # decode_32k-flavoured cell scaled for CPU: 4 seqs x 4k tokens, 8 KV heads
 B, S, H, G, DH = 4, 4096, 8, 4, 64
+
+IMPLS = ("xla", "flash_pallas", "flash_shmap+flash_pallas")
 
 
 def _time_us(fn, *args, reps=3):
@@ -38,41 +47,89 @@ def _time_us(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def report(time_interpret: bool = False) -> list:
-    rows = []
+def collect(b=B, s=S, h=H, g=G, dh=DH, *, impls=IMPLS,
+            time_interpret: bool = False) -> list:
+    """Benchmark entries (dicts) for every (format x backend) cell."""
+    # the model-level backends register themselves at attention import
+    import repro.models.attention  # noqa: F401
+
+    entries = []
+    shape = f"B{b}_S{s}_H{h}_G{g}_dh{dh}"
     rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.normal(size=(B, H, G, DH)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(B, S, H, DH)), jnp.float32)
-    v = jnp.asarray(rng.normal(size=(B, S, H, DH)), jnp.float32)
-    lengths = jnp.full((B,), S, jnp.int32)
-    bytes_f32 = attention_hbm_bytes(B, S, H, DH, None, g=G)
+    q = jnp.asarray(rng.normal(size=(b, h, g, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+    bytes_f32 = attention_hbm_bytes(b, s, h, dh, None, g=g)
+    on_tpu = jax.default_backend() == "tpu"
 
     for fmt in PAPER_FORMATS:
         kp, vp = encode(k, fmt), encode(v, fmt)
+        bytes_packed = attention_hbm_bytes(b, s, h, dh, fmt, g=g)
+        pol = transprecision_policy(kv_fmt=fmt)
+        ck = jax.lax.bitcast_convert_type(kp, fmt.native_dtype)
+        cv = jax.lax.bitcast_convert_type(vp, fmt.native_dtype)
 
-        ref = jax.jit(lambda qq, kk, vv, ll, fmt=fmt:
-                      flash_decode_reference(qq, kk, vv, fmt, ll))
-        us_ref = _time_us(ref, q, kp, vp, lengths)
-        cost = cost_analysis(ref.lower(q, kp, vp, lengths).compile())
-        xla_bytes = int(cost.get("bytes accessed", 0))
+        for impl in impls:
+            entry = {
+                "bench": "attention_decode",
+                "shape": shape,
+                "impl": impl,
+                "fmt": fmt.name,
+                "hbm_bytes": bytes_f32 if impl == "xla" else bytes_packed,
+                "bytes_vs_f32": round(
+                    bytes_f32 / (bytes_f32 if impl == "xla"
+                                 else bytes_packed), 2),
+                "ms_per_step": None,
+                "interpret": (not on_tpu) and impl != "xla",
+            }
+            if impl == "xla":
+                ref = jax.jit(lambda qq, kk, vv, ll, fmt=fmt:
+                              flash_decode_reference(qq, kk, vv, fmt, ll))
+                entry["ms_per_step"] = round(
+                    _time_us(ref, q, kp, vp, lengths) / 1e3, 3)
+                cost = cost_analysis(ref.lower(q, kp, vp, lengths).compile())
+                entry["xla_bytes_accessed"] = int(
+                    cost.get("bytes accessed", 0))
+            elif on_tpu or time_interpret:
+                fn = dispatch.resolve_decode(impl)
+                us = _time_us(
+                    lambda qq, kk, vv, ll, fn=fn, pol=pol:
+                    fn(qq, kk, vv, ll, scale=float(1 / np.sqrt(dh)),
+                       policy=pol), q, ck, cv, lengths, reps=1)
+                entry["ms_per_step"] = round(us / 1e3, 3)
+            entries.append(entry)
+    return entries
 
-        bytes_packed = attention_hbm_bytes(B, S, H, DH, fmt, g=G)
-        ratio = bytes_f32 / bytes_packed
-        derived = (f"kv_hbm_bytes={bytes_packed}"
-                   f";f32_hbm_bytes={bytes_f32}"
-                   f";bytes_ratio={ratio:.2f}"
-                   f";xla_dequant_bytes_accessed={xla_bytes}")
-        if time_interpret:
-            us_fl = _time_us(
-                lambda qq, kk, vv, ll, fmt=fmt:
-                flash_decode(qq, kk, vv, fmt, ll), q, kp, vp, lengths, reps=1)
-            derived += f";interpret_us={us_fl:.0f}"
-        rows.append((f"attn_decode_{fmt.name}", us_ref, derived))
+
+def report(time_interpret: bool = False, entries=None) -> list:
+    """Legacy CSV rows (name, us_per_call, derived) from collect()."""
+    if entries is None:
+        entries = collect(time_interpret=time_interpret)
+    by_fmt = {}
+    for e in entries:
+        by_fmt.setdefault(e["fmt"], {})[e["impl"]] = e
+    rows = []
+    for fmt_name, impls in by_fmt.items():
+        xla = impls.get("xla")
+        if xla is None:
+            continue
+        packed = impls.get("flash_pallas", xla)
+        derived = (f"kv_hbm_bytes={packed['hbm_bytes']}"
+                   f";f32_hbm_bytes={xla['hbm_bytes']}"
+                   f";bytes_ratio={packed['bytes_vs_f32']:.2f}"
+                   f";xla_dequant_bytes_accessed="
+                   f"{xla.get('xla_bytes_accessed', 0)}")
+        if packed.get("ms_per_step") is not None and packed is not xla:
+            derived += f";interpret_us={packed['ms_per_step'] * 1e3:.0f}"
+        rows.append((f"attn_decode_{fmt_name}",
+                     (xla["ms_per_step"] or 0.0) * 1e3, derived))
     return rows
 
 
 def main():
-    rows = report(time_interpret="--time-interpret" in sys.argv)
+    entries = collect(time_interpret="--time-interpret" in sys.argv)
+    rows = report(entries=entries)
     print(f"decode step: B={B} S={S} n_kv={H} G={G} dh={DH} "
           f"(q/scores f32; cache packed)")
     print(f"{'kv format':<14} {'xla decode us':>14} {'kv HBM bytes':>14} "

@@ -1,7 +1,12 @@
-"""Kernel microbenchmarks: wall time of the pure-jnp reference path (the
-Pallas kernels run in interpret mode on CPU -- their timing is meaningless
-here; correctness is asserted in tests, TPU timing comes from the roofline).
-Derived column: model-side bytes saved by packed storage."""
+"""Kernel microbenchmarks: cast / pack / transprecision matmul.
+
+``collect()`` produces schema-stable entries (aggregated by
+``benchmarks/run.py`` into ``BENCH_kernels.json``): the pure-jnp reference
+path is timed (the honest CPU number), and with ``use_pallas`` the Pallas
+kernels are also *executed* -- in interpret mode off TPU, so their wall
+time is meaningless there (flagged ``"interpret": true``) but the CI smoke
+run exercises the kernel bodies on every push.  Derived column: model-side
+bytes saved by packed storage."""
 import time
 
 import jax
@@ -10,35 +15,73 @@ import numpy as np
 
 from repro.core.formats import BINARY8, BINARY16, BINARY16ALT
 from repro.core.qtensor import encode
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def report() -> list:
-    rows = []
-    x = jnp.asarray(np.random.default_rng(0).normal(size=(1024, 1024)),
+def collect(n_cast: int = 1024, n_mm: int = 512, *,
+            use_pallas: bool = False) -> list:
+    """Benchmark entries (dicts) per (kernel x format x impl)."""
+    entries = []
+    on_tpu = jax.default_backend() == "tpu"
+    impls = [("ref", False)] + ([("pallas", True)] if use_pallas else [])
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(n_cast, n_cast)),
                     jnp.float32)
     for fmt in (BINARY8, BINARY16, BINARY16ALT):
-        f = jax.jit(lambda v, fmt=fmt: ref.flexfloat_cast_ref(v, fmt))
-        us = _time(f, x)
-        rows.append((f"cast_{fmt.name}", us,
-                     f"bytes_ratio={fmt.container_dtype.dtype.itemsize/4}"))
-    a = jnp.asarray(np.random.default_rng(1).normal(size=(512, 512)),
+        for impl, pallas in impls:
+            f = jax.jit(lambda v, fmt=fmt, pallas=pallas:
+                        ops.cast(v, fmt, use_pallas=pallas))
+            us = _time(f, x, reps=1 if pallas else 5)
+            entries.append({
+                "bench": "cast", "shape": f"{n_cast}x{n_cast}",
+                "impl": impl, "fmt": fmt.name,
+                "ms_per_step": round(us / 1e3, 3),
+                "hbm_bytes": x.size * (4 + fmt.container_dtype.dtype.itemsize),
+                "bytes_vs_f32": round(
+                    4 / fmt.container_dtype.dtype.itemsize, 2),
+                "interpret": pallas and not on_tpu,
+            })
+
+    a = jnp.asarray(np.random.default_rng(1).normal(size=(n_mm, n_mm)),
                     jnp.float32)
-    b = jnp.asarray(np.random.default_rng(2).normal(size=(512, 512)),
+    b = jnp.asarray(np.random.default_rng(2).normal(size=(n_mm, n_mm)),
                     jnp.float32)
     for fmt in (BINARY8, BINARY16ALT):
         ap, bp = encode(a, fmt), encode(b, fmt)
-        f = jax.jit(lambda u, v, fmt=fmt: ref.qmatmul_ref(u, v, fmt, fmt))
-        us = _time(f, ap, bp)
-        gflops = 2 * 512**3 / (us * 1e-6) / 1e9
-        rows.append((f"qmatmul_{fmt.name}", us, f"gflops={gflops:.1f}"))
+        for impl, pallas in impls:
+            f = jax.jit(lambda u, v, fmt=fmt, pallas=pallas:
+                        ops.matmul(u, v, fmt, fmt, use_pallas=pallas))
+            us = _time(f, ap, bp, reps=1 if pallas else 5)
+            entries.append({
+                "bench": "qmatmul", "shape": f"{n_mm}x{n_mm}x{n_mm}",
+                "impl": impl, "fmt": fmt.name,
+                "ms_per_step": round(us / 1e3, 3),
+                "hbm_bytes": (ap.nbytes + bp.nbytes + 4 * n_mm * n_mm),
+                "gflops": round(2 * n_mm**3 / (us * 1e-6) / 1e9, 1),
+                "interpret": pallas and not on_tpu,
+            })
+    return entries
+
+
+def report(entries=None) -> list:
+    """Legacy CSV rows (name, us_per_call, derived) from collect()."""
+    rows = []
+    for e in (collect() if entries is None else entries):
+        if e["impl"] != "ref":  # CSV keeps the honest (non-interpret) timing
+            continue
+        us = e["ms_per_step"] * 1e3
+        if e["bench"] == "cast":
+            rows.append((f"cast_{e['fmt']}", us,
+                         f"bytes_ratio={1 / e['bytes_vs_f32']}"))
+        else:
+            rows.append((f"qmatmul_{e['fmt']}", us,
+                         f"gflops={e['gflops']:.1f}"))
     return rows

@@ -1,22 +1,106 @@
-"""Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (plus the figure tables to stderr-
-style stdout above the CSV block)."""
+"""Benchmark entry point: one function per paper table/figure, plus the
+schema-stable perf-trajectory files.
+
+Every run aggregates the attention and kernel benches into
+``BENCH_attention.json`` / ``BENCH_kernels.json`` at the repo root (schema:
+``{"schema": 1, "timestamp": <--timestamp or null>, "entries": [...]}`` with
+entries carrying shape / impl / fmt / ms_per_step / hbm_bytes), so future
+PRs can diff the trajectory instead of re-deriving it from logs.  Pass the
+timestamp in via ``--timestamp`` (never sampled in-process) so identical
+code produces byte-identical files.
+
+``--smoke`` runs only those two benches on tiny shapes with the Pallas
+kernels executed (interpret mode off TPU) -- the CI step that exercises the
+kernel bodies on every push; ``--quick`` shrinks the paper-figure sweep.
+"""
+import argparse
+import json
+import os
 import sys
 
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:  # `python benchmarks/run.py` from anywhere
+    sys.path.insert(0, ROOT)
 
-def main() -> None:
+
+def write_bench_json(name: str, entries: list, timestamp, out_dir: str):
+    """Schema-stable, diffable aggregate: sorted keys, stable entry order."""
+    entries = sorted(entries, key=lambda e: (e["bench"], e["impl"],
+                                             e.get("fmt", ""), e["shape"]))
+    doc = {"schema": 1, "timestamp": timestamp, "entries": entries}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {path} ({len(entries)} entries)")
+
+
+def run_smoke(args) -> None:
+    """Tiny-shape pass that executes the Pallas-interpret kernels and the
+    composed attention backend -- fast enough for every CI push.
+
+    Smoke entries are NOT the perf trajectory: without an explicit
+    --out-dir they land in results/bench_smoke/, never clobbering the
+    committed full-shape BENCH_*.json at the repo root."""
+    from benchmarks import bench_attention, bench_kernels
+
+    out_dir = args.out_dir or os.path.join(ROOT, "results", "bench_smoke")
+    attn = bench_attention.collect(2, 256, 2, 2, 32, time_interpret=True)
+    kern = bench_kernels.collect(256, 128, use_pallas=True)
+    write_bench_json("attention", attn, args.timestamp, out_dir)
+    write_bench_json("kernels", kern, args.timestamp, out_dir)
+    # hard fail if any backend cell silently vanished from the sweep
+    impls = {e["impl"] for e in attn}
+    missing = set(bench_attention.IMPLS) - impls
+    assert not missing, f"attention bench lost backends: {missing}"
+    print("[bench] smoke ok")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the paper-figure sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, kernel+attention benches only, "
+                         "Pallas kernels executed (CI smoke)")
+    ap.add_argument("--timestamp", default=None,
+                    help="timestamp string recorded in the BENCH_*.json "
+                         "files (passed in, never sampled, so reruns diff "
+                         "cleanly)")
+    ap.add_argument("--time-interpret", action="store_true",
+                    help="also time the interpret-mode kernels (meaningless "
+                         "wall time off TPU; flagged in the entries)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for BENCH_*.json (default: repo root "
+                         "for the full run, results/bench_smoke/ for "
+                         "--smoke so smoke data never clobbers the "
+                         "committed trajectory)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        run_smoke(args)
+        return
+
     from benchmarks import (bench_attention, bench_fig4, bench_fig5,
                             bench_fig6, bench_fig7, bench_kernels, bench_llm,
                             bench_table1, paper_results)
 
-    quick = "--quick" in sys.argv
-    cache = paper_results.compute(quick=quick)
+    cache = paper_results.compute(quick=args.quick)
 
     bench_table1.report(cache)
-    fig4 = bench_fig4.report(cache)
+    bench_fig4.report(cache)
     bench_fig5.report(cache)
     fig6 = bench_fig6.report(cache)
     fig7 = bench_fig7.report(cache)
+
+    kern_entries = bench_kernels.collect(
+        use_pallas=args.time_interpret or jax_on_tpu())
+    attn_entries = bench_attention.collect(
+        time_interpret=args.time_interpret)
+    out_dir = args.out_dir or ROOT
+    write_bench_json("attention", attn_entries, args.timestamp, out_dir)
+    write_bench_json("kernels", kern_entries, args.timestamp, out_dir)
 
     print("\n== CSV ==")
     print("name,us_per_call,derived")
@@ -25,19 +109,17 @@ def main() -> None:
               f"mem={rel['mem_accesses']:.3f};cycles={rel['cycles']:.3f}")
     for (app, eps), e in fig7.items():
         print(f"fig7_{app}_eps{eps:g},0,energy={e:.3f}")
-    for name, us, derived in bench_kernels.report():
+    for name, us, derived in bench_kernels.report(entries=kern_entries):
         print(f"{name},{us:.1f},{derived}")
-    for name, us, derived in bench_attention.report():
+    for name, us, derived in bench_attention.report(entries=attn_entries):
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_llm.report():
         print(f"{name},{us:.1f},{derived}")
 
     # roofline summary from the dry-run sweep, if present
     import glob
-    import json
-    import os
-    files = sorted(glob.glob(os.path.join(
-        os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
+    files = sorted(glob.glob(os.path.join(ROOT, "results", "dryrun",
+                                          "*.json")))
     for fn in files:
         with open(fn) as f:
             d = json.load(f)
@@ -49,5 +131,11 @@ def main() -> None:
               f"useful={r['useful_flops_ratio']:.3f}")
 
 
+def jax_on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
 if __name__ == "__main__":
-    main()
+    # legacy spelling: `python benchmarks/run.py --quick`
+    main(sys.argv[1:])

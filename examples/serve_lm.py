@@ -1,8 +1,16 @@
 """Batched serving example: continuous batching with binary8 KV caches.
 
 Run: PYTHONPATH=src python examples/serve_lm.py
+
+The attention backend is any registry spelling (kernels/dispatch.py); the
+composed ``flash_shmap+flash_pallas`` shown below shard_maps the fused
+packed-KV kernel over the cache's sequence axis when a mesh with a "model"
+axis is ambient, and transparently falls back to the plain fused kernel
+(and, off-TPU, to interpret mode) otherwise.  Leave ``--decode-impl`` off
+to take the serving default: the fused path whenever a TPU is present.
 """
 from repro.launch.serve import main
 
 main(["--arch", "llama3-8b", "--reduced", "--requests", "12",
-      "--slots", "4", "--max-new", "12", "--policy", "transprecision"])
+      "--slots", "4", "--max-new", "12", "--policy", "transprecision",
+      "--decode-impl", "flash_shmap+flash_pallas"])

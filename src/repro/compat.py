@@ -17,7 +17,12 @@ Resolved symbols:
 
 ``shard_map``
     ``jax.shard_map`` (new) or ``jax.experimental.shard_map.shard_map``.
-    Both accept ``(f, mesh=..., in_specs=..., out_specs=...)``.
+    Both accept ``(f, mesh=..., in_specs=..., out_specs=...)``.  The
+    replication-check kwarg was renamed across versions (``check_rep`` ->
+    ``check_vma``); callers always pass ``check_rep`` and this module
+    translates to whatever the installed version accepts (needed to run
+    ``pallas_call`` bodies inside shard_map, which have no replication
+    rule).
 
 ``get_abstract_mesh()``
     Newer JAX returns the ambient abstract mesh set by
@@ -49,10 +54,24 @@ CompilerParams = getattr(_pltpu, "CompilerParams", None)
 if CompilerParams is None:
     CompilerParams = _pltpu.TPUCompilerParams
 
-# -- shard_map graduated from jax.experimental to the top-level namespace
-shard_map = getattr(jax, "shard_map", None)
-if shard_map is None:
-    from jax.experimental.shard_map import shard_map  # noqa: F811
+# -- shard_map graduated from jax.experimental to the top-level namespace;
+#    its replication-check kwarg was renamed check_rep -> check_vma
+_shard_map_raw = getattr(jax, "shard_map", None)
+if _shard_map_raw is None:
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+
+import inspect as _inspect
+
+_SHARD_MAP_CHECK_KW = (
+    "check_rep"
+    if "check_rep" in _inspect.signature(_shard_map_raw).parameters
+    else "check_vma")
+
+
+def shard_map(f, **kw):
+    if "check_rep" in kw and _SHARD_MAP_CHECK_KW != "check_rep":
+        kw[_SHARD_MAP_CHECK_KW] = kw.pop("check_rep")
+    return _shard_map_raw(f, **kw)
 
 
 def get_abstract_mesh():

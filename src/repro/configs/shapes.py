@@ -20,7 +20,14 @@ class ShapeSpec:
     kind: str          # "train" | "prefill" | "decode"
     seq_len: int
     global_batch: int
-    decode_impl: Optional[str] = None  # "xla" | "flash_pallas" | "flash_shmap"
+    # attention backend pinned by the cell: any registry spelling
+    # (kernels/dispatch.py), e.g. "flash_pallas" or the composed
+    # "flash_shmap+flash_pallas"; None = model default
+    decode_impl: Optional[str] = None
+
+    def __post_init__(self):
+        from repro.kernels.dispatch import validate_impl
+        validate_impl(self.decode_impl, what=f"shape {self.name} decode_impl")
 
     def cfg_overrides(self) -> dict:
         """Model-config overrides this shape pins (merged by the dry-run)."""
@@ -37,10 +44,14 @@ SHAPES = {
 
 # Fused-kernel serving variants (the tentpole path of kernels/
 # flash_attention.py): same traffic as decode_32k, attention forced through
-# the packed-KV Pallas kernel.
+# the packed-KV Pallas kernel -- single-chip, and composed with sequence
+# sharding over the mesh's model axis (multi-chip serving).
 FLASH_SHAPES = {
     "decode_32k_flash": ShapeSpec("decode_32k_flash", "decode", 32768, 128,
                                   decode_impl="flash_pallas"),
+    "decode_32k_flash_shmap": ShapeSpec(
+        "decode_32k_flash_shmap", "decode", 32768, 128,
+        decode_impl="flash_shmap+flash_pallas"),
 }
 
 ALL_SHAPES = {**SHAPES, **FLASH_SHAPES}

@@ -22,34 +22,21 @@ subnormal range (|x| < 2^emin_t):
 Inf/NaN: passed through (NaN canonicalized, sign preserved).
 
 Bit-exactness is validated exhaustively against native float8_e5m2 / float16 /
-bfloat16 casts in tests/test_formats.py.
+bfloat16 casts in tests/test_formats.py.  The rounding bit manipulation
+itself lives in ``repro.kernels.codec.quantize_tile`` -- the single
+in-register codec shared with every Pallas kernel body; this module is the
+FlexFloat-semantics API on top of it.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
 
-from .formats import FpFormat, format_constants, get_format
+from repro.kernels.codec import quantize_tile
 
-_U32 = jnp.uint32
-_SIGN = np.uint32(0x8000_0000)
-_MAG = np.uint32(0x7FFF_FFFF)
-_EXP_F32 = np.uint32(0x7F80_0000)
-_QNAN = np.uint32(0x7FC0_0000)
-_INF = np.uint32(0x7F80_0000)
-
-
-def _bits(x):
-    return lax.bitcast_convert_type(x, _U32)
-
-
-def _float(u):
-    return lax.bitcast_convert_type(u, jnp.float32)
+from .formats import FpFormat, get_format
 
 
 def quantize(x: jax.Array, fmt: Union[FpFormat, str], *,
@@ -74,72 +61,12 @@ def quantize(x: jax.Array, fmt: Union[FpFormat, str], *,
 def quantize_math(x, e, m, saturate=False, key=None):
     """The raw quantization math (pure jnp lane ops, unjitted).
 
-    Shared verbatim by the jitted wrapper below and by the Pallas kernel body
-    in ``repro.kernels.flexfloat_cast`` -- one source of truth for the bit
-    manipulation, validated exhaustively against native casts.
+    A pass-through to ``repro.kernels.codec.quantize_tile`` -- one source of
+    truth for the rounding bit manipulation, shared verbatim with the Pallas
+    kernel body in ``repro.kernels.flexfloat_cast`` and validated
+    exhaustively against native casts.
     """
-    c = format_constants(e, m)
-    u = _bits(x)
-    sign = u & _SIGN
-    mag = u & _MAG
-    ef = (mag >> 23).astype(jnp.int32)  # biased f32 exponent, 0..255
-    is_naninf = ef == 255
-    is_nan = is_naninf & ((mag & ~_EXP_F32) != 0)
-
-    # ---- normal path: integer RNE (or stochastic) at cut `shift` ----------
-    shift = c["shift"]
-    if shift > 0:
-        if key is None:
-            lsb = (mag >> shift) & np.uint32(1)
-            rnd = np.uint32((1 << (shift - 1)) - 1) + lsb
-        else:
-            rnd = jax.random.bits(key, mag.shape, jnp.uint32) >> (32 - shift)
-        mag_r = (mag + rnd) & np.uint32(~((1 << shift) - 1) & 0xFFFFFFFF)
-    else:
-        mag_r = mag
-    ovf = (mag_r >> 23).astype(jnp.int32) > (c["emax"] + 127)
-    sat_bits = _bits(c["max_normal"])
-    mag_r = jnp.where(ovf, sat_bits if saturate else _INF, mag_r)
-    normal = _float(sign | mag_r)
-
-    # ---- subnormal path: pure-integer RNE to quantum 2^qe -----------------
-    # No FP arithmetic here: XLA CPU runs with DAZ/FTZ, so f32-denormal
-    # operands/results of adds and muls are flushed to zero (verified), while
-    # bit manipulation is exact.  value = sig * 2^exp2 with
-    #   sig  = 2^23 + M (normal input)  |  M (f32-denormal input)
-    #   exp2 = max(ef, 1) - 150
-    # and we RNE-shift sig right by S = qe - exp2 (in [1, 25] after clamping;
-    # S >= 25 provably yields 0 because sig < 2^24).
-    qe = c["qe"]
-    mant_f = mag & np.uint32(0x7F_FFFF)
-    is_norm_in = ef > 0
-    sig = jnp.where(is_norm_in, mant_f | np.uint32(1 << 23), mant_f)
-    exp2 = jnp.maximum(ef, 1) - 150
-    s_amt = jnp.clip(qe - exp2, 1, 25).astype(_U32)
-    half = (np.uint32(1) << (s_amt - 1))
-    rem = sig & ((np.uint32(1) << s_amt) - 1)
-    out_i = sig >> s_amt
-    round_up = (rem > half) | ((rem == half) & ((out_i & 1) == 1))
-    out_i = out_i + round_up.astype(_U32)
-    # reconstruct |out_i * 2^qe| as f32 bits without FP math:
-    #   normal result  (out_i >= 2^(-126-qe)): bits(float(out_i)) + (qe << 23)
-    #   denormal result: out_i << (qe + 149)
-    thresh = np.uint32(1) << max(0, min(-126 - qe, 23))
-    as_f = out_i.astype(jnp.float32)  # exact: out_i <= 2^23
-    norm_bits = (_bits(as_f).astype(jnp.int32) + np.int32(qe << 23)
-                 ).astype(_U32)
-    den_bits = out_i << np.uint32(max(qe + 149, 0))
-    sub_mag_bits = jnp.where(out_i >= thresh, norm_bits, den_bits)
-    sub_mag_bits = jnp.where(out_i == 0, np.uint32(0), sub_mag_bits)
-    sub = _float(sign | sub_mag_bits)  # reapply sign (handles +/-0)
-
-    use_sub = (ef - 127) < c["emin"]
-    out = jnp.where(use_sub, sub, normal)
-
-    # ---- Inf / NaN ---------------------------------------------------------
-    special = _float(sign | jnp.where(is_nan, _QNAN, _INF))
-    out = jnp.where(is_naninf, special, out)
-    return out
+    return quantize_tile(x, e, m, saturate, key)
 
 
 _quantize_f32_jit = jax.jit(quantize_math, static_argnums=(1, 2, 3))

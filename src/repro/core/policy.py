@@ -34,6 +34,8 @@ from typing import Mapping, Optional
 
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import legal_impls, validate_impl
+
 from .flexfloat import quantize
 from .formats import (BINARY8, BINARY16ALT, BINARY32, FpFormat, get_format)
 
@@ -44,7 +46,10 @@ DEFAULT_ROLES = (
 )
 
 
-DECODE_IMPLS = (None, "xla", "flash_pallas", "flash_shmap")
+# Every legal attention-backend spelling (None = defer to the model config).
+# Composed spellings wrap a base backend, e.g. "flash_shmap+flash_pallas"
+# shard_maps the fused packed-KV kernel over the cache's sequence axis.
+DECODE_IMPLS = (None,) + legal_impls()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +67,9 @@ class PrecisionPolicy:
     def __post_init__(self):
         if self.mode not in ("native", "emulated"):
             raise ValueError(self.mode)
-        if self.decode_impl not in DECODE_IMPLS:
-            raise ValueError(
-                f"decode_impl must be one of {DECODE_IMPLS}, "
-                f"got {self.decode_impl!r}")
+        # fail at construction time with the legal spellings -- an unknown
+        # string must not silently fall through to the XLA path
+        validate_impl(self.decode_impl, what="PrecisionPolicy.decode_impl")
         if self.mode == "native":
             for role, fmt in self.formats.items():
                 if get_format(fmt).native_dtype is None:

@@ -11,6 +11,10 @@ For the four paper formats the container coincides with a native ML dtype
 (e5m2/f16/bf16/f32), so on real hardware a QTensor is free to reinterpret its
 payload as the native dtype and feed the MXU directly (paper flow step 5);
 ``to_native``/``from_native`` implement that path.
+
+The bit manipulation itself lives in ``repro.kernels.codec`` (the single
+in-register codec shared with every Pallas kernel body); this module is the
+storage-layer API on top of it.
 """
 from __future__ import annotations
 
@@ -21,13 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .flexfloat import quantize
-from .formats import FpFormat, format_constants, get_format
+from repro.kernels.codec import (decode_tile, encode_tile, pack_word_tile,
+                                 unpack_word_tile)
 
-_U32 = jnp.uint32
-_SIGN = np.uint32(0x8000_0000)
-_MAG = np.uint32(0x7FFF_FFFF)
-_EXP_F32 = np.uint32(0x7F80_0000)
+from .flexfloat import quantize
+from .formats import FpFormat, get_format
 
 
 def encode(x: jax.Array, fmt: Union[FpFormat, str], *,
@@ -40,85 +42,12 @@ def encode(x: jax.Array, fmt: Union[FpFormat, str], *,
     fmt = get_format(fmt)
     if not assume_quantized:
         x = quantize(x, fmt)
-    x = jnp.asarray(x, jnp.float32)
-    if fmt.is_binary32:
-        return _bits32(x)
-
-    c = format_constants(fmt.e, fmt.m)
-    u = _bits32(x)
-    sign_t = (u >> 31).astype(_U32) << (fmt.e + fmt.m)
-    mag = u & _MAG
-    ef = (mag >> 23).astype(jnp.int32)
-    mant_f = mag & np.uint32(0x7F_FFFF)
-
-    # normal in target
-    exp_t = (ef - 127 + c["bias"]).astype(_U32)
-    mant_t = mant_f >> (23 - fmt.m)
-    normal = (exp_t << fmt.m) | mant_t
-
-    # denormal in target: mantissa field = |x| / 2^qe, an exact small integer.
-    # Pure-integer extraction (XLA CPU flushes denormal FP operands, so no FP
-    # math): |x| = sig * 2^exp2, already a multiple of 2^qe by construction,
-    # hence mant = sig >> (qe - exp2) exactly.
-    sig = jnp.where(ef > 0, mant_f | np.uint32(1 << 23), mant_f)
-    exp2 = jnp.maximum(ef, 1) - 150
-    s_amt = jnp.clip(c["qe"] - exp2, 0, 31).astype(_U32)
-    denorm = sig >> s_amt
-
-    is_naninf = ef == 255
-    is_nan = is_naninf & (mant_f != 0)
-    special = (np.uint32((1 << fmt.e) - 1) << fmt.m) | jnp.where(
-        is_nan, np.uint32(1 << (fmt.m - 1)), np.uint32(0))
-
-    use_sub = (ef - 127) < c["emin"]
-    field = jnp.where(is_naninf, special, jnp.where(use_sub, denorm, normal))
-    return (sign_t | field).astype(fmt.container_dtype)
+    return encode_tile(x, fmt)
 
 
 def decode(bits: jax.Array, fmt: Union[FpFormat, str]) -> jax.Array:
     """Exact expansion of packed (e, m) bit fields to float32."""
-    fmt = get_format(fmt)
-    bits = jnp.asarray(bits)
-    if fmt.is_binary32:
-        return lax.bitcast_convert_type(bits.astype(_U32), jnp.float32)
-
-    c = format_constants(fmt.e, fmt.m)
-    b = bits.astype(_U32)
-    sign = ((b >> (fmt.e + fmt.m)) & np.uint32(1)) << 31
-    exp_t = ((b >> fmt.m) & np.uint32((1 << fmt.e) - 1)).astype(jnp.int32)
-    mant_t = b & np.uint32(fmt.mant_mask)
-
-    # normal: rebias into f32
-    normal = ((exp_t - c["bias"] + 127).astype(_U32) << 23) | (
-        mant_t << (23 - fmt.m))
-
-    # denormal: mant * 2^qe, reconstructed without FP math (FTZ-safe):
-    #   f32-normal result: bits(float(mant)) + (qe << 23)
-    #   f32-denormal result: mant << (qe + 149)
-    qe = c["qe"]
-    thresh = np.uint32(1) << max(0, min(-126 - qe, 23))
-    norm_bits = (_bits32(mant_t.astype(jnp.float32)).astype(jnp.int32)
-                 + np.int32(qe << 23)).astype(_U32)
-    den_bits = mant_t << np.uint32(max(qe + 149, 0))
-    denorm = jnp.where(mant_t >= thresh, norm_bits, den_bits)
-    denorm = jnp.where(mant_t == 0, np.uint32(0), denorm)
-
-    # Inf/NaN: max exponent
-    is_special = exp_t == (1 << fmt.e) - 1
-    special = _EXP_F32 | jnp.where(mant_t != 0, np.uint32(0x40_0000),
-                                   np.uint32(0))
-
-    mag = jnp.where(is_special, special,
-                    jnp.where(exp_t == 0, denorm, normal))
-    return lax.bitcast_convert_type(sign | mag, jnp.float32)
-
-
-def _bits32(x):
-    return lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), _U32)
-
-
-def _float32(u):
-    return lax.bitcast_convert_type(u, jnp.float32)
+    return decode_tile(bits, get_format(fmt))
 
 
 # ---------------------------------------------------------------------------
@@ -188,24 +117,9 @@ class QTensor:
 def pack_words(payload: jax.Array) -> jax.Array:
     """Pack a uint8/uint16 payload into uint32 words along the last axis --
     the FPU's 4x8b / 2x16b word layout.  Requires divisibility."""
-    item = payload.dtype.itemsize
-    if item == 4:
-        return payload.astype(_U32)
-    lanes = 4 // item
-    *lead, n = payload.shape
-    assert n % lanes == 0, (n, lanes)
-    grouped = payload.reshape(*lead, n // lanes, lanes).astype(_U32)
-    shifts = (jnp.arange(lanes, dtype=_U32) * np.uint32(8 * item))
-    return jnp.sum(grouped << shifts, axis=-1, dtype=_U32)
+    return pack_word_tile(payload)
 
 
 def unpack_words(words: jax.Array, dtype) -> jax.Array:
     """Inverse of :func:`pack_words`."""
-    item = jnp.dtype(dtype).itemsize
-    if item == 4:
-        return words.astype(dtype)
-    lanes = 4 // item
-    shifts = (jnp.arange(lanes, dtype=_U32) * np.uint32(8 * item))
-    parts = (words[..., None] >> shifts) & np.uint32((1 << (8 * item)) - 1)
-    *lead, n, _ = parts.shape
-    return parts.reshape(*lead, n * lanes).astype(dtype)
+    return unpack_word_tile(words, dtype)

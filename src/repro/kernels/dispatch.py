@@ -1,0 +1,243 @@
+"""Attention-backend registry: one dispatch point for every decode/prefill
+implementation, with composable wrappers.
+
+PR 1 bolted the fused packed-KV kernel onto ``models/attention.py`` behind a
+string either/or; this module replaces that with a registry so backends
+compose instead of excluding each other:
+
+* **base backends** implement single-token decode over a KV cache
+  (``"xla"`` -- the dequantize oracle/fallback; ``"flash_pallas"`` -- the
+  fused packed-KV Pallas kernel) and causal prefill.
+* **wrapper backends** transform another backend.  ``"flash_shmap"``
+  ``shard_map``s any inner decode backend over the cache's sequence axis:
+  every device runs the inner backend on its 1/n_model shard of the cache
+  and the per-shard online-softmax partials (max / sum / weighted-V) are
+  combined with three tiny collectives -- exact softmax attention, so
+  ``flash_shmap(flash_pallas)`` streams the *packed* payload through the
+  fused kernel *on every chip in parallel*, the near-sensor-cluster win
+  (arXiv 2008.12243) applied to serving.
+
+Spellings (``decode_impl`` on configs, policies, shapes and CLI flags)
+are ``+``-compositions read left to right, wrapper first::
+
+    "xla"                        # dequantize path
+    "flash_pallas"               # fused packed-KV kernel
+    "flash_shmap"                # == "flash_shmap+xla"
+    "flash_shmap+xla"            # sequence-sharded dequantize path
+    "flash_shmap+flash_pallas"   # sharded fused kernel (multi-chip serving)
+
+``validate_impl`` is called at construction time by ``PrecisionPolicy``,
+``ModelConfig`` and ``ShapeSpec`` so an unknown spelling fails loudly with
+the legal list instead of silently falling through to the XLA path.
+
+Contracts (registered by ``models/attention.py`` at import)
+-----------------------------------------------------------
+decode backend::
+
+    fn(q, ck, cv, n_valid, *, scale, policy, return_residuals=False)
+      q:       (B, H, G, dh)  one query token per sequence (any float dtype)
+      ck, cv:  (B, S, H, dh)  KV cache in its storage dtype
+      n_valid: (B,) int32     valid cache slots per sequence
+      -> out (B, H, G, dh) float, or with residuals (out, m, l) where
+         m/l: (B, H, G) f32 running max / softmax sum (flash-attention
+         partials; ``out`` is already normalized by ``l``).
+
+prefill backend::
+
+    fn(qg, k, v, *, scale, policy, window, prefix_len, chunk, q_offset, fmt)
+      qg:   (B, Sq, H, G, dh); k/v: (B, Skv, H, dh) float, or packed
+      (e, m) containers when ``fmt`` is given (prefill-from-packed-cache).
+      -> out (B, Sq, H, G, dh)
+
+Wrappers apply to the decode path only; for prefill a composed spelling
+resolves to its base backend (sequence-sharded prefill is an open item).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+
+# ---------------------------------------------------------------------------
+# spelling declarations (static: usable for validation before any backend
+# module is imported)
+# ---------------------------------------------------------------------------
+
+BASE_IMPLS = ("xla", "flash_pallas")
+WRAPPER_IMPLS = ("flash_shmap",)
+DEFAULT_INNER = "xla"  # "flash_shmap" alone means flash_shmap+xla
+
+_DECODE: dict = {}
+_PREFILL: dict = {}
+_WRAPPERS: dict = {}
+
+
+def legal_impls() -> tuple:
+    """Every accepted ``decode_impl`` spelling."""
+    composed = tuple(f"{w}+{b}" for w in WRAPPER_IMPLS for b in BASE_IMPLS)
+    return BASE_IMPLS + WRAPPER_IMPLS + composed
+
+
+def canonicalize_impl(spec: str) -> tuple:
+    """``"flash_shmap"`` -> ``("flash_shmap", "xla")``; base -> ``(base,)``."""
+    parts = tuple(p.strip() for p in str(spec).split("+"))
+    if len(parts) == 1 and parts[0] in WRAPPER_IMPLS:
+        parts = (parts[0], DEFAULT_INNER)
+    return parts
+
+
+def validate_impl(spec: Optional[str], *, allow_none: bool = True,
+                  what: str = "decode_impl") -> Optional[str]:
+    """Check a spelling against the registry; raise an actionable error.
+
+    Returns ``spec`` unchanged so callers can validate in-line.
+    """
+    if spec is None:
+        if allow_none:
+            return None
+        raise ValueError(f"{what} must be set; legal values: {legal_impls()}")
+    parts = canonicalize_impl(spec)
+    ok = (parts[-1] in BASE_IMPLS
+          and all(p in WRAPPER_IMPLS for p in parts[:-1])
+          and len(set(parts)) == len(parts))
+    if not ok:
+        raise ValueError(
+            f"unknown {what} {spec!r}; legal spellings are "
+            f"{list(legal_impls())} (wrappers compose left-to-right, e.g. "
+            f"'flash_shmap+flash_pallas' = sequence-sharded fused kernel)")
+    return spec
+
+
+def default_serving_impl() -> Optional[str]:
+    """The serving default when no ``--decode-impl`` is given: the fused
+    packed-KV path whenever a TPU backend is present (where the Pallas
+    kernel is compiled, not interpreted), composed with sequence sharding
+    when the ambient mesh has a model axis.  ``None`` (model-config
+    default) elsewhere -- on CPU the XLA path is the honest baseline."""
+    if jax.default_backend() != "tpu":
+        return None
+    mesh = compat.get_abstract_mesh()
+    if mesh is not None and "model" in (mesh.axis_names or ()):
+        return "flash_shmap+flash_pallas"
+    return "flash_pallas"
+
+
+# ---------------------------------------------------------------------------
+# registration (decorators used by models/attention.py)
+# ---------------------------------------------------------------------------
+
+def register_decode(name: str) -> Callable:
+    assert name in BASE_IMPLS, name
+
+    def deco(fn):
+        _DECODE[name] = fn
+        return fn
+    return deco
+
+
+def register_prefill(name: str) -> Callable:
+    assert name in BASE_IMPLS, name
+
+    def deco(fn):
+        _PREFILL[name] = fn
+        return fn
+    return deco
+
+
+def register_wrapper(name: str) -> Callable:
+    assert name in WRAPPER_IMPLS, name
+
+    def deco(factory):
+        _WRAPPERS[name] = factory
+        return factory
+    return deco
+
+
+def resolve_decode(spec: str) -> Callable:
+    """Spelling -> decode callable (wrappers applied left to right)."""
+    parts = canonicalize_impl(validate_impl(spec, allow_none=False))
+    fn = _DECODE[parts[-1]]
+    for w in reversed(parts[:-1]):
+        fn = _WRAPPERS[w](fn)
+    return fn
+
+
+def resolve_prefill(spec: str) -> Callable:
+    """Spelling -> prefill callable (base backend of the composition)."""
+    parts = canonicalize_impl(validate_impl(spec, allow_none=False))
+    return _PREFILL[parts[-1]]
+
+
+# ---------------------------------------------------------------------------
+# the flash_shmap wrapper: shard_map any inner decode backend over the
+# cache's sequence axis and merge the per-shard online-softmax partials
+# ---------------------------------------------------------------------------
+
+@register_wrapper("flash_shmap")
+def _flash_shmap_factory(inner: Callable) -> Callable:
+    def wrapped(q, ck, cv, n_valid, *, scale, policy,
+                return_residuals: bool = False):
+        mesh = compat.get_abstract_mesh()
+        S = ck.shape[1]
+        usable = (not return_residuals
+                  and mesh is not None
+                  and "model" in (mesh.axis_names or ())
+                  and S % mesh.shape["model"] == 0)
+        if not usable:
+            # no mesh (single host / tests), indivisible cache, or nested
+            # wrapping: run the inner backend unsharded
+            return inner(q, ck, cv, n_valid, scale=scale, policy=policy,
+                         return_residuals=return_residuals)
+        return _shmap_decode(inner, mesh, q, ck, cv, n_valid, scale=scale,
+                             policy=policy)
+
+    return wrapped
+
+
+def _shmap_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
+    """The genuinely sharded branch of the flash_shmap wrapper (module-level
+    so tests can assert it was taken, not silently skipped by the mesh
+    fallback)."""
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    s_loc = ck.shape[1] // n_model
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    B = q.shape[0]
+    bspec = dp if B % max(
+        int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 else None
+
+    def local(q_b, k_b, v_b, nv_b):
+        # shard i owns cache slots [i*s_loc, (i+1)*s_loc): its local
+        # valid count under the global per-sequence prefix length
+        idx = jax.lax.axis_index("model")
+        local_n = jnp.clip(nv_b - idx * s_loc, 0, s_loc)
+        o, m, l = inner(q_b, k_b, v_b, local_n, scale=scale,
+                        policy=policy, return_residuals=True)
+        o = o.astype(jnp.float32)
+        # flash-attention merge of normalized partials: with
+        # w_i = exp(m_i - max_j m_j) * l_i the exact softmax output is
+        # sum_i w_i o_i / sum_i w_i (empty shards have l_i = 0).
+        gm = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - gm) * l
+        num = jax.lax.psum(o * w[..., None], "model")
+        den = jax.lax.psum(w, "model")
+        # explicit zero guard (a subnormal epsilon would be FTZ-flushed)
+        den = jnp.where(den > 0, den, 1.0)[..., None]
+        return num / den
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec)),
+        out_specs=P(bspec, None, None, None),
+        # pallas_call has no replication rule; the collectives above
+        # make the output replicated by construction
+        check_rep=False,
+    )(q, ck, cv, n_valid)

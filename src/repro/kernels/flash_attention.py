@@ -10,11 +10,16 @@ decode path dequantizes it to f32/bf16 *outside* the attention dot, so the
 materialized wide copy round-trips through HBM and the byte reduction never
 reaches the bandwidth-bound step.  These kernels read the packed
 binary8/binary16/binary16alt payloads directly from HBM, decode each VMEM
-tile in-register on the VPU via ``repro.core.qtensor.decode`` (the same bit
-math as ``qmatmul.py`` -- one source of truth, validated exhaustively
-against native casts), and compute online-softmax attention with f32
-accumulation.  HBM attention bytes drop by the full container ratio
-(4x for binary8, 2x for the 16-bit formats).
+tile in-register on the VPU via the shared codec
+(``repro.kernels.codec.decode_tile`` -- the same bit math as ``qmatmul.py``
+and ``core.qtensor``, one source of truth validated exhaustively against
+native casts), and compute online-softmax attention with f32 accumulation.
+HBM attention bytes drop by the full container ratio (4x for binary8, 2x
+for the 16-bit formats).
+
+Both decode entry points optionally return the flash partials (running max
+``m`` and softmax sum ``l``) so the ``flash_shmap`` wrapper backend in
+``kernels/dispatch.py`` can merge exact attention across sequence shards.
 
 Kernels
 -------
@@ -62,7 +67,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import CompilerParams
 from repro.core.formats import FpFormat, get_format
-from repro.core.qtensor import decode as _decode
+
+from .codec import decode_tile as _decode
 
 NEG_INF = -1e30  # finite sentinel: keeps exp(m_prev - m_new) well-defined
 
@@ -103,8 +109,12 @@ def _finalize(acc_ref, l_ref):
 # decode
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, fmt, scale, block_kv, n_kv):
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, *refs,
+                   fmt, scale, block_kv, n_kv, with_residuals):
+    if with_residuals:
+        o_ref, mo_ref, lo_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        (o_ref, acc_ref, m_ref, l_ref), mo_ref, lo_ref = refs, None, None
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -124,11 +134,15 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
     @pl.when(si == n_kv - 1)
     def _flush():
         o_ref[0, 0] = _finalize(acc_ref, l_ref)
+        if with_residuals:
+            mo_ref[0, 0] = m_ref[...]
+            lo_ref[0, 0] = l_ref[...]
 
 
 def flash_decode(q, k_payload, v_payload, fmt, lengths, *,
                  scale: Optional[float] = None,
                  block_kv: int = DEFAULT_BLOCK_KV,
+                 return_residuals: bool = False,
                  interpret: bool | None = None):
     """Single-token GQA attention over a packed KV cache.
 
@@ -138,7 +152,9 @@ def flash_decode(q, k_payload, v_payload, fmt, lengths, *,
                 ``fmt`` is given, or plain float arrays when ``fmt`` is None.
     lengths:    (B,) int32 -- number of valid cache slots per sequence
                 (ragged batches; a full ring buffer passes its capacity).
-    Returns (B, H, G, dh) float32.
+    Returns (B, H, G, dh) float32; with ``return_residuals`` additionally the
+    flash partials (m, l) of shape (B, H, G) -- the running softmax max and
+    sum the ``flash_shmap`` wrapper merges across sequence shards.
     """
     fmt = get_format(fmt) if fmt is not None else None
     if interpret is None:
@@ -166,7 +182,14 @@ def flash_decode(q, k_payload, v_payload, fmt, lengths, *,
     lengths = jnp.minimum(lengths.astype(jnp.int32), S).reshape(B, 1)
 
     kern = functools.partial(_decode_kernel, fmt=fmt,
-                             scale=np.float32(scale), block_kv=bkv, n_kv=n_kv)
+                             scale=np.float32(scale), block_kv=bkv, n_kv=n_kv,
+                             with_residuals=return_residuals)
+    out_specs = [pl.BlockSpec((1, 1, Gp, dh), lambda b, h, s: (b, h, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, H, Gp, dh), jnp.float32)]
+    if return_residuals:
+        out_specs += [pl.BlockSpec((1, 1, Gp, 128),
+                                   lambda b, h, s: (b, h, 0, 0))] * 2
+        out_shape += [jax.ShapeDtypeStruct((B, H, Gp, 128), jnp.float32)] * 2
     out = pl.pallas_call(
         kern,
         grid=(B, H, n_kv),
@@ -177,8 +200,8 @@ def flash_decode(q, k_payload, v_payload, fmt, lengths, *,
             pl.BlockSpec((1, 1), lambda b, h, s: (b, 0),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, Gp, dh), lambda b, h, s: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Gp, dh), jnp.float32),
+        out_specs=out_specs if return_residuals else out_specs[0],
+        out_shape=out_shape if return_residuals else out_shape[0],
         scratch_shapes=[
             pltpu.VMEM((Gp, dh), jnp.float32),
             pltpu.VMEM((Gp, 128), jnp.float32),
@@ -188,16 +211,21 @@ def flash_decode(q, k_payload, v_payload, fmt, lengths, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k_payload, v_payload, lengths)
+    if return_residuals:
+        o, m, l = out
+        return o[:, :, :G, :], m[:, :, :G, 0], l[:, :, :G, 0]
     return out[:, :, :G, :]
 
 
 def flash_decode_reference(q, k_payload, v_payload, fmt, lengths, *,
-                           scale: Optional[float] = None):
+                           scale: Optional[float] = None,
+                           return_residuals: bool = False):
     """The XLA dequantize path, mirroring the kernel's operation order.
 
     Decodes the full payload through XLA (materializing the wide copy the
     fused kernel avoids), then max -> exp -> PV / sum in f32.  Oracle for
-    bit-level comparison in interpret mode.
+    bit-level comparison in interpret mode.  ``return_residuals`` adds the
+    flash partials (m, l), same contract as :func:`flash_decode`.
     """
     fmt = get_format(fmt) if fmt is not None else None
     B, H, G, dh = q.shape
@@ -216,7 +244,10 @@ def flash_decode_reference(q, k_payload, v_payload, fmt, lengths, *,
     num = jnp.einsum("bhgs,bshd->bhgd", p, v,
                      preferred_element_type=jnp.float32)
     den = jnp.sum(p, axis=-1, keepdims=True)
-    return jnp.where(den > 0, num / den, 0.0)
+    out = jnp.where(den > 0, num / den, 0.0)
+    if return_residuals:
+        return out, m[..., 0], den[..., 0]
+    return out
 
 
 # ---------------------------------------------------------------------------

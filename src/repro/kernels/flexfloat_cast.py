@@ -7,8 +7,8 @@ staged HBM->VMEM, the bit manipulation runs on the VPU's integer lanes, and
 downstream HBM traffic shrinks 2-4x -- the TPU analogue of the paper's
 4 x binary8 / 2 x binary16 packed words.
 
-The kernel body calls ``repro.core.flexfloat.quantize_math`` /
-``repro.core.qtensor.encode`` verbatim: one source of truth for the numerics,
+The kernel body calls the shared in-register codec
+(``repro.kernels.codec``) verbatim: one source of truth for the numerics,
 validated exhaustively against native e5m2/f16/bf16 casts.
 """
 from __future__ import annotations
@@ -19,10 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flexfloat import quantize_math
 from repro.core.formats import get_format
-from repro.core.qtensor import decode as _decode
-from repro.core.qtensor import encode as _encode
+
+from .codec import decode_tile as _decode
+from .codec import encode_tile as _encode
+from .codec import quantize_tile
 
 # Block shape: 8x128-aligned, 256 KiB of f32 in + out per block -- well under
 # one TPU core's ~16 MiB VMEM even with double buffering.
@@ -30,11 +31,12 @@ DEFAULT_BLOCK = (256, 256)
 
 
 def _cast_kernel(x_ref, o_ref, *, e, m, saturate):
-    o_ref[...] = quantize_math(x_ref[...], e, m, saturate)
+    o_ref[...] = quantize_tile(x_ref[...], e, m, saturate)
 
 
 def _encode_kernel(x_ref, o_ref, *, fmt):
-    o_ref[...] = _encode(x_ref[...], fmt, assume_quantized=False)
+    # fused sanitize + pack: round to (e, m) then bit-pack, all in-register
+    o_ref[...] = _encode(quantize_tile(x_ref[...], fmt.e, fmt.m), fmt)
 
 
 def _decode_kernel(x_ref, o_ref, *, fmt):

@@ -23,9 +23,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import CompilerParams
-from repro.core.flexfloat import quantize_math
 from repro.core.formats import FpFormat, get_format
-from repro.core.qtensor import decode as _decode
+
+from .codec import decode_tile as _decode
+from .codec import quantize_tile
 
 DEFAULT_BLOCKS = (256, 256, 256)  # bm, bn, bk
 
@@ -47,7 +48,7 @@ def _qmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, fmt_a, fmt_b, out_em,
     def _flush():
         r = acc_ref[...]
         if out_em is not None:
-            r = quantize_math(r, out_em[0], out_em[1], False)
+            r = quantize_tile(r, out_em[0], out_em[1], False)
         o_ref[...] = r.astype(out_dtype)
 
 

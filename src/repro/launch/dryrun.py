@@ -261,6 +261,11 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (e.g. moe_impl=shard_map)")
+    ap.add_argument("--decode-impl", default=None,
+                    help="attention backend override for every cell: any "
+                         "registry spelling from kernels/dispatch.py, e.g. "
+                         "flash_pallas or flash_shmap+flash_pallas "
+                         "(validated; shorthand for --set decode_impl=...)")
     ap.add_argument("--kv-fmt", default=None,
                     help="override kv_cache format (e.g. binary16alt)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
@@ -274,6 +279,10 @@ def main():
         except ValueError:
             pass
         overrides[k] = v
+    if args.decode_impl is not None:
+        from repro.kernels.dispatch import validate_impl
+        overrides["decode_impl"] = validate_impl(args.decode_impl,
+                                                 what="--decode-impl")
 
     archs = configs.ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]

@@ -11,6 +11,11 @@ Serving loop:
   * ``--decode-impl flash_pallas`` additionally streams the packed payload
     through the fused flash kernel (kernels/flash_attention.py), so the
     bandwidth-bound decode step also *moves* 4x fewer bytes;
+    ``--decode-impl flash_shmap+flash_pallas`` shard_maps that kernel over
+    the cache's sequence axis for multi-chip serving (any registry spelling
+    from kernels/dispatch.py is accepted, and unknown ones fail loudly);
+  * when no ``--decode-impl`` is given and a TPU backend is present, serving
+    defaults to the fused path (``dispatch.default_serving_impl``);
   * finished sequences free their slot immediately.
 """
 from __future__ import annotations
@@ -24,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.policy import DECODE_IMPLS, get_policy
+from repro.core.policy import get_policy
+from repro.kernels import dispatch
 from repro.models.registry import build
 
 
@@ -48,14 +54,18 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--policy", default="transprecision")
     ap.add_argument("--decode-impl", default=None,
-                    choices=[i for i in DECODE_IMPLS if i is not None],
-                    help="attention backend (default: model config; "
-                         "flash_pallas = fused packed-KV kernel)")
+                    choices=list(dispatch.legal_impls()),
+                    help="attention backend (default: fused path on TPU, "
+                         "else model config; flash_pallas = fused packed-KV "
+                         "kernel, flash_shmap+flash_pallas = that kernel "
+                         "sequence-sharded over the mesh)")
     args = ap.parse_args(argv)
 
     # the policy-level override wins inside attention.decode_impl(), so no
-    # config rewrite / model rebuild is needed
-    policy = get_policy(args.policy, decode_impl=args.decode_impl)
+    # config rewrite / model rebuild is needed; with no explicit flag,
+    # serving prefers the fused path wherever a TPU backend is present
+    impl = args.decode_impl or dispatch.default_serving_impl()
+    policy = get_policy(args.policy, decode_impl=impl)
     model, cfg = build(args.arch, reduced=args.reduced)
     params = model.init_params(jax.random.PRNGKey(0), policy)
     rng = np.random.default_rng(0)
@@ -124,7 +134,7 @@ def main(argv=None):
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
           f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
           f"(kv format: {policy.fmt('kv_cache').name}, "
-          f"decode: {args.decode_impl or cfg.decode_impl})")
+          f"decode: {impl or cfg.decode_impl})")
     return reqs
 
 

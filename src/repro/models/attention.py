@@ -13,23 +13,48 @@ default policy => 4x less HBM per token than f32, the paper's
 memory-access reduction applied to serving).  Sliding-window archs keep a
 ring buffer of ``window`` entries.
 
-Decode backends (``decode_impl`` on the config, overridable per policy):
-  * "xla"          -- dequantize the cache through XLA, then dot/softmax/dot
-                      (oracle and fallback).
-  * "flash_pallas" -- fused Pallas kernel (kernels/flash_attention.py) that
-                      reads the packed KV payload bits directly and decodes
-                      tiles in-register: the bandwidth-bound decode step
-                      moves container-width bytes (4x less than f32 for
-                      binary8).  Also serves causal prefill (differentiable;
-                      backward recomputes via the XLA reference).  Runs in
-                      interpret mode off-TPU.  Precision note: operand
-                      *storage* formats are honored (values enter the kernel
-                      exactly as stored), but softmax probabilities live and
-                      die in VMEM registers, so the ``attn_probs`` narrowing
-                      the XLA paths apply to their *materialized* probs does
-                      not occur -- the fused paths are strictly wider
-                      (f32 probs/accumulation), never narrower.
-  * "flash_shmap"  -- sequence-sharded distributed flash-decode (below).
+Attention backends (``decode_impl`` on the config, overridable per policy)
+are resolved through the registry in ``repro.kernels.dispatch``; this
+module registers the model-level adapters at import time.  Legal spellings
+compose a wrapper with a base backend, ``wrapper+base``:
+
+  * ``"xla"``          -- dequantize the cache through XLA, then
+                          dot/softmax/dot (oracle and fallback).
+  * ``"flash_pallas"`` -- fused Pallas kernel (kernels/flash_attention.py)
+                          that reads the packed KV payload bits directly and
+                          decodes tiles in-register: the bandwidth-bound
+                          decode step moves container-width bytes (4x less
+                          than f32 for binary8).  Also serves causal prefill
+                          (differentiable; backward recomputes via the XLA
+                          reference).  Runs in interpret mode off-TPU.
+                          Precision note: operand *storage* formats are
+                          honored (values enter the kernel exactly as
+                          stored), but softmax probabilities live and die in
+                          VMEM registers, so the ``attn_probs`` narrowing
+                          the XLA paths apply to their *materialized* probs
+                          does not occur -- the fused paths are strictly
+                          wider (f32 probs/accumulation), never narrower.
+  * ``"flash_shmap"``  -- a *wrapper*: shard_map any inner decode backend
+                          over the cache's sequence axis (mesh axis
+                          "model") and merge the per-shard online-softmax
+                          partials (max / sum-correction combine) with
+                          three tiny collectives.  ``"flash_shmap"`` alone
+                          means ``"flash_shmap+xla"``.
+  * ``"flash_shmap+flash_pallas"``
+                       -- the composed multi-chip serving path: every
+                          device streams its own 1/n_model of the *packed*
+                          cache through the fused kernel; exact softmax
+                          attention (tests pin it to the XLA oracle at
+                          <= 1e-6 on a 2-device host mesh).
+
+Prefill (fresh and continuation-from-packed-cache) goes through the same
+registry (``dispatch.resolve_prefill``); a composed spelling resolves to
+its base backend there.  ``prefill_to_cache`` is a thin wrapper over
+:func:`mha` with ``cache_capacity`` -- the cache is built from the very
+K/V the attention consumed, not a private recompute path -- and
+:func:`prefill_from_cache` appends a continuation chunk to an existing
+packed cache and attends over prefix+chunk via the registry (the flash
+backend reads the packed payload directly).
 """
 from __future__ import annotations
 
@@ -39,8 +64,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
 from repro.core.policy import PrecisionPolicy
+from repro.kernels import dispatch
 from .layers import act_cast, dense_init, pdot, peinsum, rope
 
 NEG_INF = -1e30
@@ -112,18 +137,169 @@ def _causal_mask(sq, skv, q_offset, window: Optional[int]):
     return m  # (sq, skv) bool
 
 
+def _dequant_cache(ck, cv, policy):
+    """Bring cache arrays into the XLA compute representation (the oracle /
+    fallback op order; see EXPERIMENTS.md Perf #3 for the bf16 fast path)."""
+    if policy.mode == "native" and ck.dtype != jnp.float32:
+        # dequantize straight to the compute dtype: one fusable cast instead
+        # of the f8 -> f32 -> act-format double materialization.  e5m2 ->
+        # bf16 is exact (2-bit significand subset); dots accumulate in f32.
+        return ck.astype(jnp.bfloat16), cv.astype(jnp.bfloat16)
+    return (act_cast(ck.astype(jnp.float32), policy),
+            act_cast(cv.astype(jnp.float32), policy))
+
+
+def _cache_payload(ck, cv, policy):
+    """Cache arrays -> (k_payload, v_payload, fmt) for packed-KV kernels.
+
+    The cache's native narrow dtype is bit-identical to the packed (e, m)
+    container (QTensor.from_native), so the payload is a pure bitcast and
+    HBM streams container-width bytes.  Emulated mode stores sanitized f32
+    values; binary32 is f32 -- both read unpacked (fmt None).
+    """
+    fmt = policy.fmt("kv_cache")
+    if policy.mode == "native" and not fmt.is_binary32:
+        return (jax.lax.bitcast_convert_type(ck, fmt.container_dtype),
+                jax.lax.bitcast_convert_type(cv, fmt.container_dtype), fmt)
+    return ck.astype(jnp.float32), cv.astype(jnp.float32), None
+
+
+# ---------------------------------------------------------------------------
+# registered decode backends (contract: see kernels/dispatch.py)
+# ---------------------------------------------------------------------------
+
+@dispatch.register_decode("xla")
+def _decode_xla(q, ck, cv, n_valid, *, scale, policy,
+                return_residuals: bool = False):
+    """Dequantize-through-XLA decode: the oracle and the fallback."""
+    kk, vv = _dequant_cache(ck, cv, policy)
+    qg = q[:, None]                                   # (B, 1, H, G, dh)
+    scores = _gqa_scores(qg, kk, policy).astype(jnp.float32) * scale
+    valid = (jnp.arange(ck.shape[1])[None, :]
+             < n_valid.astype(jnp.int32)[:, None])    # (B, S)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    if not return_residuals:
+        return _softmax_weighted(scores, vv, policy)[:, 0]
+    m = jnp.max(scores, axis=-1)                      # (B, H, G, 1)
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[:, None, None, None, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    # explicit zero guard: a subnormal epsilon would be flushed by XLA
+    # CPU's FTZ and divide 0/0
+    ln = l[..., None]
+    probs = act_cast(jnp.where(ln > 0, e / jnp.where(ln > 0, ln, 1.0), 0.0),
+                     policy, "attn_probs")
+    out = peinsum("bhgqk,bkhd->bqhgd", probs, vv, policy, "attn_w",
+                  out_act=False)
+    return out[:, 0], m[..., 0], l[..., 0]
+
+
+@dispatch.register_decode("flash_pallas")
+def _decode_flash_pallas(q, ck, cv, n_valid, *, scale, policy,
+                         return_residuals: bool = False):
+    """Fused packed-KV flash decode (kernels/flash_attention.py): HBM
+    streams container-width bytes -- the paper's memory-access reduction
+    applied *inside* the bandwidth-bound step."""
+    from repro.kernels.flash_attention import flash_decode
+
+    kp, vp, fmt = _cache_payload(ck, cv, policy)
+    return flash_decode(q.astype(jnp.float32), kp, vp, fmt,
+                        n_valid.astype(jnp.int32), scale=scale,
+                        return_residuals=return_residuals)
+
+
+# ---------------------------------------------------------------------------
+# registered prefill backends
+# ---------------------------------------------------------------------------
+
+@dispatch.register_prefill("xla")
+def _prefill_xla(qg, k, v, *, scale, policy, window, prefix_len, chunk,
+                 q_offset: int = 0, fmt=None):
+    """Causal prefill through XLA: full masked softmax, or the unrolled
+    q-chunked loop for long sequences (score memory O(chunk * S), loop-free
+    HLO)."""
+    if fmt is not None:  # packed payload (prefill-from-packed-cache reuse)
+        from repro.core.qtensor import decode as _qdecode
+        k = act_cast(_qdecode(k, fmt), policy)
+        v = act_cast(_qdecode(v, fmt), policy)
+    B, S = qg.shape[0], qg.shape[1]
+    skv = k.shape[1]
+    if chunk is not None and S > chunk:
+        # ---- unrolled q-chunked causal prefill ----------------------------
+        n_chunks = (S + chunk - 1) // chunk
+        outs = []
+        for ci in range(n_chunks):
+            lo, hi = ci * chunk, min((ci + 1) * chunk, S)
+            kv_hi = q_offset + hi
+            if prefix_len > kv_hi:
+                kv_hi = prefix_len
+            kv_hi = min(kv_hi, skv)
+            qs = jax.lax.slice_in_dim(qg, lo, hi, axis=1)
+            ks = jax.lax.slice_in_dim(k, 0, kv_hi, axis=1)
+            vs = jax.lax.slice_in_dim(v, 0, kv_hi, axis=1)
+            scores = _gqa_scores(qs, ks, policy).astype(jnp.float32) * scale
+            m = _causal_mask(hi - lo, kv_hi, q_offset + lo, window)
+            if prefix_len:
+                pm = (jnp.arange(kv_hi)[None, :] < prefix_len)
+                m = m | pm
+            scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
+            outs.append(_softmax_weighted(scores, vs, policy))
+        return jnp.concatenate(outs, axis=1)
+    # ---- full attention ----------------------------------------------------
+    scores = _gqa_scores(qg, k, policy).astype(jnp.float32) * scale
+    m = _causal_mask(S, skv, q_offset, window)
+    if prefix_len:
+        m = m | (jnp.arange(skv)[None, :] < prefix_len)
+    scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
+    return _softmax_weighted(scores, v, policy)
+
+
+@dispatch.register_prefill("flash_pallas")
+def _prefill_flash_pallas(qg, k, v, *, scale, policy, window, prefix_len,
+                          chunk, q_offset: int = 0, fmt=None):
+    """Fused chunked-causal prefill: the q-chunk loop lives in the Pallas
+    grid instead of unrolled Python, score memory is O(block_q * block_kv)
+    VMEM.  Float K/V (fresh prefill) is differentiable -- backward
+    recomputes via the XLA reference; packed K/V (``fmt`` set) reads the
+    cache payload in-register (continuation / cache-reuse)."""
+    from repro.kernels.flash_attention import (DEFAULT_BLOCK_Q, flash_prefill,
+                                               flash_prefill_diff)
+
+    # chunk is the XLA path's q-chunk (up to attn_chunk=4096); as a Pallas
+    # block it only tiles the grid, so clamp it to a VMEM-sized block
+    bq = min(chunk or DEFAULT_BLOCK_Q, DEFAULT_BLOCK_Q)
+    if fmt is None:
+        out = flash_prefill_diff(
+            qg.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), scale=scale, window=window,
+            prefix_len=prefix_len, q_offset=q_offset, block_q=bq)
+    else:
+        out = flash_prefill(
+            qg.astype(jnp.float32), k, v, fmt, scale=scale, window=window,
+            prefix_len=prefix_len, q_offset=q_offset, block_q=bq)
+    return act_cast(out, policy)
+
+
+# ---------------------------------------------------------------------------
+# the attention entry points
+# ---------------------------------------------------------------------------
+
 def mha(p, x, cfg, policy: PrecisionPolicy, *,
         positions=None, causal: bool = True,
         prefix_len: int = 0,
         cache: Optional[KVCache] = None,
         kv_source=None,
-        chunk: Optional[int] = None):
+        chunk: Optional[int] = None,
+        cache_capacity: Optional[int] = None):
     """General attention entry point.
 
     kv_source: cross-attention source sequence (enc-dec); disables causal.
     prefix_len: bidirectional prefix (prefix-LM / VLM).
     cache: decode mode -- x is (B, 1, d), cache is updated and returned.
     chunk: q-chunked long prefill.
+    cache_capacity: prefill-to-cache mode -- build and return a populated
+        KVCache of this capacity from the K/V this very call attended with
+        (no recompute; the registry path and the cache see the same bits).
     Returns (out, new_cache).
     """
     B, S, _ = x.shape
@@ -170,61 +346,34 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
             n_valid = jnp.minimum(cache.pos + S, cache.capacity)
         else:
             n_valid = cache.pos + S
-        valid = jnp.arange(cache.capacity) < n_valid
-        mesh = compat.get_abstract_mesh()
-        if (impl == "flash_shmap"
-                and mesh is not None and "model" in (mesh.axis_names or ())
-                and cache.capacity % mesh.shape["model"] == 0):
-            out = _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy)
-        elif impl == "flash_pallas" and S == 1:
-            out = _flash_decode_pallas(qg, ck, cv, n_valid, scale, policy)
+        if S == 1:
+            fn = dispatch.resolve_decode(impl)
+            lengths = jnp.broadcast_to(
+                jnp.asarray(n_valid, jnp.int32)[None], (B,))
+            out = fn(qg[:, 0], ck, cv, lengths, scale=scale, policy=policy)
+            out = act_cast(out, policy)[:, None]
         else:
-            if policy.mode == "native" and ck.dtype != jnp.float32:
-                # dequantize straight to the compute dtype: one fusable cast
-                # instead of the f8 -> f32 -> act-format double
-                # materialization (EXPERIMENTS.md Perf #3, iteration 2).
-                # e5m2 -> bf16 is exact (2-bit significand subset), and the
-                # dot still accumulates in f32.
-                kk = ck.astype(jnp.bfloat16)
-                vv = cv.astype(jnp.bfloat16)
-            else:
-                kk = act_cast(ck.astype(jnp.float32), policy)
-                vv = act_cast(cv.astype(jnp.float32), policy)
+            # legacy multi-token append: every new token attends the whole
+            # occupied cache (no intra-chunk causality; used nowhere on the
+            # serving path -- prefer prefill_from_cache for continuation)
+            kk, vv = _dequant_cache(ck, cv, policy)
             scores = _gqa_scores(qg, kk, policy).astype(jnp.float32) * scale
+            valid = jnp.arange(cache.capacity) < n_valid
             scores = jnp.where(valid[None, None, None, None, :], scores,
                                NEG_INF)
             out = _softmax_weighted(scores, vv, policy)
-    elif impl == "flash_pallas" and causal and kv_source is None:
-        # ---- fused chunked-causal prefill (one kernel, no Python unroll) --
-        out = _flash_prefill_pallas(qg, k, v, cfg, policy, scale,
-                                    prefix_len, chunk)
-    elif chunk is not None and S > chunk and causal:
-        # ---- unrolled q-chunked causal prefill -----------------------------
-        n_chunks = (S + chunk - 1) // chunk
-        outs = []
-        for ci in range(n_chunks):
-            lo, hi = ci * chunk, min((ci + 1) * chunk, S)
-            kv_hi = hi if prefix_len <= hi else max(hi, prefix_len)
-            qs = jax.lax.slice_in_dim(qg, lo, hi, axis=1)
-            ks = jax.lax.slice_in_dim(k, 0, kv_hi, axis=1)
-            vs = jax.lax.slice_in_dim(v, 0, kv_hi, axis=1)
-            scores = _gqa_scores(qs, ks, policy).astype(jnp.float32) * scale
-            m = _causal_mask(hi - lo, kv_hi, lo, cfg.window)
-            if prefix_len:
-                pm = (jnp.arange(kv_hi)[None, :] < prefix_len)
-                m = m | pm
-            scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
-            outs.append(_softmax_weighted(scores, vs, policy))
-        out = jnp.concatenate(outs, axis=1)
+    elif causal and kv_source is None:
+        # ---- prefill through the registry ---------------------------------
+        fn = dispatch.resolve_prefill(impl)
+        out = fn(qg, k, v, scale=scale, policy=policy, window=cfg.window,
+                 prefix_len=prefix_len, chunk=chunk)
     else:
-        # ---- full attention -------------------------------------------------
+        # ---- non-causal full attention (encoder self-attn / cross-attn) ---
         scores = _gqa_scores(qg, k, policy).astype(jnp.float32) * scale
-        if causal:
-            m = _causal_mask(S, k.shape[1], 0, cfg.window)
-            if prefix_len:
-                m = m | (jnp.arange(k.shape[1])[None, :] < prefix_len)
-            scores = jnp.where(m[None, None, None, :, :], scores, NEG_INF)
         out = _softmax_weighted(scores, v, policy)
+
+    if cache_capacity is not None and cache is None and kv_source is None:
+        new_cache = _build_cache(k, v, cfg, policy, cache_capacity, S)
 
     out = out.reshape(B, S, cfg.q_dim)
     return pdot(out, p["wo"], policy, "attn_w"), new_cache
@@ -237,110 +386,87 @@ def decode_impl(cfg, policy: PrecisionPolicy) -> str:
             or getattr(cfg, "decode_impl", "xla"))
 
 
-def _flash_decode_pallas(qg, ck, cv, n_valid, scale, policy):
-    """Fused packed-KV flash decode (kernels/flash_attention.py).
+def _build_cache(k, v, cfg, policy, capacity: int, S: int) -> KVCache:
+    """Populate a fresh KVCache from prefill K/V (post-rope, pre-cast).
 
-    The cache's native narrow dtype is bit-identical to the packed (e, m)
-    container (QTensor.from_native), so the payload reaches the kernel as a
-    pure bitcast and HBM streams container-width bytes -- the paper's
-    memory-access reduction applied *inside* the bandwidth-bound step.
+    Ring-buffer invariant: the token at absolute position ``p`` lives at
+    slot ``p % cap`` -- the same convention the decode path writes with
+    (``slot = pos % cap``), so the first decode step after a long prefill
+    overwrites the *oldest* cached token, not an arbitrary one.
     """
-    from repro.kernels.flash_attention import flash_decode
-
-    fmt = policy.fmt("kv_cache")
-    if policy.mode == "native" and not fmt.is_binary32:
-        kp = jax.lax.bitcast_convert_type(ck, fmt.container_dtype)
-        vp = jax.lax.bitcast_convert_type(cv, fmt.container_dtype)
+    dt = policy.dtype("kv_cache")
+    cap = capacity if cfg.window is None else min(capacity, cfg.window)
+    take = min(S, cap)
+    kk = k[:, S - take:].astype(dt)
+    vv = v[:, S - take:].astype(dt)
+    if take == cap and (S - take) % cap:
+        # full ring: rotate so position p sits at slot p % cap
+        kk = jnp.roll(kk, (S - take) % cap, axis=1)
+        vv = jnp.roll(vv, (S - take) % cap, axis=1)
+        ck, cv = kk, vv
     else:
-        # emulated mode stores already-sanitized f32 values; binary32 is f32
-        kp, vp, fmt = ck.astype(jnp.float32), cv.astype(jnp.float32), None
-    B = qg.shape[0]
-    q = qg[:, 0].astype(jnp.float32)                  # (B, n_kv, G, dh)
-    lengths = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32)[None], (B,))
-    out = flash_decode(q, kp, vp, fmt, lengths, scale=scale)
-    return act_cast(out[:, None], policy)
-
-
-def _flash_prefill_pallas(qg, k, v, cfg, policy, scale, prefix_len, chunk):
-    """Causal prefill through the fused kernel: the q-chunk loop lives in
-    the Pallas grid instead of unrolled Python, score memory is
-    O(block_q * block_kv) VMEM.  Differentiable (training-time forward
-    also lands here): backward recomputes via the XLA reference."""
-    from repro.kernels.flash_attention import (DEFAULT_BLOCK_Q,
-                                               flash_prefill_diff)
-
-    # chunk is the XLA path's q-chunk (up to attn_chunk=4096); as a Pallas
-    # block it only tiles the grid, so clamp it to a VMEM-sized block
-    out = flash_prefill_diff(
-        qg.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
-        scale=scale, window=cfg.window, prefix_len=prefix_len,
-        block_q=min(chunk or DEFAULT_BLOCK_Q, DEFAULT_BLOCK_Q))
-    return act_cast(out, policy)
-
-
-def _flash_decode_shmap(qg, ck, cv, valid, scale, mesh, policy):
-    """Distributed flash-decode (EXPERIMENTS.md Perf #3).
-
-    Hypothesis (from the baseline roofline): with the KV cache sequence-
-    sharded over "model", GSPMD all-gathers the whole cache to every device
-    before the softmax => decode reads n_model x its shard bytes.  Computing
-    the online-softmax partials (running max / sum / weighted-V) per shard
-    and combining with three tiny psums makes each device read only its own
-    1/n_model of the cache -- exact softmax attention, flash-decode style.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    dp = tuple(a for a in mesh.axis_names if a != "model")
-    B = qg.shape[0]
-    bspec = dp if B % max(
-        int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 else None
-
-    def local(q_blk, k_blk, v_blk, valid_blk):
-        # q_blk: (B_loc, 1, n_kv, G, dh); k/v_blk: (B_loc, S_loc, n_kv, dh)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
-                       k_blk.astype(jnp.float32),
-                       preferred_element_type=jnp.float32) * scale
-        s = jnp.where(valid_blk[None, None, None, None, :], s, NEG_INF)
-        m = jnp.max(s, axis=-1)                          # (B,h,g,1)
-        gm = jax.lax.pmax(m, "model")
-        e = jnp.exp(s - gm[..., None])
-        denom = jax.lax.psum(jnp.sum(e, axis=-1), "model")
-        wv = jnp.einsum("bhgqk,bkhd->bqhgd", e, v_blk.astype(jnp.float32),
-                        preferred_element_type=jnp.float32)
-        wv = jax.lax.psum(wv, "model")
-        out = wv / jnp.transpose(denom, (0, 3, 1, 2))[..., None]
-        return out
-
-    out = compat.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(bspec, None, None, None, None),
-                  P(bspec, "model", None, None),
-                  P(bspec, "model", None, None),
-                  P("model")),
-        out_specs=P(bspec, None, None, None, None),
-    )(qg, ck, cv, valid)
-    return act_cast(out, policy)
+        ck = jnp.zeros((k.shape[0], cap, cfg.n_kv, cfg.head_dim), dt)
+        cv = jnp.zeros_like(ck)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kk, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vv, 0, axis=1)
+    return KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32))
 
 
 def prefill_to_cache(p, x, cfg, policy, capacity: int, positions=None,
                      prefix_len: int = 0, chunk=None):
-    """Run prefill attention AND produce the populated cache for decode."""
+    """Run prefill attention AND produce the populated cache for decode.
+
+    A thin wrapper over :func:`mha` with ``cache_capacity``: attention and
+    cache share one K/V computation and one dispatch path."""
+    return mha(p, x, cfg, policy, positions=positions, causal=True,
+               prefix_len=prefix_len, chunk=chunk, cache_capacity=capacity)
+
+
+def prefill_from_cache(p, x, cfg, policy, cache: KVCache, q_offset: int,
+                       prefix_len: int = 0, chunk=None):
+    """Continuation (chunked) prefill against an existing packed cache.
+
+    Appends this chunk's K/V at static position ``q_offset``, then attends
+    the chunk's queries causally over prefix + chunk through the SAME
+    registry dispatch as decode/prefill: the ``flash_pallas`` base backend
+    reads the packed cache payload directly (no wide materialization), the
+    ``xla`` base backend dequantizes -- no private code path.
+
+    Requires a non-ring cache with ``capacity >= q_offset + S``.
+    Returns (out, new_cache with pos = q_offset + S).
+    """
     B, S, _ = x.shape
-    out, _ = mha(p, x, cfg, policy, positions=positions, causal=True,
-                 prefix_len=prefix_len, chunk=chunk)
-    k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), cfg.n_kv,
-                     cfg.head_dim)
-    v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), cfg.n_kv,
-                     cfg.head_dim)
+    n_kv, dh = cfg.n_kv, cfg.head_dim
+    G = cfg.n_heads // n_kv
+    if cfg.window is not None and cache.capacity == cfg.window:
+        raise ValueError("prefill_from_cache does not support ring-buffer "
+                         "(sliding-window) caches; decode step-by-step")
+    if q_offset + S > cache.capacity:
+        raise ValueError(f"chunk [{q_offset}, {q_offset + S}) exceeds cache "
+                         f"capacity {cache.capacity}")
+
+    q = _split_heads(pdot(x, p["wq"], policy, "attn_w"), cfg.n_heads, dh)
+    k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), n_kv, dh)
+    v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), n_kv, dh)
+    positions = (jnp.arange(S)[None, :] + q_offset).astype(jnp.int32)
     if cfg.rope_theta > 0:
-        k = rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
-    dt = policy.dtype("kv_cache")
-    cap = capacity if cfg.window is None else min(capacity, cfg.window)
-    ck = jnp.zeros((B, cap, cfg.n_kv, cfg.head_dim), dt)
-    cv = jnp.zeros_like(ck)
-    take = min(S, cap)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
     ck = jax.lax.dynamic_update_slice_in_dim(
-        ck, k[:, S - take:].astype(dt), 0, axis=1)
+        cache.k, k.astype(cache.k.dtype), q_offset, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(
-        cv, v[:, S - take:].astype(dt), 0, axis=1)
-    return out, KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32))
+        cache.v, v.astype(cache.v.dtype), q_offset, axis=1)
+    new_cache = KVCache(k=ck, v=cv, pos=jnp.asarray(q_offset + S, jnp.int32))
+
+    scale = np.float32(1.0 / np.sqrt(dh))
+    qg = q.reshape(B, S, n_kv, G, dh)
+    impl = decode_impl(cfg, policy)
+    fn = dispatch.resolve_prefill(impl)
+    kp, vp, fmt = _cache_payload(ck, cv, policy)
+    # slots beyond q_offset + S - 1 are causally masked (ki > every qi), so
+    # attending over the full capacity is exact
+    out = fn(qg, kp, vp, scale=scale, policy=policy, window=cfg.window,
+             prefix_len=prefix_len, chunk=chunk, q_offset=q_offset, fmt=fmt)
+    out = out.reshape(B, S, cfg.q_dim)
+    return pdot(out, p["wo"], policy, "attn_w"), new_cache

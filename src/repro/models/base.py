@@ -58,13 +58,19 @@ class ModelConfig:
 
     # execution knobs
     moe_impl: str = "dense"               # "dense" | "shard_map" (EP)
-    decode_impl: str = "xla"              # "xla" | "flash_pallas" (fused
-    #                                       packed-KV kernel) | "flash_shmap"
+    decode_impl: str = "xla"              # attention backend: any spelling
+    #                                       from kernels/dispatch.py, e.g.
+    #                                       "flash_pallas" (fused packed-KV
+    #                                       kernel) or the composed
+    #                                       "flash_shmap+flash_pallas"
     attn_chunk: int = 4096                # q-chunk for long prefill
     loss_chunks: int = 4                  # chunked cross-entropy
     remat: bool = True
 
     def __post_init__(self):
+        from repro.kernels.dispatch import validate_impl
+        validate_impl(self.decode_impl, allow_none=False,
+                      what="ModelConfig.decode_impl")
         if self.head_dim is None:
             object.__setattr__(self, "head_dim",
                                self.d_model // max(self.n_heads, 1))

@@ -1,0 +1,144 @@
+"""The shared in-register codec (kernels/codec.py) is the single source of
+format bit-math.
+
+Two layers of protection:
+  * bit-exact equivalence of the tile functions with the storage-layer API
+    (``core.qtensor``) and the sanitizer (``core.flexfloat``) over dense
+    samples including NaN/Inf/subnormal edges, for all four paper formats;
+  * a grep-level structural test: the f32 field-mask hex constants exist in
+    ``kernels/codec.py`` and NOWHERE else under ``src/`` -- a re-implemented
+    mask in some kernel is exactly the drift this refactor removed.
+"""
+import glob
+import os
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexfloat as ff
+from repro.core import qtensor as qt
+from repro.core.formats import PAPER_FORMATS, FpFormat
+from repro.kernels import codec
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+FMTS = list(PAPER_FORMATS) + [FpFormat(4, 3, "binary8alt"), FpFormat(3, 4)]
+IDS = [f.name for f in FMTS]
+
+
+def _samples(fmt, n=20_000, seed=0):
+    """Uniform f32 bit patterns + the format's edge cases."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+    edges = np.array([0.0, -0.0, np.inf, -np.inf, np.nan,
+                      fmt.min_denormal, -fmt.min_denormal,
+                      fmt.min_denormal / 2, fmt.min_denormal * 1.5,
+                      fmt.min_normal, fmt.max_normal, -fmt.max_normal,
+                      fmt.max_normal * 2, 1.0, -1.0], dtype=np.float32)
+    return jnp.asarray(np.concatenate([bits.view(np.float32), edges]))
+
+
+def _bits_equal(a, b, msg=""):
+    a, b = np.asarray(a), np.asarray(b)
+    nan_a, nan_b = np.isnan(a), np.isnan(b)
+    np.testing.assert_array_equal(nan_a, nan_b, err_msg=msg)
+    av = np.where(nan_a, np.float32(0), a).view(np.uint32)
+    bv = np.where(nan_b, np.float32(0), b).view(np.uint32)
+    np.testing.assert_array_equal(av, bv, err_msg=msg)
+
+
+# ------------------------------------------------------------ tile functions
+
+@pytest.mark.parametrize("fmt", FMTS, ids=IDS)
+def test_quantize_tile_is_the_flexfloat_quantizer(fmt):
+    x = _samples(fmt)
+    _bits_equal(codec.quantize_tile(x, fmt.e, fmt.m), ff.quantize(x, fmt),
+                msg=fmt.name)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=IDS)
+def test_encode_decode_tile_match_qtensor_api(fmt):
+    x = _samples(fmt, seed=1)
+    packed_api = qt.encode(x, fmt)
+    packed_tile = codec.encode_tile(codec.quantize_tile(x, fmt.e, fmt.m), fmt)
+    assert packed_tile.dtype == fmt.container_dtype
+    np.testing.assert_array_equal(np.asarray(packed_api),
+                                  np.asarray(packed_tile))
+    _bits_equal(codec.decode_tile(packed_api, fmt), qt.decode(packed_api, fmt),
+                msg=fmt.name)
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=IDS)
+def test_decode_encode_idempotent(fmt):
+    """encode(decode(bits)) == bits for every non-NaN payload (decode is
+    exact, so re-encoding must reproduce the field)."""
+    if fmt.bits > 16:
+        pytest.skip("exhaustive sweep only for <= 16-bit containers")
+    n = 1 << fmt.bits
+    bits = jnp.asarray(np.arange(n, dtype=np.uint32)).astype(
+        fmt.container_dtype)
+    x = codec.decode_tile(bits, fmt)
+    rt = codec.encode_tile(x, fmt)
+    nan = np.isnan(np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(rt)[~nan],
+                                  np.asarray(bits)[~nan])
+    # NaN payloads re-encode to the canonical quiet NaN of the format
+    assert np.all(np.isnan(np.asarray(codec.decode_tile(rt, fmt))[nan]))
+
+
+def test_word_pack_roundtrip():
+    rng = np.random.default_rng(2)
+    for dt, n in ((np.uint8, 64), (np.uint16, 32), (np.uint32, 16)):
+        payload = jnp.asarray(
+            rng.integers(0, np.iinfo(dt).max, size=(3, n), dtype=dt))
+        words = codec.pack_word_tile(payload)
+        assert words.dtype == jnp.uint32
+        back = codec.unpack_word_tile(words, payload.dtype)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(payload))
+
+
+# ---------------------------------------------------------- grep-level guard
+
+# every f32 field-mask nibble pattern codec.py owns (sign, magnitude,
+# exponent, mantissa, qNaN, quiet bit, implicit one); matched on source
+# normalized to lowercase with digit-group underscores stripped, so any
+# spelling (0x7F_FFFF, 0x007FFFFF, ...) and any leading zeros are caught
+_MASK_RE = re.compile(
+    r"0x0*(7f800000|7fffffff|80000000|7fc00000|7fffff|400000|800000)\b")
+
+
+def test_codec_is_the_only_module_with_mask_constants():
+    """No module under src/ other than kernels/codec.py may spell an f32
+    field-mask constant -- the refactor's invariant that format bit-math has
+    exactly one home."""
+    offenders = {}
+    for fn in glob.glob(os.path.join(SRC, "**", "*.py"), recursive=True):
+        rel = os.path.relpath(fn, SRC)
+        if rel.endswith(os.path.join("kernels", "codec.py")):
+            continue
+        with open(fn) as f:
+            hits = _MASK_RE.findall(f.read().replace("_", "").lower())
+        if hits:
+            offenders[rel] = hits
+    assert not offenders, (
+        f"f32 mask constants outside kernels/codec.py: {offenders} -- "
+        "import the shared codec instead of re-implementing the bit-math")
+    # the guard itself must recognize every canonical codec spelling
+    with open(os.path.join(SRC, "repro", "kernels", "codec.py")) as f:
+        own = set(_MASK_RE.findall(f.read().replace("_", "").lower()))
+    assert {"7f800000", "7fffffff", "80000000", "7fc00000", "7fffff",
+            "400000", "800000"} <= own
+
+
+def test_kernels_import_the_codec():
+    """qmatmul, flash_attention and flexfloat_cast must source their bit-math
+    from the shared codec module."""
+    for mod in ("qmatmul", "flash_attention", "flexfloat_cast"):
+        fn = os.path.join(SRC, "repro", "kernels", f"{mod}.py")
+        with open(fn) as f:
+            text = f.read()
+        assert re.search(r"from \.codec import|from repro\.kernels\.codec",
+                         text), f"{mod}.py does not import kernels/codec"

@@ -1,0 +1,276 @@
+"""Attention-backend registry tests: spelling validation at construction
+time, wrapper composition, and the composed ``flash_shmap+flash_pallas``
+path against the XLA oracle on a 2-device host-platform mesh (the
+olmax/HomebrewNLP ``--xla_force_host_platform_device_count`` harness
+idiom)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_child
+from repro.core.formats import BINARY8
+from repro.core.policy import (DECODE_IMPLS, PrecisionPolicy, binary32_policy,
+                               transprecision_policy)
+from repro.kernels import dispatch
+from repro.models import attention as att
+from repro.models.base import ModelConfig
+
+
+# ------------------------------------------------------------- spellings
+
+def test_legal_impls_include_composed():
+    legal = dispatch.legal_impls()
+    assert "flash_shmap+flash_pallas" in legal
+    assert "flash_shmap+xla" in legal
+    assert set(("xla", "flash_pallas", "flash_shmap")) <= set(legal)
+    assert DECODE_IMPLS == (None,) + legal
+
+
+@pytest.mark.parametrize("bad", ["flashpallas", "xla+flash_shmap",
+                                 "flash_pallas+xla", "flash_shmap+",
+                                 "flash_shmap+flash_shmap", "pallas"])
+def test_validate_impl_rejects_with_legal_list(bad):
+    with pytest.raises(ValueError) as ei:
+        dispatch.validate_impl(bad)
+    assert "flash_shmap+flash_pallas" in str(ei.value)  # actionable list
+
+
+def test_policy_rejects_unknown_impl_at_construction():
+    with pytest.raises(ValueError) as ei:
+        PrecisionPolicy(formats={}, decode_impl="flash_palas")  # typo
+    assert "legal spellings" in str(ei.value)
+
+
+def test_model_config_rejects_unknown_impl_at_construction():
+    with pytest.raises(ValueError) as ei:
+        ModelConfig(arch="t", family="dense", n_layers=1, d_model=32,
+                    n_heads=2, n_kv=2, d_ff=64, vocab=64,
+                    decode_impl="flash")
+    assert "legal spellings" in str(ei.value)
+
+
+def test_shape_spec_rejects_unknown_impl():
+    from repro.configs.shapes import ShapeSpec
+    with pytest.raises(ValueError):
+        ShapeSpec("x", "decode", 128, 1, decode_impl="fused")
+
+
+def test_composed_policy_accepted():
+    pol = transprecision_policy(decode_impl="flash_shmap+flash_pallas")
+    assert pol.decode_impl == "flash_shmap+flash_pallas"
+
+
+def test_canonicalize_wrapper_alone_gets_default_inner():
+    assert dispatch.canonicalize_impl("flash_shmap") == ("flash_shmap",
+                                                         "xla")
+
+
+# ------------------------------------------------- wrapper without a mesh
+
+def _mk(B=2, S=64, H=2, G=2, dh=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    return q, k, v
+
+
+def test_wrapper_falls_back_to_inner_without_mesh():
+    """flash_shmap+flash_pallas outside any mesh == plain flash_pallas."""
+    q, k, v = _mk()
+    pol = binary32_policy()
+    nv = jnp.asarray([64, 10], jnp.int32)
+    composed = dispatch.resolve_decode("flash_shmap+flash_pallas")
+    plain = dispatch.resolve_decode("flash_pallas")
+    a = composed(q, k, v, nv, scale=0.25, policy=pol)
+    b = plain(q, k, v, nv, scale=0.25, policy=pol)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------- composed backend vs XLA oracle
+# (2-device host-platform mesh; device count must be set before jax init,
+# hence a fresh subprocess)
+
+_COMPOSED_ORACLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core.formats import PAPER_FORMATS
+from repro.core.policy import binary32_policy, transprecision_policy
+from repro.core.qtensor import encode
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import flash_decode_reference
+import repro.models.attention as att  # registers the backends
+
+mesh = compat.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+B, S, H, G, dh = 3, 160, 2, 4, 32
+q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+# ragged: row 0 full, row 1 lives entirely in shard 0 (shard 1 empty),
+# row 2 straddles the shard boundary
+lengths = jnp.asarray([160, 7, 93], jnp.int32)
+scale = float(1.0 / np.sqrt(dh))
+fn = dispatch.resolve_decode("flash_shmap+flash_pallas")
+
+for fmt in PAPER_FORMATS:
+    kp, vp = encode(k, fmt), encode(v, fmt)
+    pol = transprecision_policy(kv_fmt=fmt)
+    ck = jax.lax.bitcast_convert_type(kp, fmt.native_dtype)
+    cv = jax.lax.bitcast_convert_type(vp, fmt.native_dtype)
+    with compat.use_mesh(mesh):
+        got = jax.jit(lambda q, a, b, n: fn(q, a, b, n, scale=scale,
+                                            policy=pol))(q, ck, cv, lengths)
+    want = flash_decode_reference(q, kp, vp, fmt, lengths, scale=scale)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    assert err <= 1e-6, (fmt.name, err)
+    assert not np.isnan(np.asarray(got)).any(), fmt.name
+
+# --- ring-buffer cache through the full model-level decode path ----------
+from repro.models.base import ModelConfig
+cfg = ModelConfig(arch="t", family="dense", n_layers=1, d_model=64,
+                  n_heads=4, n_kv=2, d_ff=128, vocab=64, window=8)
+cfg_c = dataclasses.replace(cfg, decode_impl="flash_shmap+flash_pallas")
+pol = binary32_policy()
+p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64), jnp.float32) * 0.5
+_, cache_x = att.prefill_to_cache(p, x, cfg, pol, capacity=64)
+assert cache_x.capacity == cfg.window  # ring buffer engaged
+cache_c = cache_x
+with compat.use_mesh(mesh):
+    for step in range(12):  # 12 steps > window: wraps the ring
+        xt = jax.random.normal(jax.random.PRNGKey(10 + step), (2, 1, 64),
+                               jnp.float32) * 0.5
+        o_x, cache_x = att.mha(p, xt, cfg, pol, cache=cache_x)
+        o_c, cache_c = att.mha(p, xt, cfg_c, pol, cache=cache_c)
+        np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_c),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"ring step {step}")
+        np.testing.assert_array_equal(np.asarray(cache_x.k),
+                                      np.asarray(cache_c.k))
+print("COMPOSED_ORACLE_OK")
+"""
+
+
+def test_composed_flash_shmap_flash_pallas_vs_oracle_subprocess():
+    run_child(_COMPOSED_ORACLE, "COMPOSED_ORACLE_OK", timeout=480)
+
+
+# ------------------------------------------------ prefill through dispatch
+
+def _cfg(**kw):
+    base = dict(arch="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+                n_kv=2, d_ff=128, vocab=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("impl", ["xla", "flash_pallas"])
+def test_prefill_from_cache_matches_full_prefill(impl):
+    """Two-chunk continuation prefill over the cache == one-shot prefill
+    (binary32 cache: identical K/V bits, so only reduction order differs)."""
+    cfg = _cfg(decode_impl=impl)
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 64),
+                          jnp.float32) * 0.5
+    full, cache_full = att.prefill_to_cache(p, x, cfg, pol, capacity=48)
+    # chunk 1 builds the cache, chunk 2 continues from it
+    out1, cache = att.prefill_to_cache(p, x[:, :20], cfg, pol, capacity=48)
+    out2, cache = att.prefill_from_cache(p, x[:, 20:], cfg, pol, cache,
+                                         q_offset=20)
+    np.testing.assert_allclose(np.asarray(full[:, :20]), np.asarray(out1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(full[:, 20:]), np.asarray(out2),
+                               rtol=1e-5, atol=1e-6)
+    assert int(cache.pos) == 32
+    np.testing.assert_array_equal(np.asarray(cache.k[:, :32]),
+                                  np.asarray(cache_full.k[:, :32]))
+
+
+def test_prefill_from_cache_packed_flash_vs_xla():
+    """Continuation over a *packed* (binary8) cache: the flash backend reads
+    the payload in-register, the XLA backend dequantizes -- same bits, same
+    dispatch, results agree to reduction-order tolerance."""
+    pol = binary32_policy(kv_fmt=BINARY8)
+    cfg_x = _cfg(decode_impl="xla")
+    cfg_f = _cfg(decode_impl="flash_shmap+flash_pallas")  # base = flash
+    p = att.attn_init(jax.random.PRNGKey(0), cfg_x, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64),
+                          jnp.float32) * 0.5
+    _, cache = att.prefill_to_cache(p, x[:, :16], cfg_x, pol, capacity=32)
+    o_x, c_x = att.prefill_from_cache(p, x[:, 16:], cfg_x, pol, cache,
+                                      q_offset=16)
+    o_f, c_f = att.prefill_from_cache(p, x[:, 16:], cfg_f, pol, cache,
+                                      q_offset=16)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(c_x.k.astype(jnp.float32)),
+        np.asarray(c_f.k.astype(jnp.float32)))
+
+
+def test_prefill_from_cache_rejects_ring_buffer():
+    cfg = _cfg(window=8)
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 64), jnp.float32)
+    _, cache = att.prefill_to_cache(p, x, cfg, pol, capacity=64)
+    with pytest.raises(ValueError):
+        att.prefill_from_cache(p, x, cfg, pol, cache, q_offset=6)
+
+
+def test_prefill_from_cache_rejects_overflow():
+    cfg = _cfg()
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64), jnp.float32)
+    _, cache = att.prefill_to_cache(p, x, cfg, pol, capacity=16)
+    with pytest.raises(ValueError):
+        att.prefill_from_cache(p, x, cfg, pol, cache, q_offset=12)
+
+
+def test_ring_cache_slot_convention_evicts_oldest():
+    """After a prefill longer than the window, the token at absolute
+    position p must sit at slot p % cap -- the decode path's write
+    convention (slot = pos % cap) -- so the next decode step overwrites
+    the OLDEST cached token, not an arbitrary one."""
+    cfg = _cfg(window=8)
+    pol = binary32_policy()
+    S, cap = 12, 8
+    # k[:, p] == p everywhere: the slot content names its token position
+    posval = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.float32)[None, :, None, None],
+        (2, S, cfg.n_kv, cfg.head_dim))
+    cache = att._build_cache(posval, posval, cfg, pol, capacity=64, S=S)
+    assert cache.capacity == cap and int(cache.pos) == S
+    got = np.asarray(cache.k[0, :, 0, 0])
+    expected = np.zeros(cap)
+    for p in range(S - cap, S):  # cached positions 4..11
+        expected[p % cap] = p
+    np.testing.assert_array_equal(got, expected)
+    # the next decode write lands on slot pos % cap and evicts position 4,
+    # the oldest -- exactly the token leaving the sliding window
+    assert expected[int(cache.pos) % cap] == S - cap
+
+
+def test_prefill_to_cache_is_mha_with_capacity():
+    """prefill_to_cache == mha(cache_capacity=...): one K/V computation,
+    one dispatch path, identical outputs and cache."""
+    cfg = _cfg()
+    pol = transprecision_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, pol.dtype("attn_w"))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64),
+                          pol.dtype("act")) * 0.5
+    o1, c1 = att.prefill_to_cache(p, x, cfg, pol, capacity=32)
+    o2, c2 = att.mha(p, x, cfg, pol, causal=True, cache_capacity=32)
+    np.testing.assert_array_equal(np.asarray(o1, np.float32),
+                                  np.asarray(o2, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(c1.k.astype(jnp.float32)),
+        np.asarray(c2.k.astype(jnp.float32)))
+    assert int(c1.pos) == int(c2.pos) == 12

@@ -1,5 +1,7 @@
 """Hypothesis property-based tests on the transprecision type system's
-invariants (FlexFloat semantics, IEEE 754 rounding laws)."""
+invariants (FlexFloat semantics, IEEE 754 rounding laws) and on the shared
+in-register codec (kernels/codec.py).  Requires ``hypothesis`` (in
+requirements-dev.txt; CI installs it, so these run on every push)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import flexfloat as ff
 from repro.core import qtensor as qt
-from repro.core.formats import FpFormat
+from repro.core.formats import PAPER_FORMATS, FpFormat
+from repro.kernels import codec
 
 fmt_strategy = st.builds(
     FpFormat,
@@ -95,6 +98,84 @@ def test_ff_add_commutes(fmt, xs, ys):
     r1 = np.asarray(ff.ff_add(ff.quantize(a, fmt), ff.quantize(b, fmt), fmt))
     r2 = np.asarray(ff.ff_add(ff.quantize(b, fmt), ff.quantize(a, fmt), fmt))
     np.testing.assert_array_equal(r1.view(np.uint32), r2.view(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# shared in-register codec (kernels/codec.py)
+# ---------------------------------------------------------------------------
+
+paper_fmt = st.sampled_from(PAPER_FORMATS)
+
+# f32 edge soup: NaN/Inf, signed zeros, subnormal neighbourhood, plus
+# arbitrary finite values -- the payloads the codec must round-trip exactly
+edge_floats = st.one_of(
+    st.floats(width=32, allow_nan=True, allow_infinity=True),
+    st.sampled_from([0.0, -0.0, float("inf"), float("-inf"), float("nan"),
+                     1e-45, -1e-45, 6e-8, -6e-8, 1.17e-38, 6.1e-5, 65504.0,
+                     -65504.0, 3.38e38]),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fmt=paper_fmt, xs=st.lists(edge_floats, min_size=1, max_size=32))
+def test_codec_encode_decode_idempotent(fmt, xs):
+    """decode(encode(x)) is a fixed point: encoding the decoded value again
+    reproduces the same payload bits, for NaN/Inf/subnormal edges too."""
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    p1 = np.asarray(qt.encode(x, fmt))
+    d1 = np.asarray(qt.decode(p1, fmt))
+    p2 = np.asarray(qt.encode(jnp.asarray(d1), fmt))
+    np.testing.assert_array_equal(p1, p2)
+    d2 = np.asarray(qt.decode(p2, fmt))
+    nn = ~np.isnan(d1)
+    np.testing.assert_array_equal(d1[nn].view(np.uint32),
+                                  d2[nn].view(np.uint32))
+    np.testing.assert_array_equal(np.isnan(d1), np.isnan(d2))
+
+
+@settings(max_examples=200, deadline=None)
+@given(fmt=paper_fmt, xs=st.lists(edge_floats, min_size=1, max_size=32))
+def test_codec_tile_matches_storage_api(fmt, xs):
+    """kernels/codec tile functions == the core.qtensor storage API."""
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    api = np.asarray(qt.encode(x, fmt))
+    tile = np.asarray(codec.encode_tile(
+        codec.quantize_tile(x, fmt.e, fmt.m), fmt))
+    np.testing.assert_array_equal(api, tile)
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_tile(api, fmt)).view(np.uint32),
+        np.asarray(qt.decode(api, fmt)).view(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(fmt=st.sampled_from([f for f in PAPER_FORMATS if f.bits < 32]),
+       xs=st.lists(edge_floats, min_size=1, max_size=16),
+       lead=st.integers(min_value=1, max_value=3))
+def test_pack_words_roundtrip(fmt, xs, lead):
+    """unpack_words(pack_words(p)) == p for every container width, with the
+    last axis padded to the 4x8b / 2x16b word lane count."""
+    lanes = 4 // fmt.container_dtype.dtype.itemsize
+    n = max(1, len(xs)) * lanes  # divisibility by construction
+    x = np.resize(np.asarray(xs, np.float32), (lead, n))
+    payload = qt.encode(jnp.asarray(x), fmt)
+    words = qt.pack_words(payload)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (lead, n // lanes)
+    back = qt.unpack_words(words, payload.dtype)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(payload))
+
+
+@settings(max_examples=100, deadline=None)
+@given(ws=st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                   min_size=1, max_size=16),
+       itemsize=st.sampled_from([1, 2, 4]))
+def test_unpack_words_roundtrip_from_words(ws, itemsize):
+    """pack_words(unpack_words(w)) == w: the word layout loses nothing."""
+    dtype = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[itemsize]
+    w = jnp.asarray(np.asarray(ws, np.uint32))
+    parts = qt.unpack_words(w, dtype)
+    back = qt.pack_words(parts)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
 
 
 @settings(max_examples=50, deadline=None)
