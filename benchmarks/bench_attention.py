@@ -1,11 +1,17 @@
 """Decode-step attention benchmark: packed KV cache vs f32, per backend.
 
 ``collect()`` produces schema-stable entries for every (paper KV format x
-attention backend) cell -- ``xla`` (the dequantize path; its jitted wall
-time is the honest CPU baseline), ``flash_pallas`` (the fused packed-KV
-kernel) and the composed ``flash_shmap+flash_pallas`` (sequence-sharded
-fused kernel) -- which ``benchmarks/run.py`` aggregates into
-``BENCH_attention.json`` at the repo root so the perf trajectory is
+attention backend) cell, where the backend axis is the registry's FULL
+legal-spelling list (``kernels/dispatch.legal_impls()``): ``xla`` (the
+dequantize path; its jitted wall time is the honest CPU baseline), the
+fused ``flash_pallas`` kernel, the block-table ``paged`` kernel (reported
+with its page size and pool internal fragmentation), and every
+``flash_shmap`` composition.  Deriving the axis from the registry is
+deliberate -- a backend added to ``dispatch.py`` shows up here (and in the
+CI bench smoke, which executes every spelling in interpret mode) without
+anyone remembering to extend a list, and ``benchmarks/run.py`` fails the
+smoke if a spelling ever goes missing.  ``run.py`` aggregates the entries
+into ``BENCH_attention.json`` at the repo root so the perf trajectory is
 diffable across PRs.
 
 Off TPU the Pallas kernels run in interpret mode, so their wall time is
@@ -32,11 +38,18 @@ from repro.core.qtensor import encode
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import (attention_hbm_bytes,
                                            flash_decode_reference)
+from repro.kernels.paged_attention import paged_hbm_bytes
+from repro.kernels.paged_cache import (DEFAULT_PAGE_SIZE,
+                                       paged_view_of_contiguous,
+                                       pool_fragmentation)
 
 # decode_32k-flavoured cell scaled for CPU: 4 seqs x 4k tokens, 8 KV heads
 B, S, H, G, DH = 4, 4096, 8, 4, 64
 
-IMPLS = ("xla", "flash_pallas", "flash_shmap+flash_pallas")
+# every legal registry spelling (includes the bare "flash_shmap" alias of
+# "flash_shmap+xla": executing the alias is how the bench locks down that
+# canonicalization keeps working)
+IMPLS = tuple(dispatch.legal_impls())
 
 
 def _time_us(fn, *args, reps=3):
@@ -55,34 +68,49 @@ def collect(b=B, s=S, h=H, g=G, dh=DH, *, impls=IMPLS,
 
     entries = []
     shape = f"B{b}_S{s}_H{h}_G{g}_dh{dh}"
+    page = max(8, min(DEFAULT_PAGE_SIZE, s))
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(b, h, g, dh)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
-    lengths = jnp.full((b,), s, jnp.int32)
+    # ragged row 0 (s - page/2 valid tokens) so the paged rows report a
+    # non-trivial pool fragmentation instead of a structural 0.0
+    len_np = np.full((b,), s, np.int64)
+    len_np[0] = s - page // 2
+    lengths = jnp.asarray(len_np, jnp.int32)
     bytes_f32 = attention_hbm_bytes(b, s, h, dh, None, g=g)
     on_tpu = jax.default_backend() == "tpu"
 
     for fmt in PAPER_FORMATS:
         kp, vp = encode(k, fmt), encode(v, fmt)
         bytes_packed = attention_hbm_bytes(b, s, h, dh, fmt, g=g)
+        bytes_paged = paged_hbm_bytes(b, len_np, h, dh, fmt, page_size=page,
+                                      g=g)
         pol = transprecision_policy(kv_fmt=fmt)
         ck = jax.lax.bitcast_convert_type(kp, fmt.native_dtype)
         cv = jax.lax.bitcast_convert_type(vp, fmt.native_dtype)
 
         for impl in impls:
+            paged = dispatch.canonicalize_impl(impl)[-1] == "paged"
+            kv_bytes = (bytes_f32 if impl == "xla"
+                        else bytes_paged if paged else bytes_packed)
             entry = {
                 "bench": "attention_decode",
                 "shape": shape,
                 "impl": impl,
                 "fmt": fmt.name,
-                "hbm_bytes": bytes_f32 if impl == "xla" else bytes_packed,
-                "bytes_vs_f32": round(
-                    bytes_f32 / (bytes_f32 if impl == "xla"
-                                 else bytes_packed), 2),
+                "hbm_bytes": kv_bytes,
+                "bytes_vs_f32": round(bytes_f32 / kv_bytes, 2),
                 "ms_per_step": None,
                 "interpret": (not on_tpu) and impl != "xla",
             }
+            if paged:
+                # block-table layout costs: page granule, whole-page
+                # fetches (counted in hbm_bytes above) and the fraction of
+                # allocated pool slots holding no valid token
+                entry["page_size"] = page
+                entry["pool_frag"] = round(
+                    pool_fragmentation(len_np, page), 4)
             if impl == "xla":
                 ref = jax.jit(lambda qq, kk, vv, ll, fmt=fmt:
                               flash_decode_reference(qq, kk, vv, fmt, ll))
@@ -93,10 +121,18 @@ def collect(b=B, s=S, h=H, g=G, dh=DH, *, impls=IMPLS,
                     cost.get("bytes accessed", 0))
             elif on_tpu or time_interpret:
                 fn = dispatch.resolve_decode(impl)
-                us = _time_us(
-                    lambda qq, kk, vv, ll, fn=fn, pol=pol:
-                    fn(qq, kk, vv, ll, scale=float(1 / np.sqrt(dh)),
-                       policy=pol), q, ck, cv, lengths, reps=1)
+                if paged:
+                    kpg, vpg, tbl = paged_view_of_contiguous(ck, cv, page)
+                    us = _time_us(
+                        lambda qq, kk, vv, ll, tt, fn=fn, pol=pol:
+                        fn(qq, kk, vv, ll, scale=float(1 / np.sqrt(dh)),
+                           policy=pol, block_tables=tt),
+                        q, kpg, vpg, lengths, tbl, reps=1)
+                else:
+                    us = _time_us(
+                        lambda qq, kk, vv, ll, fn=fn, pol=pol:
+                        fn(qq, kk, vv, ll, scale=float(1 / np.sqrt(dh)),
+                           policy=pol), q, ck, cv, lengths, reps=1)
                 entry["ms_per_step"] = round(us / 1e3, 3)
             entries.append(entry)
     return entries

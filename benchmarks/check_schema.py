@@ -1,0 +1,98 @@
+"""Schema guard: fail when the bench-smoke aggregates drift from the
+committed perf-trajectory files.
+
+``BENCH_attention.json`` / ``BENCH_kernels.json`` at the repo root are the
+diffable perf record; the CI smoke writes the same aggregates (tiny shapes)
+to ``results/bench_smoke/``.  If a bench change renames/adds/drops entry
+keys, the committed files silently stop matching what the next full run
+would produce -- drift that previously only surfaced at the next manual
+bench.  This script pins, per file:
+
+  * the top-level document keys and the ``schema`` version,
+  * the union of entry keys (smoke must introduce/drop none vs committed),
+  * for attention: every legal registry spelling present in BOTH files
+    (a backend registered in ``kernels/dispatch.py`` must be tracked in
+    the committed trajectory too, not just executed by the smoke).
+
+``python benchmarks/check_schema.py [--smoke-dir results/bench_smoke]``
+exits non-zero with a diff-style message on any mismatch.
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+FILES = ("BENCH_attention.json", "BENCH_kernels.json")
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        raise SystemExit(f"[schema] missing {path} -- run "
+                         f"`python benchmarks/run.py --smoke` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _entry_keys(doc: dict) -> set:
+    keys = set()
+    for e in doc.get("entries", ()):
+        keys |= set(e)
+    return keys
+
+
+def check(committed_dir: str, smoke_dir: str) -> list:
+    """All schema mismatches between the two aggregate sets (empty = ok)."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.kernels import dispatch
+
+    problems = []
+    for name in FILES:
+        committed = _load(os.path.join(committed_dir, name))
+        smoke = _load(os.path.join(smoke_dir, name))
+        if set(committed) != set(smoke):
+            problems.append(
+                f"{name}: top-level keys differ -- committed "
+                f"{sorted(committed)} vs smoke {sorted(smoke)}")
+        if committed.get("schema") != smoke.get("schema"):
+            problems.append(
+                f"{name}: schema version differs -- committed "
+                f"{committed.get('schema')} vs smoke {smoke.get('schema')}")
+        ck, sk = _entry_keys(committed), _entry_keys(smoke)
+        if ck != sk:
+            problems.append(
+                f"{name}: entry keys differ -- only-committed "
+                f"{sorted(ck - sk)}, only-smoke {sorted(sk - ck)}; "
+                f"regenerate the committed file with the full bench run")
+        if name == "BENCH_attention.json":
+            legal = set(dispatch.legal_impls())
+            for label, doc in (("committed", committed), ("smoke", smoke)):
+                have = {e.get("impl") for e in doc.get("entries", ())}
+                missing = legal - have
+                if missing:
+                    problems.append(
+                        f"{name} ({label}): registry spellings missing "
+                        f"from the sweep: {sorted(missing)}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke-dir",
+                    default=os.path.join(ROOT, "results", "bench_smoke"))
+    ap.add_argument("--committed-dir", default=ROOT)
+    args = ap.parse_args(argv)
+    problems = check(args.committed_dir, args.smoke_dir)
+    for p in problems:
+        print(f"[schema] MISMATCH: {p}")
+    if problems:
+        return 1
+    print(f"[schema] ok: {', '.join(FILES)} agree with {args.smoke_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

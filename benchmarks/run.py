@@ -45,15 +45,23 @@ def run_smoke(args) -> None:
     committed full-shape BENCH_*.json at the repo root."""
     from benchmarks import bench_attention, bench_kernels
 
+    from repro.kernels import dispatch
+
     out_dir = args.out_dir or os.path.join(ROOT, "results", "bench_smoke")
     attn = bench_attention.collect(2, 256, 2, 2, 32, time_interpret=True)
     kern = bench_kernels.collect(256, 128, use_pallas=True)
     write_bench_json("attention", attn, args.timestamp, out_dir)
     write_bench_json("kernels", kern, args.timestamp, out_dir)
-    # hard fail if any backend cell silently vanished from the sweep
+    # hard fail unless EVERY legal registry spelling ran: the smoke is the
+    # one place the full decode_impl surface executes outside pytest, so a
+    # spelling missing here means a backend landed without bench coverage
     impls = {e["impl"] for e in attn}
-    missing = set(bench_attention.IMPLS) - impls
+    missing = set(dispatch.legal_impls()) - impls
     assert not missing, f"attention bench lost backends: {missing}"
+    executed = [e for e in attn if e["ms_per_step"] is None]
+    assert not executed, (
+        f"smoke entries without an executed timing: "
+        f"{[(e['impl'], e['fmt']) for e in executed]}")
     print("[bench] smoke ok")
 
 

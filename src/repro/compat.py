@@ -31,6 +31,12 @@ Resolved symbols:
     when no mesh is active).  Either return value supports ``.axis_names``,
     ``.shape`` and can be passed to :func:`shard_map`.
 
+``get_ambient_mesh()``
+    Like :func:`get_abstract_mesh` but additionally falls back to the
+    thread-local physical mesh on *newer* JAX too, so a classic
+    ``with mesh:`` block is visible to mesh-sensitive callers on every
+    supported version.
+
 ``make_mesh(axis_shapes, axis_names, axis_types=None)``
     Forwards ``axis_types`` only where supported (the older API has no
     explicit/auto axis distinction -- every axis behaves as Auto).
@@ -45,8 +51,8 @@ import jax
 from jax.experimental.pallas import tpu as _pltpu
 
 __all__ = [
-    "CompilerParams", "cost_analysis", "get_abstract_mesh", "make_mesh",
-    "shard_map", "use_mesh",
+    "CompilerParams", "cost_analysis", "get_abstract_mesh",
+    "get_ambient_mesh", "make_mesh", "shard_map", "use_mesh",
 ]
 
 # -- Pallas TPU compiler params (renamed TPUCompilerParams -> CompilerParams)
@@ -93,6 +99,28 @@ def get_abstract_mesh():
     if mesh.empty:
         return None
     return mesh
+
+
+def get_ambient_mesh():
+    """The mesh the program is actually running under, however it was set.
+
+    :func:`get_abstract_mesh` only sees the *abstract* mesh on newer JAX,
+    so code consulting it misses a mesh activated the classic way (a plain
+    ``with mesh:`` block, which populates only the thread-local *physical*
+    mesh).  This helper checks the abstract mesh first and then falls back
+    to the thread-local physical mesh -- the same degradation this module
+    already applies wholesale on older JAX -- so mesh-sensitive decisions
+    (``dispatch.default_serving_impl``, the ``flash_shmap`` wrapper) behave
+    identically under ``jax.sharding.set_mesh`` and ``with mesh:``.
+    """
+    mesh = get_abstract_mesh()
+    if mesh is not None:
+        return mesh
+    from jax._src.mesh import thread_resources
+    pm = thread_resources.env.physical_mesh
+    if pm.empty:
+        return None
+    return pm
 
 
 def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):

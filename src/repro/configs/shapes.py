@@ -45,13 +45,19 @@ SHAPES = {
 # Fused-kernel serving variants (the tentpole path of kernels/
 # flash_attention.py): same traffic as decode_32k, attention forced through
 # the packed-KV Pallas kernel -- single-chip, and composed with sequence
-# sharding over the mesh's model axis (multi-chip serving).
+# sharding over the mesh's model axis (multi-chip serving).  The paged
+# variant runs the same traffic through the block-table backend
+# (kernels/paged_attention.py; over these contiguous dry-run caches it
+# takes the identity-paging view, so the cell measures pure paging
+# overhead against decode_32k_flash).
 FLASH_SHAPES = {
     "decode_32k_flash": ShapeSpec("decode_32k_flash", "decode", 32768, 128,
                                   decode_impl="flash_pallas"),
     "decode_32k_flash_shmap": ShapeSpec(
         "decode_32k_flash_shmap", "decode", 32768, 128,
         decode_impl="flash_shmap+flash_pallas"),
+    "decode_32k_paged": ShapeSpec("decode_32k_paged", "decode", 32768, 128,
+                                  decode_impl="paged"),
 }
 
 ALL_SHAPES = {**SHAPES, **FLASH_SHAPES}

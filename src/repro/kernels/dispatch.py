@@ -7,24 +7,30 @@ compose instead of excluding each other:
 
 * **base backends** implement single-token decode over a KV cache
   (``"xla"`` -- the dequantize oracle/fallback; ``"flash_pallas"`` -- the
-  fused packed-KV Pallas kernel) and causal prefill.
+  fused packed-KV Pallas kernel over a contiguous cache; ``"paged"`` --
+  the block-table kernel of ``kernels/paged_attention.py`` over a shared
+  page pool, taking an extra ``block_tables`` kwarg) and causal prefill.
 * **wrapper backends** transform another backend.  ``"flash_shmap"``
-  ``shard_map``s any inner decode backend over the cache's sequence axis:
-  every device runs the inner backend on its 1/n_model shard of the cache
-  and the per-shard online-softmax partials (max / sum / weighted-V) are
-  combined with three tiny collectives -- exact softmax attention, so
-  ``flash_shmap(flash_pallas)`` streams the *packed* payload through the
-  fused kernel *on every chip in parallel*, the near-sensor-cluster win
-  (arXiv 2008.12243) applied to serving.
+  ``shard_map``s any inner decode backend over the cache's *storage* axis:
+  the sequence axis for contiguous bases, the pool's page axis for the
+  ``paged`` base (each device owns 1/n_model of the physical pages and
+  masks block-table entries it does not own -- every token lives on
+  exactly one device).  The per-shard online-softmax partials
+  (max / sum / weighted-V) are combined with three tiny collectives --
+  exact softmax attention, so ``flash_shmap(flash_pallas)`` streams the
+  *packed* payload through the fused kernel *on every chip in parallel*,
+  the near-sensor-cluster win (arXiv 2008.12243) applied to serving.
 
 Spellings (``decode_impl`` on configs, policies, shapes and CLI flags)
 are ``+``-compositions read left to right, wrapper first::
 
     "xla"                        # dequantize path
     "flash_pallas"               # fused packed-KV kernel
+    "paged"                      # block-table kernel over the page pool
     "flash_shmap"                # == "flash_shmap+xla"
     "flash_shmap+xla"            # sequence-sharded dequantize path
     "flash_shmap+flash_pallas"   # sharded fused kernel (multi-chip serving)
+    "flash_shmap+paged"          # page-pool-sharded block-table kernel
 
 ``validate_impl`` is called at construction time by ``PrecisionPolicy``,
 ``ModelConfig`` and ``ShapeSpec`` so an unknown spelling fails loudly with
@@ -41,6 +47,11 @@ decode backend::
       -> out (B, H, G, dh) float, or with residuals (out, m, l) where
          m/l: (B, H, G) f32 running max / softmax sum (flash-attention
          partials; ``out`` is already normalized by ``l``).
+
+    The ``paged`` base reinterprets the cache operands: ck/cv are the
+    shared page pools (num_pages, page_size, H, dh), n_valid is per-slot
+    sequence length, and a required keyword ``block_tables`` (B, n_pages)
+    int32 maps logical pages to physical ones (-1 = unmapped/masked).
 
 prefill backend::
 
@@ -67,7 +78,7 @@ from repro import compat
 # module is imported)
 # ---------------------------------------------------------------------------
 
-BASE_IMPLS = ("xla", "flash_pallas")
+BASE_IMPLS = ("xla", "flash_pallas", "paged")
 WRAPPER_IMPLS = ("flash_shmap",)
 DEFAULT_INNER = "xla"  # "flash_shmap" alone means flash_shmap+xla
 
@@ -117,10 +128,15 @@ def default_serving_impl() -> Optional[str]:
     packed-KV path whenever a TPU backend is present (where the Pallas
     kernel is compiled, not interpreted), composed with sequence sharding
     when the ambient mesh has a model axis.  ``None`` (model-config
-    default) elsewhere -- on CPU the XLA path is the honest baseline."""
+    default) elsewhere -- on CPU the XLA path is the honest baseline.
+
+    The mesh probe uses :func:`compat.get_ambient_mesh`, which also sees a
+    mesh activated by a classic ``with mesh:`` block (thread-local
+    *physical* mesh) -- consulting only the abstract mesh silently dropped
+    the ``flash_shmap`` composition for exactly that common TPU idiom."""
     if jax.default_backend() != "tpu":
         return None
-    mesh = compat.get_abstract_mesh()
+    mesh = compat.get_ambient_mesh()
     if mesh is not None and "model" in (mesh.axis_names or ()):
         return "flash_shmap+flash_pallas"
     return "flash_pallas"
@@ -158,11 +174,16 @@ def register_wrapper(name: str) -> Callable:
 
 
 def resolve_decode(spec: str) -> Callable:
-    """Spelling -> decode callable (wrappers applied left to right)."""
+    """Spelling -> decode callable (wrappers applied left to right).
+
+    Wrapper factories receive the *base* backend name alongside the inner
+    callable: how a wrapper shards depends on the cache layout the base
+    reads (sequence axis for contiguous bases, page axis for ``paged``).
+    """
     parts = canonicalize_impl(validate_impl(spec, allow_none=False))
     fn = _DECODE[parts[-1]]
     for w in reversed(parts[:-1]):
-        fn = _WRAPPERS[w](fn)
+        fn = _WRAPPERS[w](fn, base=parts[-1])
     return fn
 
 
@@ -178,10 +199,30 @@ def resolve_prefill(spec: str) -> Callable:
 # ---------------------------------------------------------------------------
 
 @register_wrapper("flash_shmap")
-def _flash_shmap_factory(inner: Callable) -> Callable:
+def _flash_shmap_factory(inner: Callable, base: str = DEFAULT_INNER
+                         ) -> Callable:
+    if base == "paged":
+        def wrapped(q, ck, cv, n_valid, *, scale, policy, block_tables,
+                    return_residuals: bool = False):
+            # ck/cv are the page pools; shard their *page* axis (axis 0)
+            mesh = compat.get_ambient_mesh()
+            P = ck.shape[0]
+            usable = (not return_residuals
+                      and mesh is not None
+                      and "model" in (mesh.axis_names or ())
+                      and P % mesh.shape["model"] == 0)
+            if not usable:
+                return inner(q, ck, cv, n_valid, scale=scale, policy=policy,
+                             block_tables=block_tables,
+                             return_residuals=return_residuals)
+            return _shmap_decode_paged(inner, mesh, q, ck, cv, n_valid,
+                                       block_tables, scale=scale,
+                                       policy=policy)
+        return wrapped
+
     def wrapped(q, ck, cv, n_valid, *, scale, policy,
                 return_residuals: bool = False):
-        mesh = compat.get_abstract_mesh()
+        mesh = compat.get_ambient_mesh()
         S = ck.shape[1]
         usable = (not return_residuals
                   and mesh is not None
@@ -198,6 +239,30 @@ def _flash_shmap_factory(inner: Callable) -> Callable:
     return wrapped
 
 
+def _batch_pspec(mesh, batch: int):
+    """Partition entry for the batch axis: the mesh's data axes when they
+    divide the batch, else replicated."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = max(int(np.prod([mesh.shape[a] for a in dp])), 1)
+    return dp if batch % n_dp == 0 else None
+
+
+def _merge_partials(o, m, l):
+    """Exact flash-attention merge of normalized per-shard partials over
+    the ``model`` axis: with w_i = exp(m_i - max_j m_j) * l_i the exact
+    softmax output is sum_i w_i o_i / sum_i w_i (empty shards have
+    l_i = 0).  One definition shared by every sharded wrapper branch so
+    the numerics can never diverge between cache layouts."""
+    o = o.astype(jnp.float32)
+    gm = jax.lax.pmax(m, "model")
+    w = jnp.exp(m - gm) * l
+    num = jax.lax.psum(o * w[..., None], "model")
+    den = jax.lax.psum(w, "model")
+    # explicit zero guard (a subnormal epsilon would be FTZ-flushed)
+    den = jnp.where(den > 0, den, 1.0)[..., None]
+    return num / den
+
+
 def _shmap_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
     """The genuinely sharded branch of the flash_shmap wrapper (module-level
     so tests can assert it was taken, not silently skipped by the mesh
@@ -206,10 +271,7 @@ def _shmap_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
 
     n_model = mesh.shape["model"]
     s_loc = ck.shape[1] // n_model
-    dp = tuple(a for a in mesh.axis_names if a != "model")
-    B = q.shape[0]
-    bspec = dp if B % max(
-        int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 else None
+    bspec = _batch_pspec(mesh, q.shape[0])
 
     def local(q_b, k_b, v_b, nv_b):
         # shard i owns cache slots [i*s_loc, (i+1)*s_loc): its local
@@ -218,17 +280,7 @@ def _shmap_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
         local_n = jnp.clip(nv_b - idx * s_loc, 0, s_loc)
         o, m, l = inner(q_b, k_b, v_b, local_n, scale=scale,
                         policy=policy, return_residuals=True)
-        o = o.astype(jnp.float32)
-        # flash-attention merge of normalized partials: with
-        # w_i = exp(m_i - max_j m_j) * l_i the exact softmax output is
-        # sum_i w_i o_i / sum_i w_i (empty shards have l_i = 0).
-        gm = jax.lax.pmax(m, "model")
-        w = jnp.exp(m - gm) * l
-        num = jax.lax.psum(o * w[..., None], "model")
-        den = jax.lax.psum(w, "model")
-        # explicit zero guard (a subnormal epsilon would be FTZ-flushed)
-        den = jnp.where(den > 0, den, 1.0)[..., None]
-        return num / den
+        return _merge_partials(o, m, l)
 
     return compat.shard_map(
         local, mesh=mesh,
@@ -241,3 +293,38 @@ def _shmap_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
         # make the output replicated by construction
         check_rep=False,
     )(q, ck, cv, n_valid)
+
+
+def _shmap_decode_paged(inner, mesh, q, ck, cv, n_valid, block_tables, *,
+                        scale, policy):
+    """Pool-sharded paged decode: device ``i`` holds physical pages
+    [i*p_loc, (i+1)*p_loc) of the K/V pools and rewrites the (replicated)
+    block table so entries it owns become pool-local ids and every other
+    entry is -1 (masked by the kernel).  Every token lives on exactly one
+    device, so the per-shard flash partials merge with the same
+    max/sum-correction collectives as the contiguous case."""
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    p_loc = ck.shape[0] // n_model
+    bspec = _batch_pspec(mesh, q.shape[0])
+
+    def local(q_b, kp_l, vp_l, nv_b, tbl_b):
+        idx = jax.lax.axis_index("model")
+        first = idx * p_loc
+        owned = (tbl_b >= first) & (tbl_b < first + p_loc)
+        ltbl = jnp.where(owned, tbl_b - first, -1)
+        o, m, l = inner(q_b, kp_l, vp_l, nv_b, scale=scale, policy=policy,
+                        block_tables=ltbl, return_residuals=True)
+        return _merge_partials(o, m, l)
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P("model", None, None, None),   # pool page axis
+                  P("model", None, None, None),
+                  P(bspec),
+                  P(bspec, None)),                # tables replicated/model
+        out_specs=P(bspec, None, None, None),
+        check_rep=False,
+    )(q, ck, cv, n_valid, block_tables)

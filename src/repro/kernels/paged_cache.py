@@ -1,0 +1,351 @@
+"""Block-table (paged) packed-KV cache: one shared page pool per layer.
+
+Production serving never has one contiguous KV cache per sequence: requests
+arrive and finish continuously, their lengths are unknown up front, and a
+pre-sized ``(B, S_max, ...)`` buffer wastes ``S_max - len`` slots per
+sequence.  The vLLM insight is to virtualize the cache -- fixed-size *pages*
+in one shared pool, per-sequence *block tables* mapping logical page ``p``
+of a sequence to a physical page id -- so memory is allocated in page
+quanta as sequences grow and returned the moment they finish.
+
+Here that idea composes with the paper's transprecision storage: the pool
+holds the *packed* binary8/16/16alt payloads (container-width bytes in HBM,
+the 4x byte win of ``kernels/flash_attention.py``), and the page size is
+required to be a multiple of the codec's word-packing lane count
+(``kernels/codec.pack_word_tile``: 4 x 8 b / 2 x 16 b lanes per u32 word)
+so every page stays u32-word-aligned regardless of format -- the sub-word
+vectorized-container layout of Anderson & Gregg (arXiv 1601.07789) applied
+at page granularity.
+
+Two halves, deliberately split:
+
+:class:`PagedKVCache`
+    The *device* state -- a pytree of arrays (pools, block tables, sequence
+    lengths) that flows through ``jax.jit`` decode steps unchanged in
+    structure.  All device ops (:func:`append_decode`,
+    :func:`write_prefill`, :func:`release_slot`) are functional updates.
+
+:class:`PagePool`
+    The *host* allocator -- a free list plus per-slot page ownership.  Page
+    allocation is an admission-control decision (can this request fit?
+    must one be evicted?), which is inherently host-side control flow, so
+    it lives outside jit; the serving loop in ``launch/serve.py`` drives it
+    and pushes refreshed block tables into the device state between steps.
+
+Unmapped block-table entries are ``-1``.  Device writes through an unmapped
+entry are *dropped* (scatter ``mode="drop"`` via an out-of-bounds sentinel),
+and the decode kernel masks unmapped pages, so a freed slot is inert without
+any pool zeroing -- page reuse just overwrites stale payload bytes.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default page granule: 64 tokens x head_dim lanes keeps a page's K tile a
+# healthy multiple of the f32 (8, 128) VPU tile while staying fine-grained
+# enough that internal fragmentation averages page_size/2 tokens/sequence.
+DEFAULT_PAGE_SIZE = 64
+
+
+def page_alignment(fmt=None) -> int:
+    """Smallest legal page-size multiple for ``fmt``.
+
+    lcm(8, lanes-per-u32-word): 8 sublanes for the f32 compute tile, and
+    4/2/1 lanes so a page boundary never splits a packed u32 word
+    (``codec.pack_word_tile``).  8 covers every paper format; the function
+    exists so the constraint is stated once, next to its reason.
+    """
+    del fmt  # lanes (4 | 2 | 1) always divide the sublane tile of 8
+    return 8
+
+
+def validate_page_size(page_size: int, fmt=None) -> int:
+    align = page_alignment(fmt)
+    if page_size <= 0 or page_size % align:
+        raise ValueError(
+            f"page_size {page_size} must be a positive multiple of {align} "
+            f"(u32-word alignment of the packed codec lanes + f32 sublane "
+            f"tile)")
+    return page_size
+
+
+class PagedKVCache(NamedTuple):
+    """Device half of the paged cache (a jit-stable pytree of arrays).
+
+    k_pool / v_pool: (num_pages, page_size, n_kv, head_dim) in the policy's
+        kv_cache storage dtype -- bit-identical to the packed (e, m)
+        container, exactly like the contiguous ``KVCache``.
+    block_tables: (n_slots, pages_per_seq) int32; entry ``[s, p]`` is the
+        physical page holding positions [p*page_size, (p+1)*page_size) of
+        the sequence in slot ``s``, or -1 when unmapped.
+    seq_lens: (n_slots,) int32 tokens currently stored per slot.
+    """
+    k_pool: jax.Array
+    v_pool: jax.Array
+    block_tables: jax.Array
+    seq_lens: jax.Array
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pool.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pool.shape[1]
+
+    @property
+    def n_slots(self) -> int:
+        return self.block_tables.shape[0]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.block_tables.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Max tokens one slot can address through its block table."""
+        return self.pages_per_seq * self.page_size
+
+
+def init_paged_cache(n_slots: int, num_pages: int, page_size: int,
+                     pages_per_seq: int, n_kv: int, head_dim: int,
+                     dtype) -> PagedKVCache:
+    validate_page_size(page_size)
+    z = jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype)
+    return PagedKVCache(
+        k_pool=z, v_pool=z,
+        block_tables=jnp.full((n_slots, pages_per_seq), -1, jnp.int32),
+        seq_lens=jnp.zeros((n_slots,), jnp.int32))
+
+
+def _scatter_tokens(pool, phys, off, vals):
+    """pool[phys[i], off[i]] = vals[i], dropping unmapped (phys < 0) rows.
+
+    The drop sentinel is ``num_pages`` (unambiguously out of bounds for
+    ``mode="drop"``) rather than relying on negative-index semantics.
+    """
+    phys = jnp.where(phys < 0, pool.shape[0], phys)
+    return pool.at[phys, off].set(vals, mode="drop")
+
+
+def append_decode(cache: PagedKVCache, k, v) -> PagedKVCache:
+    """Append one decode token per slot at position ``seq_lens[s]``.
+
+    k / v: (n_slots, 1, n_kv, head_dim), any float dtype (cast to the pool
+    storage dtype here).  Slots whose next position has no mapped page --
+    free slots, or a serving loop that forgot to extend the table -- are
+    dropped and their length does NOT advance, so host and device length
+    bookkeeping can never silently diverge.
+    """
+    pos = cache.seq_lens
+    lp = jnp.clip(pos // cache.page_size, 0, cache.pages_per_seq - 1)
+    phys = cache.block_tables[jnp.arange(cache.n_slots), lp]
+    off = pos % cache.page_size
+    mapped = (phys >= 0) & (pos < cache.capacity)
+    phys = jnp.where(mapped, phys, -1)
+    kq = k[:, 0].astype(cache.k_pool.dtype)
+    vq = v[:, 0].astype(cache.v_pool.dtype)
+    return cache._replace(
+        k_pool=_scatter_tokens(cache.k_pool, phys, off, kq),
+        v_pool=_scatter_tokens(cache.v_pool, phys, off, vq),
+        seq_lens=jnp.where(mapped, pos + 1, pos))
+
+
+def write_prefill(cache: PagedKVCache, slot, k, v) -> PagedKVCache:
+    """Write a prefilled prompt (positions 0..S-1) into ``slot``'s pages.
+
+    k / v: (S, n_kv, head_dim) -- one sequence, e.g. ``KVCache.k[0][:S]``
+    from the transient contiguous prefill cache.  Pages must already be
+    mapped by the host allocator; unmapped tails are dropped (and the
+    recorded length clamped to what was actually mapped).
+    """
+    S = k.shape[0]
+    pos = jnp.arange(S)
+    lp = jnp.clip(pos // cache.page_size, 0, cache.pages_per_seq - 1)
+    phys = cache.block_tables[slot, lp]
+    mapped = (phys >= 0) & (pos < cache.capacity)
+    n_mapped = jnp.sum(mapped.astype(jnp.int32))
+    phys = jnp.where(mapped, phys, -1)
+    off = pos % cache.page_size
+    return cache._replace(
+        k_pool=_scatter_tokens(cache.k_pool, phys, off,
+                               k.astype(cache.k_pool.dtype)),
+        v_pool=_scatter_tokens(cache.v_pool, phys, off,
+                               v.astype(cache.v_pool.dtype)),
+        seq_lens=cache.seq_lens.at[slot].set(n_mapped))
+
+
+def release_slot(cache: PagedKVCache, slot: int) -> PagedKVCache:
+    """Unmap a slot (free/evict).  Pool bytes are left stale on purpose --
+    unmapped pages are masked by every reader, and the next
+    :func:`write_prefill`/:func:`append_decode` through a fresh table
+    overwrites them (page reuse)."""
+    return cache._replace(
+        block_tables=cache.block_tables.at[slot].set(-1),
+        seq_lens=cache.seq_lens.at[slot].set(0))
+
+
+def set_block_tables(cache: PagedKVCache, tables) -> PagedKVCache:
+    """Push a host-refreshed block table into the device state."""
+    return cache._replace(
+        block_tables=jnp.asarray(tables, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# contiguous <-> paged bridges
+# ---------------------------------------------------------------------------
+
+def paged_view_of_contiguous(ck, cv, page_size: int = DEFAULT_PAGE_SIZE):
+    """View a contiguous (B, S, H, dh) cache as (pools, block_tables).
+
+    The identity paging: sequence ``b``'s logical page ``p`` is physical
+    page ``b * n_pages + p``.  Pure reshape (plus zero-padding when
+    ``page_size`` does not divide S; padded slots sit beyond every valid
+    length).  This is how a ``decode_impl="paged"`` spelling runs over an
+    ordinary :class:`repro.models.attention.KVCache` -- same kernel, same
+    block-table plumbing, degenerate table -- which keeps the paged backend
+    benchmarkable and oracle-testable without a serving loop.
+    """
+    B, S = ck.shape[0], ck.shape[1]
+    page = max(8, min(page_size, S))
+    n_pages = -(-S // page)
+    pad = n_pages * page - S
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    shape = (B * n_pages, page) + ck.shape[2:]
+    tables = jnp.arange(B * n_pages, dtype=jnp.int32).reshape(B, n_pages)
+    return ck.reshape(shape), cv.reshape(shape), tables
+
+
+def gather_pages(pool, block_tables):
+    """Materialize the contiguous (B, pages_per_seq * page_size, H, dh)
+    view of a paged pool -- the XLA dequantize-path gather (unmapped pages
+    come back as physical page 0 and must be masked by the caller; the
+    reference in ``paged_attention.py`` does)."""
+    tbl = jnp.clip(block_tables, 0, pool.shape[0] - 1)
+    g = pool[tbl]  # (B, pages_per_seq, page_size, H, dh)
+    B, P, page = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape((B, P * page) + g.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator (admission control for the serving loop)
+# ---------------------------------------------------------------------------
+
+class PagePool:
+    """Free-list page allocator + host mirror of tables and lengths.
+
+    Purely host-side numpy/python state: the serving loop consults it for
+    admission (``can_admit``), growth (``ensure_capacity``) and eviction,
+    then pushes ``self.tables`` into the device :class:`PagedKVCache` via
+    :func:`set_block_tables`.  Freed pages return to the free list in LIFO
+    order so reuse is immediate (and deliberately exercised by tests:
+    stale payload bytes in a reused page must be invisible)."""
+
+    def __init__(self, num_pages: int, page_size: int, n_slots: int,
+                 pages_per_seq: int):
+        validate_page_size(page_size)
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.pages_per_seq = pages_per_seq
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.owned: dict = {}           # slot -> [physical page ids]
+        self.lens = np.zeros(n_slots, np.int64)
+        self.tables = np.full((n_slots, pages_per_seq), -1, np.int32)
+        self.peak_pages_used = 0
+
+    # -- queries -------------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def pages_used(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def occupancy(self) -> float:
+        """Fraction of physical pages currently allocated."""
+        return self.pages_used / max(self.num_pages, 1)
+
+    def internal_fragmentation(self) -> float:
+        """Fraction of *allocated* pool slots holding no valid token --
+        the bytes block-tables waste (vs a perfectly packed pool), the
+        quantity vLLM drove to <4 %.  0.0 when nothing is allocated."""
+        slots = self.pages_used * self.page_size
+        if slots == 0:
+            return 0.0
+        return 1.0 - float(self.lens.sum()) / slots
+
+    def can_admit(self, n_tokens: int) -> bool:
+        need = self.pages_for(max(n_tokens, 1))
+        return need <= len(self.free) and need <= self.pages_per_seq
+
+    # -- mutations -----------------------------------------------------------
+    def allocate(self, slot: int, n_tokens: int) -> bool:
+        """Map pages for a fresh ``n_tokens``-token sequence in ``slot``."""
+        assert slot not in self.owned, f"slot {slot} already allocated"
+        if not self.can_admit(n_tokens):
+            return False
+        need = self.pages_for(max(n_tokens, 1))
+        pages = [self.free.pop() for _ in range(need)]
+        self.owned[slot] = pages
+        self.tables[slot, :need] = pages
+        self.lens[slot] = n_tokens
+        self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
+        return True
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s mapping to cover ``n_tokens`` total tokens.
+        False when the pool is out of pages (caller evicts) or the block
+        table is full (sequence hit ``pages_per_seq * page_size``)."""
+        pages = self.owned[slot]
+        need = self.pages_for(n_tokens)
+        if need > self.pages_per_seq:
+            return False
+        while len(pages) < need:
+            if not self.free:
+                return False
+            pg = self.free.pop()
+            self.tables[slot, len(pages)] = pg
+            pages.append(pg)
+        self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
+        return True
+
+    def note_decode_step(self, slot: int) -> None:
+        self.lens[slot] += 1
+
+    def free_slot(self, slot: int) -> int:
+        """Return ``slot``'s pages to the free list; -> #pages freed."""
+        pages = self.owned.pop(slot, [])
+        self.free.extend(reversed(pages))
+        self.tables[slot] = -1
+        self.lens[slot] = 0
+        return len(pages)
+
+    def stats(self) -> dict:
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "pages_used": self.pages_used,
+            "peak_pages_used": self.peak_pages_used,
+            "occupancy": round(self.occupancy(), 4),
+            "internal_fragmentation":
+                round(self.internal_fragmentation(), 4),
+        }
+
+
+def pool_fragmentation(lengths, page_size: int) -> float:
+    """Analytic internal fragmentation for per-sequence ``lengths`` under
+    page granule ``page_size`` (the benchmark's fragmentation column: what
+    fraction of allocated pool slots a paged layout wastes)."""
+    lengths = np.asarray(lengths, np.int64)
+    pages = -(-lengths // page_size)
+    slots = int(pages.sum()) * page_size
+    if slots == 0:
+        return 0.0
+    return 1.0 - float(lengths.sum()) / slots

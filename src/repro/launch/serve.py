@@ -14,9 +14,19 @@ Serving loop:
     ``--decode-impl flash_shmap+flash_pallas`` shard_maps that kernel over
     the cache's sequence axis for multi-chip serving (any registry spelling
     from kernels/dispatch.py is accepted, and unknown ones fail loudly);
+  * ``--decode-impl paged`` (or ``flash_shmap+paged``) switches the KV
+    storage itself to a block-table page pool (kernels/paged_cache.py):
+    pages are allocated as sequences grow and freed the moment they
+    finish, admission is gated on pool occupancy, and when the pool runs
+    dry mid-decode the most recently admitted sequence is evicted back to
+    the queue (its pages reused immediately) -- the vLLM memory model on
+    top of transprecision packed storage.  ``--page-size`` sets the page
+    granule, ``--pool-pages`` caps the pool (defaults to slots x
+    ceil(capacity / page_size), i.e. no memory pressure);
   * when no ``--decode-impl`` is given and a TPU backend is present, serving
     defaults to the fused path (``dispatch.default_serving_impl``);
-  * finished sequences free their slot immediately.
+  * finished sequences free their slot (and, paged, their pages)
+    immediately.
 """
 from __future__ import annotations
 
@@ -30,7 +40,7 @@ import numpy as np
 
 from repro import configs
 from repro.core.policy import get_policy
-from repro.kernels import dispatch
+from repro.kernels import dispatch, paged_cache
 from repro.models.registry import build
 
 
@@ -41,56 +51,35 @@ class Request:
         self.max_new = max_new
         self.generated: List[int] = []
         self.done = False
+        self.evictions = 0
+
+    def reset(self):
+        """Requeued after eviction: generation restarts from the prompt."""
+        self.generated = []
+        self.evictions += 1
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b", choices=configs.ARCHS)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--capacity", type=int, default=128)
-    ap.add_argument("--policy", default="transprecision")
-    ap.add_argument("--decode-impl", default=None,
-                    choices=list(dispatch.legal_impls()),
-                    help="attention backend (default: fused path on TPU, "
-                         "else model config; flash_pallas = fused packed-KV "
-                         "kernel, flash_shmap+flash_pallas = that kernel "
-                         "sequence-sharded over the mesh)")
-    args = ap.parse_args(argv)
+def _insert_slot(all_states, one_states, slot: int, n_slots: int):
+    """Write a 1-sequence state pytree into row ``slot`` of the batched
+    state (arrays without a leading slots axis are taken wholesale)."""
+    return jax.tree.map(
+        lambda all_s, one: all_s.at[slot:slot + 1].set(one)
+        if hasattr(all_s, "at") and all_s.ndim and
+        all_s.shape[0] == n_slots else one,
+        all_states, one_states)
 
-    # the policy-level override wins inside attention.decode_impl(), so no
-    # config rewrite / model rebuild is needed; with no explicit flag,
-    # serving prefers the fused path wherever a TPU backend is present
-    impl = args.decode_impl or dispatch.default_serving_impl()
-    policy = get_policy(args.policy, decode_impl=impl)
-    model, cfg = build(args.arch, reduced=args.reduced)
-    params = model.init_params(jax.random.PRNGKey(0), policy)
-    rng = np.random.default_rng(0)
 
-    reqs = [Request(i, rng.integers(0, min(cfg.vocab, 97),
-                                    args.prompt_len).tolist(),
-                    args.max_new)
-            for i in range(args.requests)]
+def _run_contiguous(args, model, cfg, policy, params, reqs, impl):
+    """The original fixed-capacity loop: per-slot contiguous KV caches."""
     queue = list(reqs)
     slots: List[Optional[Request]] = [None] * args.slots
 
-    # batched state for all slots
     states = model.init_state(args.slots, args.capacity, policy)
     tokens = jnp.zeros((args.slots, 1), jnp.int32)
 
     prefill_one = jax.jit(lambda p, b: model.prefill(p, b, policy,
                                                      args.capacity))
     decode = jax.jit(lambda p, t, s: model.decode_step(p, t, s, policy))
-
-    def insert(slot_states, one_states, slot):
-        return jax.tree.map(
-            lambda all_s, one: all_s.at[slot:slot + 1].set(one)
-            if hasattr(all_s, "at") and all_s.ndim and
-            all_s.shape[0] == args.slots else one,
-            slot_states, one_states)
 
     t0 = time.perf_counter()
     steps = 0
@@ -100,18 +89,11 @@ def main(argv=None):
         for si in range(args.slots):
             if slots[si] is None and queue:
                 r = queue.pop(0)
-                batch = {"tokens": jnp.asarray([r.prompt], jnp.int32)}
-                if cfg.prefix_len:
-                    batch["prefix_embeds"] = jnp.zeros(
-                        (1, cfg.prefix_len, cfg.d_model), jnp.float32)
-                if cfg.encoder_layers:
-                    batch["encoder_embeds"] = jnp.zeros(
-                        (1, cfg.encoder_len, cfg.d_model), jnp.float32)
-                logits, one_states = prefill_one(params, batch)
+                logits, one_states = prefill_one(params, _batch(cfg, r))
                 nxt = int(jnp.argmax(logits[0, -1]))
                 r.generated.append(nxt)
                 slots[si] = r
-                states = insert(states, one_states, si)
+                states = _insert_slot(states, one_states, si, args.slots)
                 tokens = tokens.at[si, 0].set(nxt)
         if all(s is None for s in slots):
             break
@@ -136,6 +118,204 @@ def main(argv=None):
           f"(kv format: {policy.fmt('kv_cache').name}, "
           f"decode: {impl or cfg.decode_impl})")
     return reqs
+
+
+def _batch(cfg, r: Request) -> dict:
+    batch = {"tokens": jnp.asarray([r.prompt], jnp.int32)}
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jnp.zeros(
+            (1, cfg.prefix_len, cfg.d_model), jnp.float32)
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jnp.zeros(
+            (1, cfg.encoder_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _run_paged(args, model, cfg, policy, params, reqs, impl):
+    """Continuous batching over a shared block-table page pool.
+
+    Admission, growth and eviction are host-side decisions against
+    ``PagePool`` occupancy; the device sees only (pools, block_tables,
+    seq_lens) flowing through one jitted decode step per iteration.
+    """
+    if any(k == "attn" for k in cfg.attn_pattern) and cfg.window is not None:
+        raise ValueError(
+            f"arch {cfg.arch}: paged serving does not support sliding-window "
+            f"ring buffers; use a contiguous --decode-impl")
+    page = paged_cache.validate_page_size(args.page_size)
+    pages_per_seq = -(-args.capacity // page)
+    if args.pool_pages is None:
+        num_pages = args.slots * pages_per_seq
+    elif args.pool_pages > 0:
+        num_pages = args.pool_pages
+    else:
+        raise ValueError(f"--pool-pages must be positive, got "
+                         f"{args.pool_pages}")
+    pool = paged_cache.PagePool(num_pages, page, args.slots, pages_per_seq)
+    worst = pool.pages_for(args.prompt_len + args.max_new)
+    if worst > pages_per_seq or worst > num_pages:
+        raise ValueError(
+            f"a single request needs {worst} pages "
+            f"(prompt {args.prompt_len} + max-new {args.max_new}, page size "
+            f"{page}) but the pool offers min({pages_per_seq} per-seq, "
+            f"{num_pages} total); raise --capacity/--pool-pages")
+
+    states = model.init_state(args.slots, page, policy)
+    attn_layers = [li for li, k in enumerate(cfg.attn_pattern) if k == "attn"]
+    for li in attn_layers:
+        states[li] = paged_cache.init_paged_cache(
+            args.slots, num_pages, page, pages_per_seq, cfg.n_kv,
+            cfg.head_dim, policy.dtype("kv_cache"))
+    tokens = jnp.zeros((args.slots, 1), jnp.int32)
+
+    # capacity=None: the transient contiguous prefill cache is prompt-sized,
+    # immediately rewritten into pages (prefill-to-pages)
+    prefill_one = jax.jit(lambda p, b: model.prefill(p, b, policy, None))
+    decode = jax.jit(lambda p, t, s: model.decode_step(p, t, s, policy))
+
+    queue = list(reqs)
+    slots: List[Optional[Request]] = [None] * args.slots
+    admitted_at = [0] * args.slots  # admission counter per slot (for LIFO
+    admissions = 0                  # eviction: newest goes first)
+    evictions = 0
+
+    def evict(si: int):
+        nonlocal evictions
+        r = slots[si]
+        r.reset()
+        queue.insert(0, r)
+        pool.free_slot(si)
+        for li in attn_layers:
+            states[li] = paged_cache.release_slot(states[li], si)
+        slots[si] = None
+        evictions += 1
+
+    def newest_active() -> Optional[int]:
+        active = [si for si in range(args.slots) if slots[si] is not None]
+        return max(active, key=lambda si: admitted_at[si]) if active else None
+
+    t0 = time.perf_counter()
+    steps = 0
+    completed = 0
+    while completed < len(reqs):
+        # ---- admission: prefill into free slots while pages remain --------
+        for si in range(args.slots):
+            if slots[si] is None and queue and pool.can_admit(
+                    len(queue[0].prompt) + 1):
+                r = queue.pop(0)
+                ok = pool.allocate(si, len(r.prompt))
+                assert ok, (si, len(r.prompt))  # can_admit held above
+                logits, one_states = prefill_one(params, _batch(cfg, r))
+                nxt = int(jnp.argmax(logits[0, -1]))
+                r.generated.append(nxt)
+                for li, kind in enumerate(cfg.attn_pattern):
+                    if kind == "attn":
+                        states[li] = paged_cache.set_block_tables(
+                            states[li], pool.tables)
+                        states[li] = paged_cache.write_prefill(
+                            states[li], si, one_states[li].k[0],
+                            one_states[li].v[0])
+                    else:
+                        states[li] = _insert_slot(states[li], one_states[li],
+                                                  si, args.slots)
+                slots[si] = r
+                admissions += 1
+                admitted_at[si] = admissions
+                tokens = tokens.at[si, 0].set(nxt)
+        if all(s is None for s in slots):
+            break
+        # ---- growth: every active slot needs a mapped page for the next
+        # token; when the pool is dry, evict the newest sequence (LIFO --
+        # the oldest admitted sequence always finishes, so the loop makes
+        # progress) and requeue it
+        for si in range(args.slots):
+            while slots[si] is not None and not pool.ensure_capacity(
+                    si, int(pool.lens[si]) + 1):
+                victim = newest_active()
+                evict(victim)
+                if victim == si:
+                    break
+        if all(s is None for s in slots):
+            continue
+        for li in attn_layers:
+            states[li] = paged_cache.set_block_tables(states[li],
+                                                      pool.tables)
+        # ---- one batched decode step over the page pool -------------------
+        logits, states = decode(params, tokens, states)
+        steps += 1
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+        for si, r in enumerate(slots):
+            if r is None:
+                continue
+            pool.note_decode_step(si)
+            tok = int(nxt[si])
+            r.generated.append(tok)
+            if len(r.generated) >= r.max_new:
+                r.done = True
+                completed += 1
+                pool.free_slot(si)
+                for li in attn_layers:
+                    states[li] = paged_cache.release_slot(states[li], si)
+                slots[si] = None
+        tokens = nxt.astype(jnp.int32)[:, None]
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.generated) for r in reqs)
+    st = pool.stats()
+    print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
+          f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
+          f"(kv format: {policy.fmt('kv_cache').name}, decode: {impl}, "
+          f"page_size: {page}, pool: {st['peak_pages_used']}/"
+          f"{st['num_pages']} pages peak, frag: "
+          f"{st['internal_fragmentation']}, evictions: {evictions})")
+    return reqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=configs.ARCHS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--policy", default="transprecision")
+    ap.add_argument("--decode-impl", default=None,
+                    choices=list(dispatch.legal_impls()),
+                    help="attention backend (default: fused path on TPU, "
+                         "else model config; flash_pallas = fused packed-KV "
+                         "kernel, flash_shmap+flash_pallas = that kernel "
+                         "sequence-sharded over the mesh, paged = block-"
+                         "table page pool with continuous batching)")
+    ap.add_argument("--page-size", type=int,
+                    default=paged_cache.DEFAULT_PAGE_SIZE,
+                    help="tokens per KV page (paged backends; multiple of "
+                         "8 so pages stay u32-word-aligned for every "
+                         "packed format)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical pages in the shared pool (default: "
+                         "slots * ceil(capacity / page_size); smaller "
+                         "values exercise admission control and eviction)")
+    args = ap.parse_args(argv)
+
+    # the policy-level override wins inside attention.decode_impl(), so no
+    # config rewrite / model rebuild is needed; with no explicit flag,
+    # serving prefers the fused path wherever a TPU backend is present
+    impl = args.decode_impl or dispatch.default_serving_impl()
+    policy = get_policy(args.policy, decode_impl=impl)
+    model, cfg = build(args.arch, reduced=args.reduced)
+    params = model.init_params(jax.random.PRNGKey(0), policy)
+    rng = np.random.default_rng(0)
+
+    reqs = [Request(i, rng.integers(0, min(cfg.vocab, 97),
+                                    args.prompt_len).tolist(),
+                    args.max_new)
+            for i in range(args.requests)]
+
+    paged = (impl is not None
+             and dispatch.canonicalize_impl(impl)[-1] == "paged")
+    runner = _run_paged if paged else _run_contiguous
+    return runner(args, model, cfg, policy, params, reqs, impl)
 
 
 if __name__ == "__main__":

@@ -46,6 +46,15 @@ compose a wrapper with a base backend, ``wrapper+base``:
                           cache through the fused kernel; exact softmax
                           attention (tests pin it to the XLA oracle at
                           <= 1e-6 on a 2-device host mesh).
+  * ``"paged"``        -- block-table decode over a shared page pool
+                          (kernels/paged_attention.py + paged_cache.py):
+                          the continuous-batching cache layout.  Reads a
+                          :class:`~repro.kernels.paged_cache.PagedKVCache`
+                          directly, or any contiguous ``KVCache`` through
+                          the degenerate identity paging
+                          (``paged_view_of_contiguous``).  Composes as
+                          ``"flash_shmap+paged"``: the *pool* is sharded
+                          over the mesh's model axis.
 
 Prefill (fresh and continuation-from-packed-cache) goes through the same
 registry (``dispatch.resolve_prefill``); a composed spelling resolves to
@@ -65,7 +74,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PrecisionPolicy
-from repro.kernels import dispatch
+from repro.kernels import dispatch, paged_cache
+from repro.kernels.paged_cache import PagedKVCache
 from .layers import act_cast, dense_init, pdot, peinsum, rope
 
 NEG_INF = -1e30
@@ -208,6 +218,29 @@ def _decode_flash_pallas(q, ck, cv, n_valid, *, scale, policy,
                         return_residuals=return_residuals)
 
 
+@dispatch.register_decode("paged")
+def _decode_paged(q, ck, cv, n_valid, *, scale, policy, block_tables=None,
+                  return_residuals: bool = False):
+    """Block-table decode over the shared page pool
+    (kernels/paged_attention.py): ck/cv are the pools
+    (num_pages, page_size, H, dh) in storage dtype, ``n_valid`` the
+    per-slot sequence lengths, ``block_tables`` the logical->physical page
+    map.  The packed payload is gathered page-by-page via scalar-prefetch
+    DMA and decoded in-register -- the 4x byte win on a non-contiguous,
+    continuously-batched cache."""
+    from repro.kernels.paged_attention import paged_decode
+
+    if block_tables is None:
+        raise ValueError(
+            "decode_impl 'paged' reads the cache through a block table; "
+            "pass block_tables=(B, pages_per_seq) int32 (use a PagedKVCache "
+            "or paged_cache.paged_view_of_contiguous for a contiguous one)")
+    kp, vp, fmt = _cache_payload(ck, cv, policy)
+    return paged_decode(q.astype(jnp.float32), kp, vp, fmt,
+                        n_valid.astype(jnp.int32), block_tables, scale=scale,
+                        return_residuals=return_residuals)
+
+
 # ---------------------------------------------------------------------------
 # registered prefill backends
 # ---------------------------------------------------------------------------
@@ -280,6 +313,20 @@ def _prefill_flash_pallas(qg, k, v, *, scale, policy, window, prefix_len,
     return act_cast(out, policy)
 
 
+@dispatch.register_prefill("paged")
+def _prefill_paged(qg, k, v, *, scale, policy, window, prefix_len, chunk,
+                   q_offset: int = 0, fmt=None):
+    """Prefill for the paged backend.  Paging is a property of how the
+    *cache* is stored, not of fresh prefill K/V (dense activations that
+    exist contiguously anyway), so attention delegates to the fused flash
+    prefill; the serving loop then writes the resulting cache into pages
+    (``paged_cache.write_prefill`` -- prefill-to-pages through this same
+    registry dispatch)."""
+    return _prefill_flash_pallas(qg, k, v, scale=scale, policy=policy,
+                                 window=window, prefix_len=prefix_len,
+                                 chunk=chunk, q_offset=q_offset, fmt=fmt)
+
+
 # ---------------------------------------------------------------------------
 # the attention entry points
 # ---------------------------------------------------------------------------
@@ -315,21 +362,43 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
         v = _split_heads(pdot(kv_source, p["wv"], policy, "attn_w"), n_kv, dh)
         causal = False
 
+    # paged caches have one write position *per slot* (ragged continuous
+    # batching), contiguous caches a single scalar ``pos``
+    paged = isinstance(cache, PagedKVCache)
+    cache_pos = 0
+    if cache is not None:
+        cache_pos = cache.seq_lens[:, None] if paged else cache.pos
     if positions is None:
-        positions = jnp.arange(S)[None, :].astype(jnp.int32)
-        if cache is not None:
-            positions = positions + cache.pos
+        positions = jnp.arange(S)[None, :].astype(jnp.int32) + cache_pos
     if kv_source is None and cfg.rope_theta > 0:
         q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, jnp.arange(k.shape[1])[None, :] +
-                 (cache.pos if cache is not None else 0), cfg.rope_theta)
+        k = rope(k, jnp.arange(k.shape[1])[None, :] + cache_pos,
+                 cfg.rope_theta)
 
     scale = np.float32(1.0 / np.sqrt(dh))
     qg = q.reshape(B, S, n_kv, G, dh)
     impl = decode_impl(cfg, policy)
 
     new_cache = None
-    if cache is not None:
+    if paged:
+        # ---- decode over a paged (block-table) cache ----------------------
+        if S != 1:
+            raise ValueError("paged KV caches decode one token at a time; "
+                             "prefill lands via paged_cache.write_prefill")
+        if cfg.window is not None:
+            raise ValueError("paged KV caches do not support sliding-window "
+                             "ring buffers; use a contiguous KVCache")
+        if dispatch.canonicalize_impl(impl)[-1] != "paged":
+            raise ValueError(
+                f"decode_impl {impl!r} cannot read a PagedKVCache; use a "
+                f"'paged' base spelling ('paged' or 'flash_shmap+paged')")
+        new_cache = paged_cache.append_decode(cache, k, v)
+        fn = dispatch.resolve_decode(impl)
+        out = fn(qg[:, 0], new_cache.k_pool, new_cache.v_pool,
+                 new_cache.seq_lens, scale=scale, policy=policy,
+                 block_tables=new_cache.block_tables)
+        out = act_cast(out, policy)[:, None]
+    elif cache is not None:
         # ---- decode: append k/v then attend over the cache ----------------
         kq = k.astype(cache.k.dtype)
         vq = v.astype(cache.v.dtype)
@@ -350,7 +419,21 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
             fn = dispatch.resolve_decode(impl)
             lengths = jnp.broadcast_to(
                 jnp.asarray(n_valid, jnp.int32)[None], (B,))
-            out = fn(qg[:, 0], ck, cv, lengths, scale=scale, policy=policy)
+            if dispatch.canonicalize_impl(impl)[-1] == "paged":
+                # contiguous cache through the paged kernel: the identity
+                # block table (same bits, degenerate paging) -- lets the
+                # paged backend run anywhere a KVCache does (dry-run cells,
+                # oracle tests) without a serving loop.  Clamp the running
+                # token count to the true capacity BEFORE the view: its
+                # page-granule zero padding sits beyond S, and an
+                # unclamped count would let those slots dilute the softmax
+                lengths = jnp.minimum(lengths, ck.shape[1])
+                kp_, vp_, tbl = paged_cache.paged_view_of_contiguous(ck, cv)
+                out = fn(qg[:, 0], kp_, vp_, lengths, scale=scale,
+                         policy=policy, block_tables=tbl)
+            else:
+                out = fn(qg[:, 0], ck, cv, lengths, scale=scale,
+                         policy=policy)
             out = act_cast(out, policy)[:, None]
         else:
             # legacy multi-token append: every new token attends the whole

@@ -23,17 +23,40 @@ def test_legal_impls_include_composed():
     legal = dispatch.legal_impls()
     assert "flash_shmap+flash_pallas" in legal
     assert "flash_shmap+xla" in legal
-    assert set(("xla", "flash_pallas", "flash_shmap")) <= set(legal)
+    assert "flash_shmap+paged" in legal
+    assert set(("xla", "flash_pallas", "paged", "flash_shmap")) <= set(legal)
     assert DECODE_IMPLS == (None,) + legal
 
 
-@pytest.mark.parametrize("bad", ["flashpallas", "xla+flash_shmap",
-                                 "flash_pallas+xla", "flash_shmap+",
-                                 "flash_shmap+flash_shmap", "pallas"])
+# the legal-spelling list grows with every backend; pin each *class* of
+# rejection (unknown base, wrapper in base position, base in wrapper
+# position, duplicate wrapper, empties/typos) and the actionable error
+@pytest.mark.parametrize("bad", [
+    "flashpallas",                    # unknown base, close typo
+    "flash_shmap+nope",               # wrapper + unknown base
+    "xla+flash_shmap",                # wrapper last (order matters)
+    "paged+flash_shmap",              # wrapper last, paged base
+    "flash_pallas+xla",               # base used as wrapper
+    "paged+xla",                      # base used as wrapper (paged)
+    "flash_shmap+",                   # empty base
+    "flash_shmap+flash_shmap",        # duplicate wrapper as base
+    "flash_shmap+flash_shmap+xla",    # duplicate wrapper
+    "pallas",                         # unknown
+])
 def test_validate_impl_rejects_with_legal_list(bad):
     with pytest.raises(ValueError) as ei:
         dispatch.validate_impl(bad)
-    assert "flash_shmap+flash_pallas" in str(ei.value)  # actionable list
+    msg = str(ei.value)
+    assert "flash_shmap+flash_pallas" in msg  # actionable list
+    assert "flash_shmap+paged" in msg
+    assert repr(bad) in msg                   # names the offender
+
+
+def test_validate_impl_none_handling():
+    assert dispatch.validate_impl(None) is None
+    with pytest.raises(ValueError) as ei:
+        dispatch.validate_impl(None, allow_none=False, what="serve impl")
+    assert "serve impl" in str(ei.value)
 
 
 def test_policy_rejects_unknown_impl_at_construction():
@@ -86,6 +109,33 @@ def test_wrapper_falls_back_to_inner_without_mesh():
     a = composed(q, k, v, nv, scale=0.25, policy=pol)
     b = plain(q, k, v, nv, scale=0.25, policy=pol)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wrapper_sees_mesh_from_plain_with_block():
+    """The flash_shmap wrapper (and default_serving_impl) must see a mesh
+    activated by a classic ``with mesh:`` block, not only one set through
+    jax.sharding.set_mesh -- i.e. compat.get_ambient_mesh falls back to the
+    thread-local *physical* mesh.  Single-device model axis: the sharded
+    branch runs (n_model=1) and must equal the unsharded inner backend."""
+    from jax.sharding import Mesh
+
+    from repro import compat
+    from repro.kernels.dispatch import _shmap_decode
+
+    q, k, v = _mk()
+    pol = binary32_policy()
+    nv = jnp.asarray([64, 10], jnp.int32)
+    plain = dispatch.resolve_decode("xla")
+    want = plain(q, k, v, nv, scale=0.25, policy=pol)
+    with Mesh(np.array(jax.devices()[:1]), ("model",)) as mesh:
+        assert compat.get_ambient_mesh() is not None
+        assert "model" in compat.get_ambient_mesh().axis_names
+        # the genuinely-sharded branch, reached through the ambient mesh
+        got = _shmap_decode(plain, mesh, q, k, v, nv, scale=0.25,
+                            policy=pol)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    assert compat.get_ambient_mesh() is None  # context exited cleanly
 
 
 # --------------------------------------- composed backend vs XLA oracle

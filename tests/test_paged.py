@@ -1,0 +1,439 @@
+"""Paged (block-table) packed-KV backend tests.
+
+Oracle-pins the ``paged`` and ``flash_shmap+paged`` decode spellings to the
+XLA dequantize path (<= 1e-6) for all four paper formats, including ragged
+lengths, sequences spanning >= 3 non-contiguous pages, and page reuse after
+a free/realloc -- plus the host allocator's admission/eviction bookkeeping
+and the model-level PagedKVCache decode path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_child
+from repro.core.formats import PAPER_FORMATS
+from repro.core.policy import binary32_policy, transprecision_policy
+from repro.core.qtensor import encode
+from repro.kernels import dispatch, paged_cache
+from repro.kernels.flash_attention import flash_decode_reference
+from repro.kernels.paged_attention import (paged_decode,
+                                           paged_decode_reference,
+                                           paged_hbm_bytes)
+from repro.models import attention as att
+from repro.models.base import ModelConfig
+
+
+def _scatter_to_pool(payload, tables, num_pages, page):
+    """Contiguous per-sequence payload (B, S, H, dh) -> pool via tables."""
+    c = np.asarray(payload)
+    pool = np.zeros((num_pages, page) + c.shape[2:], dtype=c.dtype)
+    B, n_pages = tables.shape
+    for b in range(B):
+        for p in range(n_pages):
+            t = tables[b, p]
+            if t >= 0:
+                pool[t] = c[b, p * page:(p + 1) * page]
+    return jnp.asarray(pool)
+
+
+def _mk(B=3, S=80, H=2, G=4, dh=32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    return q, k, v
+
+
+# -------------------------------------------------- kernel vs XLA oracle
+
+@pytest.mark.parametrize("fmt", PAPER_FORMATS, ids=lambda f: f.name)
+def test_paged_decode_vs_oracle_ragged_noncontiguous(fmt):
+    """Kernel == XLA dequantize oracle (<= 1e-6) with ragged lengths and
+    every sequence's pages scattered non-contiguously through the pool
+    (row 0 spans 5 pages, shuffled; row 1 lives in one page; row 2 spans
+    4 pages and straddles a partial page)."""
+    page, n_pages, num_pages = 16, 5, 20
+    B, S = 3, n_pages * page
+    q, k, v = _mk(B=B, S=S)
+    lengths = jnp.asarray([80, 7, 53], jnp.int32)
+    rng = np.random.default_rng(1)
+    perm = iter(rng.permutation(num_pages).tolist())
+    tables = np.full((B, n_pages), -1, np.int32)
+    for b, need in enumerate([5, 1, 4]):
+        for p in range(need):
+            tables[b, p] = next(perm)
+    assert (tables[0] >= 0).sum() >= 3  # the >= 3-non-contiguous-pages case
+
+    kp, vp = encode(k, fmt), encode(v, fmt)
+    kpool = _scatter_to_pool(kp, tables, num_pages, page)
+    vpool = _scatter_to_pool(vp, tables, num_pages, page)
+    tj = jnp.asarray(tables)
+    got = paged_decode(q, kpool, vpool, fmt, lengths, tj)
+    ref = paged_decode_reference(q, kpool, vpool, fmt, lengths, tj)
+    # and against the *contiguous* dequantize oracle: paging must be pure
+    # layout, invisible in the math
+    want = flash_decode_reference(q, kp, vp, fmt, lengths)
+    assert float(np.abs(np.asarray(got) - np.asarray(ref)).max()) <= 1e-6
+    assert float(np.abs(np.asarray(got) - np.asarray(want)).max()) <= 1e-6
+    assert not np.isnan(np.asarray(got)).any()
+
+
+def test_paged_decode_residuals_match_plain():
+    fmt = PAPER_FORMATS[0]
+    page, n_pages = 16, 3
+    B, S = 2, n_pages * page
+    q, k, v = _mk(B=B, S=S)
+    kp, vp = encode(k, fmt), encode(v, fmt)
+    tables = np.asarray([[2, 0, 4], [5, 1, -1]], np.int32)
+    kpool = _scatter_to_pool(kp, tables, 6, page)
+    vpool = _scatter_to_pool(vp, tables, 6, page)
+    lengths = jnp.asarray([48, 20], jnp.int32)
+    tj = jnp.asarray(tables)
+    o = paged_decode(q, kpool, vpool, fmt, lengths, tj)
+    o2, m, l = paged_decode(q, kpool, vpool, fmt, lengths, tj,
+                            return_residuals=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o2))
+    _, mr, lr = paged_decode_reference(q, kpool, vpool, fmt, lengths, tj,
+                                       return_residuals=True)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), rtol=1e-6)
+
+
+def test_paged_decode_page_reuse_after_free_realloc():
+    """Free a sequence, hand its physical pages to a different sequence,
+    and decode: the stale payload bytes must be invisible (no pool
+    zeroing happens on free -- masking and overwrite are the guarantee)."""
+    fmt = PAPER_FORMATS[0]
+    page, n_pages, num_pages = 8, 4, 6
+    B, S = 1, n_pages * page
+    q, k0, v0 = _mk(B=B, S=S, seed=2)
+    _, k1, v1 = _mk(B=B, S=S, seed=3)
+
+    pool = paged_cache.PagePool(num_pages, page, n_slots=1, pages_per_seq=4)
+    assert pool.allocate(0, 29)
+    first_pages = list(pool.owned[0])
+    cache = paged_cache.init_paged_cache(1, num_pages, page, n_pages, 2, 32,
+                                         jnp.float8_e5m2)
+    cache = paged_cache.set_block_tables(cache, pool.tables)
+    bc = lambda x: jax.lax.bitcast_convert_type(x, jnp.float8_e5m2)  # noqa
+    cache = paged_cache.write_prefill(
+        cache, 0, bc(encode(k0, fmt)[0, :29]), bc(encode(v0, fmt)[0, :29]))
+    # free, then realloc for a different sequence: same physical pages LIFO
+    pool.free_slot(0)
+    assert pool.allocate(0, 21)
+    assert set(pool.owned[0]) <= set(first_pages)  # pages really reused
+    cache = paged_cache.set_block_tables(cache, pool.tables)
+    cache = paged_cache.write_prefill(
+        cache, 0, bc(encode(k1, fmt)[0, :21]), bc(encode(v1, fmt)[0, :21]))
+
+    lengths = jnp.asarray([21], jnp.int32)
+    kp1, vp1 = encode(k1, fmt), encode(v1, fmt)
+    got = paged_decode(
+        q, jax.lax.bitcast_convert_type(cache.k_pool, jnp.uint8),
+        jax.lax.bitcast_convert_type(cache.v_pool, jnp.uint8),
+        fmt, lengths, cache.block_tables)
+    want = flash_decode_reference(q, kp1, vp1, fmt, lengths)
+    assert float(np.abs(np.asarray(got) - np.asarray(want)).max()) <= 1e-6
+
+
+def test_paged_hbm_bytes_counts_whole_pages():
+    b = paged_hbm_bytes(2, [65, 1], 2, 64, PAPER_FORMATS[0], page_size=64,
+                        g=1)
+    # 3 pages (2 + 1) x 64 tok x 2 heads x 64 dh x 1 B x {K, V} + tables + q
+    assert b == 2 * 3 * 64 * 2 * 64 + 3 * 4 + 2 * 2 * 64 * 4
+
+
+# ------------------------------------------------------- device cache ops
+
+def test_append_decode_skips_unmapped_slots():
+    cache = paged_cache.init_paged_cache(2, 4, 8, 2, 1, 8, jnp.float32)
+    pool = paged_cache.PagePool(4, 8, n_slots=2, pages_per_seq=2)
+    assert pool.allocate(0, 3)  # slot 1 left unmapped
+    cache = paged_cache.set_block_tables(cache, pool.tables)
+    cache = cache._replace(seq_lens=jnp.asarray([3, 0], jnp.int32))
+    k = jnp.ones((2, 1, 1, 8), jnp.float32)
+    cache = paged_cache.append_decode(cache, k, k)
+    np.testing.assert_array_equal(np.asarray(cache.seq_lens), [4, 0])
+    # the mapped slot's token landed at page 0 (physical tables[0,0]) off 3
+    phys = int(np.asarray(cache.block_tables)[0, 0])
+    assert float(cache.k_pool[phys, 3, 0, 0]) == 1.0
+    # release: table unmapped, lens zeroed, next append is a no-op
+    cache = paged_cache.release_slot(cache, 0)
+    cache = paged_cache.append_decode(cache, k, k)
+    np.testing.assert_array_equal(np.asarray(cache.seq_lens), [0, 0])
+
+
+def test_validate_page_size():
+    paged_cache.validate_page_size(8)
+    paged_cache.validate_page_size(64)
+    for bad in (0, -8, 12, 7):
+        with pytest.raises(ValueError):
+            paged_cache.validate_page_size(bad)
+
+
+# --------------------------------------------------------- host allocator
+
+def test_page_pool_alloc_free_reuse_and_stats():
+    pool = paged_cache.PagePool(num_pages=6, page_size=8, n_slots=3,
+                                pages_per_seq=3)
+    assert pool.can_admit(17) and not pool.can_admit(25)  # 3 > pages_per_seq
+    assert pool.allocate(0, 17)           # 3 pages
+    assert pool.allocate(1, 9)            # 2 pages
+    assert pool.pages_used == 5 and pool.occupancy() == 5 / 6
+    # internal fragmentation: 5 pages * 8 slots hold 26 tokens
+    assert abs(pool.internal_fragmentation() - (1 - 26 / 40)) < 1e-9
+    assert not pool.allocate(2, 9)        # only 1 page free
+    assert pool.can_admit(8)
+    # growth within the table, then table exhaustion
+    assert pool.ensure_capacity(1, 16)    # still 2 pages
+    assert pool.ensure_capacity(1, 17)    # grows to 3
+    assert not pool.ensure_capacity(1, 25)   # table full -> caller evicts
+    freed = pool.free_slot(0)
+    assert freed == 3 and pool.pages_used == 3
+    np.testing.assert_array_equal(pool.tables[0], [-1, -1, -1])
+    # LIFO reuse: the realloc gets recently-freed physical pages
+    assert pool.allocate(2, 24)
+    assert pool.peak_pages_used == 6
+    st = pool.stats()
+    assert st["pages_used"] == 6 and st["occupancy"] == 1.0
+
+
+def test_pool_fragmentation_analytic():
+    assert paged_cache.pool_fragmentation([64, 64], 64) == 0.0
+    assert abs(paged_cache.pool_fragmentation([65, 1], 64)
+               - (1 - 66 / 192)) < 1e-9
+    assert paged_cache.pool_fragmentation([], 64) == 0.0
+
+
+# ----------------------------------------------------- model-level wiring
+
+def _cfg(**kw):
+    base = dict(arch="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+                n_kv=2, d_ff=128, vocab=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_mha_contiguous_cache_through_paged_view_matches_xla():
+    """decode_impl='paged' over an ordinary KVCache (identity block table)
+    == the XLA path: paging is invisible in the math."""
+    cfg_x = _cfg(decode_impl="xla")
+    cfg_p = _cfg(decode_impl="paged")
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg_x, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64),
+                          jnp.float32) * 0.5
+    _, cache_x = att.prefill_to_cache(p, x, cfg_x, pol, capacity=32)
+    cache_p = cache_x
+    for step in range(3):
+        xt = jax.random.normal(jax.random.PRNGKey(10 + step), (2, 1, 64),
+                               jnp.float32) * 0.5
+        o_x, cache_x = att.mha(p, xt, cfg_x, pol, cache=cache_x)
+        o_p, cache_p = att.mha(p, xt, cfg_p, pol, cache=cache_p)
+        np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"step {step}")
+        np.testing.assert_array_equal(np.asarray(cache_x.k),
+                                      np.asarray(cache_p.k))
+
+
+def test_mha_paged_cache_decode_matches_contiguous():
+    """Full PagedKVCache decode (write_prefill + per-step table growth +
+    append) tracks the contiguous XLA decode, packed binary8 storage."""
+    pol = binary32_policy(kv_fmt="binary8")
+    cfg_x = _cfg(decode_impl="xla")
+    cfg_p = _cfg(decode_impl="paged")
+    p = att.attn_init(jax.random.PRNGKey(0), cfg_x, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64),
+                          jnp.float32) * 0.5
+    _, ccache = att.prefill_to_cache(p, x, cfg_x, pol, capacity=32)
+
+    page, pages_per_seq, num_pages = 8, 4, 12
+    pool = paged_cache.PagePool(num_pages, page, 2, pages_per_seq)
+    pcache = paged_cache.init_paged_cache(2, num_pages, page, pages_per_seq,
+                                          cfg_x.n_kv, cfg_x.head_dim,
+                                          pol.dtype("kv_cache"))
+    for s in range(2):
+        assert pool.allocate(s, 12)
+    pcache = paged_cache.set_block_tables(pcache, pool.tables)
+    for s in range(2):
+        pcache = paged_cache.write_prefill(pcache, s, ccache.k[s, :12],
+                                           ccache.v[s, :12])
+    np.testing.assert_array_equal(np.asarray(pcache.seq_lens), [12, 12])
+    for step in range(5):
+        xt = jax.random.normal(jax.random.PRNGKey(10 + step), (2, 1, 64),
+                               jnp.float32) * 0.5
+        for s in range(2):
+            assert pool.ensure_capacity(s, 13 + step)
+        pcache = paged_cache.set_block_tables(pcache, pool.tables)
+        o_x, ccache = att.mha(p, xt, cfg_x, pol, cache=ccache)
+        o_p, pcache = att.mha(p, xt, cfg_p, pol, cache=pcache)
+        # binary8 probs-cast asymmetry (xla narrows materialized probs,
+        # kernels keep f32) bounds this at ~1e-3, same as flash_pallas
+        np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p),
+                                   rtol=5e-3, atol=5e-3,
+                                   err_msg=f"step {step}")
+        np.testing.assert_array_equal(np.asarray(pcache.seq_lens),
+                                      [13 + step] * 2)
+
+
+def test_mha_paged_view_clamps_overflowing_token_count():
+    """Decode past a *full* non-window contiguous cache: the running token
+    count exceeds capacity, and the paged view's page-granule zero padding
+    must not count as valid (regression: unclamped lengths let padded
+    slots dilute the softmax)."""
+    cfg_x = _cfg(decode_impl="xla")
+    cfg_p = _cfg(decode_impl="paged")
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg_x, jnp.float32)
+    # capacity 12 is NOT a page multiple -> the view pads to 16 slots
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64),
+                          jnp.float32) * 0.5
+    _, cache_x = att.prefill_to_cache(p, x, cfg_x, pol, capacity=12)
+    cache_p = cache_x
+    for step in range(3):  # pos 12..14 > capacity: cache stays full
+        xt = jax.random.normal(jax.random.PRNGKey(20 + step), (2, 1, 64),
+                               jnp.float32) * 0.5
+        o_x, cache_x = att.mha(p, xt, cfg_x, pol, cache=cache_x)
+        o_p, cache_p = att.mha(p, xt, cfg_p, pol, cache=cache_p)
+        np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"step {step}")
+
+
+def test_mha_paged_cache_rejects_contiguous_impl():
+    cfg = _cfg(decode_impl="xla")
+    pol = binary32_policy()
+    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    pcache = paged_cache.init_paged_cache(2, 4, 8, 2, cfg.n_kv,
+                                          cfg.head_dim, jnp.float32)
+    xt = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 64), jnp.float32)
+    with pytest.raises(ValueError) as ei:
+        att.mha(p, xt, cfg, pol, cache=pcache)
+    assert "paged" in str(ei.value)
+
+
+def test_decode_paged_requires_block_tables():
+    q, k, v = _mk(B=2, S=16)
+    fn = dispatch.resolve_decode("paged")
+    with pytest.raises(ValueError) as ei:
+        fn(q, k, v, jnp.asarray([16, 16], jnp.int32), scale=0.25,
+           policy=binary32_policy())
+    assert "block_tables" in str(ei.value)
+
+
+def test_paged_shape_spec_pinned():
+    from repro.configs.shapes import ALL_SHAPES
+    assert ALL_SHAPES["decode_32k_paged"].decode_impl == "paged"
+
+
+# ------------------------------- pool-sharded wrapper vs oracle (2 devices)
+
+_SHARDED_PAGED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core.formats import PAPER_FORMATS
+from repro.core.policy import transprecision_policy
+from repro.core.qtensor import encode
+from repro.kernels import dispatch
+from repro.kernels.paged_attention import paged_decode_reference
+import repro.models.attention as att  # registers the backends
+
+mesh = compat.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+B, H, G, dh = 3, 2, 4, 32
+page, n_pages, num_pages = 16, 5, 20   # pool page axis: 20 % 2 == 0
+S = n_pages * page
+q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+# ragged: row 0 full (5 scattered pages -- both shards own some), row 1
+# one page (single shard), row 2 straddles a partial page
+lengths = jnp.asarray([80, 7, 53], jnp.int32)
+perm = iter(rng.permutation(num_pages).tolist())
+tables = np.full((B, n_pages), -1, np.int32)
+for b, need in enumerate([5, 1, 4]):
+    for p in range(need):
+        tables[b, p] = next(perm)
+scale = float(1.0 / np.sqrt(dh))
+fn = dispatch.resolve_decode("flash_shmap+paged")
+
+def scatter(payload):
+    c = np.asarray(payload)
+    pool = np.zeros((num_pages, page) + c.shape[2:], dtype=c.dtype)
+    for b in range(B):
+        for p in range(n_pages):
+            if tables[b, p] >= 0:
+                pool[tables[b, p]] = c[b, p*page:(p+1)*page]
+    return jnp.asarray(pool)
+
+for fmt in PAPER_FORMATS:
+    kp, vp = encode(k, fmt), encode(v, fmt)
+    pol = transprecision_policy(kv_fmt=fmt)
+    kpool, vpool = scatter(kp), scatter(vp)
+    ck = jax.lax.bitcast_convert_type(kpool, fmt.native_dtype)
+    cv = jax.lax.bitcast_convert_type(vpool, fmt.native_dtype)
+    tj = jnp.asarray(tables)
+    with compat.use_mesh(mesh):
+        got = jax.jit(lambda q, a, b, n, t: fn(
+            q, a, b, n, scale=scale, policy=pol,
+            block_tables=t))(q, ck, cv, lengths, tj)
+    want = paged_decode_reference(q, kpool, vpool, fmt, lengths, tj,
+                                  scale=scale)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    assert err <= 1e-6, (fmt.name, err)
+    assert not np.isnan(np.asarray(got)).any(), fmt.name
+
+# free/realloc under sharding: move row 1's page to the other shard
+tables2 = tables.copy()
+old = tables2[1, 0]
+free = sorted(set(range(num_pages)) - set(tables2[tables2 >= 0].tolist()))
+other = [p for p in free if (p < 10) != (old < 10)][0]
+tables2[1, 0] = other
+fmt = PAPER_FORMATS[0]
+kp, vp = encode(k, fmt), encode(v, fmt)
+pol = transprecision_policy(kv_fmt=fmt)
+kpool = np.array(scatter(kp)); vpool = np.array(scatter(vp))
+kpool[other] = np.asarray(kp)[1, :page]; vpool[other] = np.asarray(vp)[1, :page]
+ck = jax.lax.bitcast_convert_type(jnp.asarray(kpool), fmt.native_dtype)
+cv = jax.lax.bitcast_convert_type(jnp.asarray(vpool), fmt.native_dtype)
+tj = jnp.asarray(tables2)
+with compat.use_mesh(mesh):
+    got = jax.jit(lambda q, a, b, n, t: fn(
+        q, a, b, n, scale=scale, policy=pol,
+        block_tables=t))(q, ck, cv, lengths, tj)
+want = paged_decode_reference(q, jnp.asarray(kpool), jnp.asarray(vpool),
+                              fmt, lengths, tj, scale=scale)
+err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+assert err <= 1e-6, ("realloc", err)
+print("SHARDED_PAGED_OK")
+"""
+
+
+def test_flash_shmap_paged_vs_oracle_subprocess():
+    run_child(_SHARDED_PAGED, "SHARDED_PAGED_OK", timeout=480)
+
+
+def test_shmap_paged_falls_back_without_mesh():
+    """flash_shmap+paged outside any mesh == plain paged."""
+    fmt = PAPER_FORMATS[0]
+    page, n_pages = 16, 3
+    B, S = 2, n_pages * page
+    q, k, v = _mk(B=B, S=S)
+    pol = transprecision_policy(kv_fmt=fmt)
+    kp, vp = encode(k, fmt), encode(v, fmt)
+    tables = np.asarray([[2, 0, 4], [5, 1, 3]], np.int32)
+    kpool = _scatter_to_pool(kp, tables, 6, page)
+    vpool = _scatter_to_pool(vp, tables, 6, page)
+    ck = jax.lax.bitcast_convert_type(kpool, fmt.native_dtype)
+    cv = jax.lax.bitcast_convert_type(vpool, fmt.native_dtype)
+    nv = jnp.asarray([48, 31], jnp.int32)
+    tj = jnp.asarray(tables)
+    composed = dispatch.resolve_decode("flash_shmap+paged")
+    plain = dispatch.resolve_decode("paged")
+    a = composed(q, ck, cv, nv, scale=0.25, policy=pol, block_tables=tj)
+    b = plain(q, ck, cv, nv, scale=0.25, policy=pol, block_tables=tj)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -125,6 +125,55 @@ def test_serve_end_to_end():
     assert all(len(r.generated) >= 6 for r in reqs)
 
 
+def test_serve_paged_end_to_end():
+    """--decode-impl paged plumbs through argparse -> policy -> registry ->
+    the block-table serving loop (prefill-to-pages + paged decode)."""
+    from repro.launch.serve import main
+    reqs = main(["--arch", "llama3-8b", "--reduced", "--requests", "5",
+                 "--slots", "2", "--max-new", "6", "--prompt-len", "8",
+                 "--capacity", "32", "--decode-impl", "paged",
+                 "--page-size", "8"])
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) >= 6 for r in reqs)
+    assert all(r.evictions == 0 for r in reqs)  # pool sized comfortably
+
+
+def test_serve_paged_eviction_under_pool_pressure():
+    """A pool too small for all slots forces LIFO eviction + requeue; every
+    request must still complete (the oldest sequence always finishes)."""
+    from repro.launch.serve import main
+    reqs = main(["--arch", "llama3-8b", "--reduced", "--requests", "4",
+                 "--slots", "3", "--max-new", "10", "--prompt-len", "8",
+                 "--capacity", "32", "--decode-impl", "paged",
+                 "--page-size", "8", "--pool-pages", "5"])
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) >= 10 for r in reqs)
+    assert sum(r.evictions for r in reqs) > 0  # pressure actually applied
+
+
+def test_serve_paged_rejects_infeasible_request():
+    """A single request that cannot fit in the pool even alone must fail
+    loudly at startup, not deadlock the admission loop."""
+    import pytest
+
+    from repro.launch.serve import main
+    with pytest.raises(ValueError) as ei:
+        main(["--arch", "llama3-8b", "--reduced", "--requests", "1",
+              "--slots", "1", "--max-new", "8", "--prompt-len", "8",
+              "--capacity", "32", "--decode-impl", "paged",
+              "--page-size", "8", "--pool-pages", "1"])
+    assert "pool" in str(ei.value)
+
+
+def test_serve_rejects_unknown_decode_impl():
+    import pytest
+
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit):  # argparse choices = legal_impls()
+        main(["--arch", "llama3-8b", "--reduced", "--requests", "1",
+              "--decode-impl", "paged_flash"])
+
+
 # ------------------------------------------------------------ programming flow
 def test_full_programming_flow():
     """Paper Sec. III-B steps 1-5 produce a consistent pipeline."""
