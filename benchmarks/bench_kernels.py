@@ -1,4 +1,4 @@
-"""Kernel microbenchmarks: cast / pack / transprecision matmul.
+"""Kernel microbenchmarks: cast / pack / transprecision matmul / decode GEMV.
 
 ``collect()`` produces schema-stable entries (aggregated by
 ``benchmarks/run.py`` into ``BENCH_kernels.json``): the pure-jnp reference
@@ -6,7 +6,16 @@ path is timed (the honest CPU number), and with ``use_pallas`` the Pallas
 kernels are also *executed* -- in interpret mode off TPU, so their wall
 time is meaningless there (flagged ``"interpret": true``) but the CI smoke
 run exercises the kernel bodies on every push.  Derived column: model-side
-bytes saved by packed storage."""
+bytes saved by packed storage.
+
+The ``qmm_gemv`` rows are the serving decode shape -- skinny-M
+``(B in {1, 8}, d) @ (d, ff)`` at transformer d/ff proportions -- swept
+over the matmul-backend registry (``dispatch.legal_matmul_impls()``): the
+``xla`` dequantize path is the f32-weight-stream baseline, ``qmm_pallas``
+streams the packed container.  The ``weight_bytes_vs_f32`` column is the
+paper's container ratio (4x binary8, 2x binary16/16alt) applied to the
+weight half of decode HBM traffic; ``benchmarks/check_schema.py`` fails CI
+if these rows or their backend coverage disappear."""
 import time
 
 import jax
@@ -15,7 +24,8 @@ import numpy as np
 
 from repro.core.formats import BINARY8, BINARY16, BINARY16ALT
 from repro.core.qtensor import encode
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.qmatmul import qmatmul, qmm_hbm_bytes, qmm_weight_bytes
 
 
 def _time(fn, *args, reps=5):
@@ -27,7 +37,8 @@ def _time(fn, *args, reps=5):
 
 
 def collect(n_cast: int = 1024, n_mm: int = 512, *,
-            use_pallas: bool = False) -> list:
+            use_pallas: bool = False, gemv_d: int = 1024,
+            gemv_ff: int = 2816) -> list:
     """Benchmark entries (dicts) per (kernel x format x impl)."""
     entries = []
     on_tpu = jax.default_backend() == "tpu"
@@ -68,6 +79,48 @@ def collect(n_cast: int = 1024, n_mm: int = 512, *,
                 "gflops": round(2 * n_mm**3 / (us * 1e-6) / 1e9, 1),
                 "interpret": pallas and not on_tpu,
             })
+
+    # ---- skinny-M decode GEMV: the serving decode step's weight stream ----
+    # Both registry spellings always execute (the committed trajectory must
+    # carry the full matmul-impl coverage, not just the smoke): "xla" is
+    # the jitted dequantize path, "qmm_pallas" the fused kernel (interpret
+    # mode off TPU -- wall time flagged, byte columns analytic).
+    d, ff = gemv_d, gemv_ff
+    w = jnp.asarray(np.random.default_rng(3).normal(size=(d, ff)),
+                    jnp.float32)
+    f32_weight = qmm_weight_bytes(d, ff, None)
+    for batch in (1, 8):
+        x = jnp.asarray(np.random.default_rng(4).normal(size=(batch, d)),
+                        jnp.float32)
+        for fmt in (BINARY8, BINARY16, BINARY16ALT):
+            wp = encode(w, fmt)
+            for impl in dispatch.legal_matmul_impls():
+                if impl == "xla":
+                    f = jax.jit(lambda u, v, fmt=fmt:
+                                ref.qmatmul_ref(u, v, None, fmt))
+                    reps = 5
+                else:
+                    f = jax.jit(lambda u, v, fmt=fmt:
+                                qmatmul(u, v, None, fmt))
+                    reps = 1
+                us = _time(f, x, wp, reps=reps)
+                weight_bytes = (f32_weight if impl == "xla"
+                                else qmm_weight_bytes(d, ff, fmt))
+                entries.append({
+                    "bench": "qmm_gemv",
+                    "shape": f"B{batch}_d{d}_ff{ff}",
+                    "impl": impl, "fmt": fmt.name,
+                    "ms_per_step": round(us / 1e3, 3),
+                    # xla rows model the f32 weight stream only (the
+                    # conservative baseline -- the dequantize path's extra
+                    # container read is deliberately not charged to it)
+                    "hbm_bytes": qmm_hbm_bytes(
+                        batch, d, ff, None if impl == "xla" else fmt),
+                    "weight_hbm_bytes": weight_bytes,
+                    "weight_bytes_vs_f32": round(f32_weight / weight_bytes,
+                                                 2),
+                    "interpret": impl != "xla" and not on_tpu,
+                })
     return entries
 
 
@@ -75,9 +128,14 @@ def report(entries=None) -> list:
     """Legacy CSV rows (name, us_per_call, derived) from collect()."""
     rows = []
     for e in (collect() if entries is None else entries):
+        us = e["ms_per_step"] * 1e3
+        if e["bench"] == "qmm_gemv":
+            if e["impl"] == "qmm_pallas":  # byte columns are analytic
+                rows.append((f"qmm_gemv_{e['shape']}_{e['fmt']}", us,
+                             f"w_bytes_vs_f32={e['weight_bytes_vs_f32']}"))
+            continue
         if e["impl"] != "ref":  # CSV keeps the honest (non-interpret) timing
             continue
-        us = e["ms_per_step"] * 1e3
         if e["bench"] == "cast":
             rows.append((f"cast_{e['fmt']}", us,
                          f"bytes_ratio={1 / e['bytes_vs_f32']}"))

@@ -76,6 +76,29 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                     problems.append(
                         f"{name} ({label}): registry spellings missing "
                         f"from the sweep: {sorted(missing)}")
+        if name == "BENCH_kernels.json":
+            # the decode-GEMV rows are the weight half of the serving
+            # decode byte story: fail if they (or the matmul-impl
+            # coverage, or the B in {1, 8} batch axis) ever disappear
+            legal = set(dispatch.legal_matmul_impls())
+            for label, doc in (("committed", committed), ("smoke", smoke)):
+                rows = [e for e in doc.get("entries", ())
+                        if e.get("bench") == "qmm_gemv"]
+                if not rows:
+                    problems.append(
+                        f"{name} ({label}): decode-GEMV rows "
+                        f"(bench='qmm_gemv') missing from the sweep")
+                    continue
+                missing = legal - {e.get("impl") for e in rows}
+                if missing:
+                    problems.append(
+                        f"{name} ({label}): matmul-impl spellings missing "
+                        f"from the GEMV sweep: {sorted(missing)}")
+                batches = {e.get("shape", "").split("_")[0] for e in rows}
+                if not {"B1", "B8"} <= batches:
+                    problems.append(
+                        f"{name} ({label}): GEMV batch coverage lost -- "
+                        f"need B1 and B8 rows, have {sorted(batches)}")
     return problems
 
 

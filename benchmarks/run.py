@@ -49,15 +49,20 @@ def run_smoke(args) -> None:
 
     out_dir = args.out_dir or os.path.join(ROOT, "results", "bench_smoke")
     attn = bench_attention.collect(2, 256, 2, 2, 32, time_interpret=True)
-    kern = bench_kernels.collect(256, 128, use_pallas=True)
+    kern = bench_kernels.collect(256, 128, use_pallas=True,
+                                 gemv_d=128, gemv_ff=256)
     write_bench_json("attention", attn, args.timestamp, out_dir)
     write_bench_json("kernels", kern, args.timestamp, out_dir)
     # hard fail unless EVERY legal registry spelling ran: the smoke is the
-    # one place the full decode_impl surface executes outside pytest, so a
-    # spelling missing here means a backend landed without bench coverage
+    # one place the full decode_impl/matmul_impl surface executes outside
+    # pytest, so a spelling missing here means a backend landed without
+    # bench coverage
     impls = {e["impl"] for e in attn}
     missing = set(dispatch.legal_impls()) - impls
     assert not missing, f"attention bench lost backends: {missing}"
+    mm_impls = {e["impl"] for e in kern if e["bench"] == "qmm_gemv"}
+    missing_mm = set(dispatch.legal_matmul_impls()) - mm_impls
+    assert not missing_mm, f"kernel bench lost matmul impls: {missing_mm}"
     executed = [e for e in attn if e["ms_per_step"] is None]
     assert not executed, (
         f"smoke entries without an executed timing: "

@@ -24,15 +24,24 @@ class ShapeSpec:
     # (kernels/dispatch.py), e.g. "flash_pallas" or the composed
     # "flash_shmap+flash_pallas"; None = model default
     decode_impl: Optional[str] = None
+    # matmul backend pinned by the cell: "xla" or "qmm_pallas" (fused
+    # transprecision GEMV over the packed weight store); None = default
+    matmul_impl: Optional[str] = None
 
     def __post_init__(self):
-        from repro.kernels.dispatch import validate_impl
+        from repro.kernels.dispatch import validate_impl, validate_matmul_impl
         validate_impl(self.decode_impl, what=f"shape {self.name} decode_impl")
+        validate_matmul_impl(self.matmul_impl,
+                             what=f"shape {self.name} matmul_impl")
 
     def cfg_overrides(self) -> dict:
         """Model-config overrides this shape pins (merged by the dry-run)."""
-        return ({"decode_impl": self.decode_impl}
-                if self.decode_impl is not None else {})
+        out = {}
+        if self.decode_impl is not None:
+            out["decode_impl"] = self.decode_impl
+        if self.matmul_impl is not None:
+            out["matmul_impl"] = self.matmul_impl
+        return out
 
 
 SHAPES = {
@@ -58,6 +67,13 @@ FLASH_SHAPES = {
         decode_impl="flash_shmap+flash_pallas"),
     "decode_32k_paged": ShapeSpec("decode_32k_paged", "decode", 32768, 128,
                                   decode_impl="paged"),
+    # the packed-WEIGHT serving variant: same traffic, every pdot/peinsum
+    # routed through the fused transprecision GEMV kernel over the packed
+    # parameter store (models/qparams.py) -- the weight half of decode HBM
+    # bytes shrinks by the container ratio, complementing the packed-KV win
+    "decode_32k_qweights": ShapeSpec("decode_32k_qweights", "decode",
+                                     32768, 128,
+                                     matmul_impl="qmm_pallas"),
 }
 
 ALL_SHAPES = {**SHAPES, **FLASH_SHAPES}

@@ -34,7 +34,8 @@ from typing import Mapping, Optional
 
 import jax.numpy as jnp
 
-from repro.kernels.dispatch import legal_impls, validate_impl
+from repro.kernels.dispatch import (legal_impls, legal_matmul_impls,
+                                    validate_impl, validate_matmul_impl)
 
 from .flexfloat import quantize
 from .formats import (BINARY8, BINARY16ALT, BINARY32, FpFormat, get_format)
@@ -51,6 +52,11 @@ DEFAULT_ROLES = (
 # shard_maps the fused packed-KV kernel over the cache's sequence axis.
 DECODE_IMPLS = (None,) + legal_impls()
 
+# Every legal matmul-backend spelling (None = defer to the model config).
+# "qmm_pallas" streams packed weights through the fused transprecision
+# GEMV kernel (kernels/qmatmul.py) -- the weight half of decode bandwidth.
+MATMUL_IMPLS = (None,) + legal_matmul_impls()
+
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
@@ -63,6 +69,12 @@ class PrecisionPolicy:
     # container ratio -- the knob rides the policy because it is precision
     # plumbing (which bits move), not model architecture.
     decode_impl: Optional[str] = None
+    # Matmul-backend override (None defers to the model config's
+    # ``matmul_impl``): "qmm_pallas" routes every pdot/peinsum through the
+    # fused transprecision GEMV kernel, reading the packed weight store
+    # (models/qparams.py) directly -- the weight half of decode bandwidth,
+    # same container-ratio byte win as the packed KV cache.
+    matmul_impl: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in ("native", "emulated"):
@@ -70,6 +82,8 @@ class PrecisionPolicy:
         # fail at construction time with the legal spellings -- an unknown
         # string must not silently fall through to the XLA path
         validate_impl(self.decode_impl, what="PrecisionPolicy.decode_impl")
+        validate_matmul_impl(self.matmul_impl,
+                             what="PrecisionPolicy.matmul_impl")
         if self.mode == "native":
             for role, fmt in self.formats.items():
                 if get_format(fmt).native_dtype is None:
@@ -113,22 +127,29 @@ class PrecisionPolicy:
 
     def describe(self) -> str:
         rows = [f"  {r:<14} -> {self.fmt(r).name}" for r in DEFAULT_ROLES]
+        rows.append(f"  {'decode_impl':<14} -> "
+                    f"{self.decode_impl or '(model default)'}")
+        rows.append(f"  {'matmul_impl':<14} -> "
+                    f"{self.matmul_impl or '(model default)'}")
         return f"PrecisionPolicy(mode={self.mode})\n" + "\n".join(rows)
 
 
 def binary32_policy(mode: str = "native",
                     kv_fmt: Optional[FpFormat] = None,
-                    decode_impl: Optional[str] = None) -> PrecisionPolicy:
+                    decode_impl: Optional[str] = None,
+                    matmul_impl: Optional[str] = None) -> PrecisionPolicy:
     """The paper's baseline: everything binary32 (``kv_fmt`` optionally
     swaps just the KV-cache storage format -- the serving ablation axis)."""
     f = {} if kv_fmt is None else {"kv_cache": get_format(kv_fmt)}
     return PrecisionPolicy(formats=f, mode=mode, default_fmt=BINARY32,
-                           decode_impl=decode_impl)
+                           decode_impl=decode_impl,
+                           matmul_impl=matmul_impl)
 
 
 def transprecision_policy(mode: str = "native",
                           kv_fmt: Optional[FpFormat] = None,
                           decode_impl: Optional[str] = None,
+                          matmul_impl: Optional[str] = None,
                           ) -> PrecisionPolicy:
     """The framework default after tuning: weights/acts binary16alt (bf16 --
     the paper's wide-range 16-bit format), KV cache binary8 (e5m2), router /
@@ -144,7 +165,8 @@ def transprecision_policy(mode: str = "native",
         "logits": BINARY32, "grad_comm": BINARY8,
         "optim_m": BINARY16ALT, "optim_v": BINARY32, "master": BINARY32,
     }
-    return PrecisionPolicy(formats=f, mode=mode, decode_impl=decode_impl)
+    return PrecisionPolicy(formats=f, mode=mode, decode_impl=decode_impl,
+                           matmul_impl=matmul_impl)
 
 
 POLICIES = {

@@ -143,6 +143,72 @@ def default_serving_impl() -> Optional[str]:
 
 
 # ---------------------------------------------------------------------------
+# matmul-backend registry (the weight side of decode bandwidth)
+# ---------------------------------------------------------------------------
+#
+# Mirrors the attention registry above for the model's GEMMs: every
+# parameter-consuming contraction in ``models/layers.py`` (``pdot`` /
+# ``peinsum`` / ``pgrouped_dot``) resolves its implementation here.
+#
+#   "xla"         -- jnp.dot / jnp.einsum; packed (QTensor) weights are
+#                    dequantized through XLA first (the oracle and the
+#                    honest CPU baseline).
+#   "qmm_pallas"  -- the fused transprecision GEMV/GEMM kernel
+#                    (kernels/qmatmul.py): packed weight tiles stream from
+#                    HBM as the grid's moving operand, are decoded
+#                    in-register via the shared codec, multiplied with f32
+#                    accumulation, with bias + nonlinearity + gate + output
+#                    quantize fused into the epilogue.  Plain-array weights
+#                    fall back to "xla" (only a packed store shrinks bytes).
+#
+# Spellings ride ``matmul_impl`` on PrecisionPolicy (serving-time override),
+# ModelConfig, ShapeSpec, and the --matmul-impl CLI flags; all validate at
+# construction time against ``legal_matmul_impls()``.
+
+MATMUL_IMPLS = ("xla", "qmm_pallas")
+
+_MATMUL: dict = {}
+
+
+def legal_matmul_impls() -> tuple:
+    """Every accepted ``matmul_impl`` spelling."""
+    return MATMUL_IMPLS
+
+
+def validate_matmul_impl(spec: Optional[str], *, allow_none: bool = True,
+                         what: str = "matmul_impl") -> Optional[str]:
+    """Check a matmul spelling; raise with the legal list (in-line usable)."""
+    if spec is None:
+        if allow_none:
+            return None
+        raise ValueError(
+            f"{what} must be set; legal values: {legal_matmul_impls()}")
+    if spec not in MATMUL_IMPLS:
+        raise ValueError(
+            f"unknown {what} {spec!r}; legal spellings are "
+            f"{list(legal_matmul_impls())} ('qmm_pallas' streams packed "
+            f"weights through the fused transprecision GEMV kernel)")
+    return spec
+
+
+def register_matmul(name: str) -> Callable:
+    assert name in MATMUL_IMPLS, name
+
+    def deco(backend):
+        _MATMUL[name] = backend
+        return backend
+    return deco
+
+
+def resolve_matmul(spec: Optional[str]):
+    """Spelling -> matmul backend (an object with ``dot`` / ``einsum`` /
+    ``grouped`` callables; contracts documented in ``models/layers.py``,
+    which registers both backends at import)."""
+    spec = validate_matmul_impl(spec, allow_none=False)
+    return _MATMUL[spec]
+
+
+# ---------------------------------------------------------------------------
 # registration (decorators used by models/attention.py)
 # ---------------------------------------------------------------------------
 

@@ -30,17 +30,29 @@ def dequantize_ref(payload, fmt):
 
 
 def qmatmul_ref(a_payload, b_payload, fmt_a: FpFormat, fmt_b: FpFormat,
-                out_fmt: Optional[FpFormat] = None):
-    """Oracle for the transprecision matmul.
+                out_fmt: Optional[FpFormat] = None, *, gate_payload=None,
+                bias=None, act: Optional[str] = None):
+    """Oracle for the transprecision matmul (the XLA dequantize path).
 
     Decodes packed operands to f32 (exact), multiplies with f32 accumulation
-    (the MXU contract), optionally sanitizes the result to ``out_fmt``.
+    (the MXU contract), applies the same fused epilogue as the kernel (bias,
+    nonlinearity, gate, quantize) through plain XLA ops.
     """
+    from .qmatmul import _apply_act
+
     a = (decode(a_payload, get_format(fmt_a)) if fmt_a is not None
          else jnp.asarray(a_payload, jnp.float32))
     b = (decode(b_payload, get_format(fmt_b)) if fmt_b is not None
          else jnp.asarray(b_payload, jnp.float32))
     out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act is not None:
+        out = _apply_act(out, act)
+    if gate_payload is not None:
+        g = (decode(gate_payload, get_format(fmt_b)) if fmt_b is not None
+             else jnp.asarray(gate_payload, jnp.float32))
+        out = out * jnp.dot(a, g, preferred_element_type=jnp.float32)
     if out_fmt is not None:
         out = quantize(out, get_format(out_fmt))
     return out

@@ -70,6 +70,13 @@ def input_specs(arch: str, shape_name: str, mesh, policy,
     model = build_from_config(cfg)
     params = jax.eval_shape(
         lambda: model.init_params(jax.random.PRNGKey(0), policy))
+    if getattr(cfg, "matmul_impl", "xla") == "qmm_pallas":
+        # serving-time storage transform: the cell lowers against the
+        # PACKED parameter store (container-width weight bytes), exactly
+        # what launch/serve.py builds at load time
+        from repro.models import qparams
+        params = jax.eval_shape(
+            lambda p: qparams.encode_params(p, policy), params)
     p_sh = tree_param_shardings(params, mesh)
     params = jax.tree_util.tree_map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
@@ -266,6 +273,11 @@ def main():
                          "registry spelling from kernels/dispatch.py, e.g. "
                          "flash_pallas or flash_shmap+flash_pallas "
                          "(validated; shorthand for --set decode_impl=...)")
+    ap.add_argument("--matmul-impl", default=None,
+                    help="matmul backend override for every cell: 'xla' or "
+                         "'qmm_pallas' (packed weight store + fused "
+                         "transprecision GEMV; validated; shorthand for "
+                         "--set matmul_impl=...)")
     ap.add_argument("--kv-fmt", default=None,
                     help="override kv_cache format (e.g. binary16alt)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
@@ -283,6 +295,10 @@ def main():
         from repro.kernels.dispatch import validate_impl
         overrides["decode_impl"] = validate_impl(args.decode_impl,
                                                  what="--decode-impl")
+    if args.matmul_impl is not None:
+        from repro.kernels.dispatch import validate_matmul_impl
+        overrides["matmul_impl"] = validate_matmul_impl(args.matmul_impl,
+                                                        what="--matmul-impl")
 
     archs = configs.ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]

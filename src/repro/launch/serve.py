@@ -41,6 +41,7 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.kernels import dispatch, paged_cache
+from repro.models import qparams
 from repro.models.registry import build
 
 
@@ -116,7 +117,8 @@ def _run_contiguous(args, model, cfg, policy, params, reqs, impl):
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
           f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
           f"(kv format: {policy.fmt('kv_cache').name}, "
-          f"decode: {impl or cfg.decode_impl})")
+          f"decode: {impl or cfg.decode_impl}, "
+          f"matmul: {policy.matmul_impl or cfg.matmul_impl})")
     return reqs
 
 
@@ -264,6 +266,7 @@ def _run_paged(args, model, cfg, policy, params, reqs, impl):
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
           f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
           f"(kv format: {policy.fmt('kv_cache').name}, decode: {impl}, "
+          f"matmul: {policy.matmul_impl or cfg.matmul_impl}, "
           f"page_size: {page}, pool: {st['peak_pages_used']}/"
           f"{st['num_pages']} pages peak, frag: "
           f"{st['internal_fragmentation']}, evictions: {evictions})")
@@ -296,15 +299,30 @@ def main(argv=None):
                     help="physical pages in the shared pool (default: "
                          "slots * ceil(capacity / page_size); smaller "
                          "values exercise admission control and eviction)")
+    ap.add_argument("--matmul-impl", default=None,
+                    choices=list(dispatch.legal_matmul_impls()),
+                    help="matmul backend (default: model config; "
+                         "qmm_pallas = pack the weights once at load into "
+                         "the (e, m) container store and stream them "
+                         "through the fused transprecision GEMV kernel -- "
+                         "the weight half of decode HBM bytes shrinks by "
+                         "the container ratio)")
     args = ap.parse_args(argv)
 
     # the policy-level override wins inside attention.decode_impl(), so no
     # config rewrite / model rebuild is needed; with no explicit flag,
     # serving prefers the fused path wherever a TPU backend is present
     impl = args.decode_impl or dispatch.default_serving_impl()
-    policy = get_policy(args.policy, decode_impl=impl)
+    policy = get_policy(args.policy, decode_impl=impl,
+                        matmul_impl=args.matmul_impl)
     model, cfg = build(args.arch, reduced=args.reduced)
     params = model.init_params(jax.random.PRNGKey(0), policy)
+    if (args.matmul_impl or cfg.matmul_impl) == "qmm_pallas":
+        # the packed parameter store is built ONCE at load time; every
+        # decode step then reads container-width weight bytes
+        packed = qparams.encode_params(params, policy)
+        print(f"[serve] {qparams.describe_packing(params, packed)}")
+        params = packed
     rng = np.random.default_rng(0)
 
     reqs = [Request(i, rng.integers(0, min(cfg.vocab, 97),

@@ -63,14 +63,20 @@ class ModelConfig:
     #                                       "flash_pallas" (fused packed-KV
     #                                       kernel) or the composed
     #                                       "flash_shmap+flash_pallas"
+    matmul_impl: str = "xla"              # GEMM backend for pdot/peinsum:
+    #                                       "xla" or "qmm_pallas" (fused
+    #                                       transprecision GEMV over the
+    #                                       packed weight store)
     attn_chunk: int = 4096                # q-chunk for long prefill
     loss_chunks: int = 4                  # chunked cross-entropy
     remat: bool = True
 
     def __post_init__(self):
-        from repro.kernels.dispatch import validate_impl
+        from repro.kernels.dispatch import validate_impl, validate_matmul_impl
         validate_impl(self.decode_impl, allow_none=False,
                       what="ModelConfig.decode_impl")
+        validate_matmul_impl(self.matmul_impl, allow_none=False,
+                             what="ModelConfig.matmul_impl")
         if self.head_dim is None:
             object.__setattr__(self, "head_dim",
                                self.d_model // max(self.n_heads, 1))

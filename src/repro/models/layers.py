@@ -1,9 +1,31 @@
 """Policy-aware neural-net primitives shared by all architectures.
 
-Every parameter-consuming op routes through :func:`pdot`, which implements
-the transprecision contract: operands in their assigned storage formats,
-accumulation in f32 (the MXU/FlexFloat "compute wide" rule), results
-re-sanitized (emulated mode) or kept in the activation dtype (native mode).
+Every parameter-consuming op routes through :func:`pdot` /
+:func:`peinsum` / :func:`pgrouped_dot`, which implement the transprecision
+contract: operands in their assigned storage formats, accumulation in f32
+(the MXU/FlexFloat "compute wide" rule), results re-sanitized (emulated
+mode) or kept in the activation dtype (native mode).
+
+The *implementation* of each contraction is resolved through the
+matmul-backend registry (``kernels/dispatch.py``, knob
+``matmul_impl`` on policies/configs/shapes):
+
+``"xla"``
+    ``jnp.dot``/``jnp.einsum``; packed (:class:`QTensor`) weights from the
+    packed parameter store (``models/qparams.py``) are dequantized through
+    XLA first -- the oracle and the honest CPU baseline.
+``"qmm_pallas"``
+    the fused transprecision GEMV/GEMM kernel (``kernels/qmatmul.py``):
+    packed weight tiles stream from HBM at container width (4x fewer bytes
+    than f32 for binary8), decoded in-register via the shared codec, with
+    bias + nonlinearity + gate + output quantize fused into the epilogue
+    (see :func:`ffn_apply`).  Plain-array weights fall back to the XLA
+    path -- only a packed store shrinks bytes.
+
+This module registers both backends at import time; no other module under
+``models/`` may call ``jnp.dot``/``jnp.einsum`` directly (a grep-level test
+enforces it), so every new layer inherits the registry.  Activation-only
+contractions with no parameter operand use :func:`aeinsum`.
 """
 from __future__ import annotations
 
@@ -16,6 +38,9 @@ import numpy as np
 
 from repro.core.flexfloat import quantize
 from repro.core.policy import PrecisionPolicy
+from repro.core.qtensor import QTensor
+from repro.kernels import dispatch
+from repro.kernels.qmatmul import _apply_act, qmatmul, qmm_ffn
 
 
 # ---------------------------------------------------------------------------
@@ -30,11 +55,60 @@ def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
 
 
 # ---------------------------------------------------------------------------
-# transprecision matmul / elementwise helpers
+# transprecision matmul / elementwise helpers (registry-routed)
 # ---------------------------------------------------------------------------
 
+def _impl(policy: PrecisionPolicy) -> str:
+    return policy.matmul_impl or "xla"
+
+
 def pdot(x, w, policy: PrecisionPolicy, role: str, *, out_act: bool = True):
-    """x @ w with the transprecision contract for weight-role ``role``."""
+    """x @ w with the transprecision contract for weight-role ``role``.
+
+    ``w`` is a plain array or a packed :class:`QTensor` leaf from the
+    packed parameter store; the backend comes from ``policy.matmul_impl``.
+    """
+    return dispatch.resolve_matmul(_impl(policy)).dot(
+        x, w, policy, role, out_act=out_act)
+
+
+def peinsum(expr, a, b, policy: PrecisionPolicy, role: str, *,
+            out_act: bool = True):
+    return dispatch.resolve_matmul(_impl(policy)).einsum(
+        expr, a, b, policy, role, out_act=out_act)
+
+
+def pgrouped_dot(a, w, policy: PrecisionPolicy, role: str):
+    """Batched expert matmul ``(E, M, K) @ (E, K, N) -> (E, M, N)`` (MoE
+    grouped FFN).  Returns raw f32 (callers ``act_cast`` as needed)."""
+    return dispatch.resolve_matmul(_impl(policy)).grouped(a, w, policy, role)
+
+
+def aeinsum(expr, *ops):
+    """Activation-only einsum: no parameter operand, so no registry --
+    always f32 math (the wide-accumulation rule for intermediates)."""
+    return jnp.einsum(expr, *[o.astype(jnp.float32) for o in ops],
+                      preferred_element_type=jnp.float32)
+
+
+def _finish(y, policy: PrecisionPolicy, out_act: bool):
+    """The contract's output edge: sanitize (emulated) / act dtype (native)."""
+    if not out_act:
+        return y
+    if policy.mode == "native":
+        return y.astype(policy.dtype("act"))
+    return quantize(y, policy.fmt("act"))
+
+
+# -- the "xla" backend -------------------------------------------------------
+
+def _dot_xla(x, w, policy, role, *, out_act=True):
+    if isinstance(w, QTensor):
+        # the dequantize path: exact f32 expansion of the packed store,
+        # f32 math (the compute-wide contract the kernel also honors)
+        y = jnp.dot(x.astype(jnp.float32), w.dequantize(),
+                    preferred_element_type=jnp.float32)
+        return _finish(y, policy, out_act)
     if policy.mode == "native":
         # narrow operands, f32 accumulation, result back in activation dtype
         cd = jnp.bfloat16
@@ -48,8 +122,14 @@ def pdot(x, w, policy: PrecisionPolicy, role: str, *, out_act: bool = True):
     return quantize(y, policy.fmt("act")) if out_act else y
 
 
-def peinsum(expr, a, b, policy: PrecisionPolicy, role: str, *,
-            out_act: bool = True):
+def _einsum_xla(expr, a, b, policy, role, *, out_act=True):
+    if isinstance(a, QTensor) or isinstance(b, QTensor):
+        af = a.dequantize() if isinstance(a, QTensor) else a.astype(
+            jnp.float32)
+        bf = b.dequantize() if isinstance(b, QTensor) else b.astype(
+            jnp.float32)
+        y = jnp.einsum(expr, af, bf, preferred_element_type=jnp.float32)
+        return _finish(y, policy, out_act)
     if policy.mode == "native":
         cd = jnp.bfloat16
         if a.dtype == jnp.float32 and b.dtype == jnp.float32:
@@ -60,6 +140,71 @@ def peinsum(expr, a, b, policy: PrecisionPolicy, role: str, *,
     y = jnp.einsum(expr, a.astype(jnp.float32), b.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
     return quantize(y, policy.fmt("act")) if out_act else y
+
+
+def _grouped_xla(a, w, policy, role):
+    if isinstance(w, QTensor):
+        return jnp.einsum("eck,ekn->ecn", a.astype(jnp.float32),
+                          w.dequantize(), preferred_element_type=jnp.float32)
+    if policy.mode == "native":
+        cd = jnp.bfloat16
+        return jnp.einsum("eck,ekn->ecn", a.astype(cd), w.astype(cd),
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("eck,ekn->ecn", a.astype(jnp.float32),
+                      w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+@dispatch.register_matmul("xla")
+class _XlaMatmul:
+    dot = staticmethod(_dot_xla)
+    einsum = staticmethod(_einsum_xla)
+    grouped = staticmethod(_grouped_xla)
+
+
+# -- the "qmm_pallas" backend ------------------------------------------------
+
+def _out_fmt(policy, out_act):
+    """Output sanitization the kernel fuses (emulated mode only; native
+    casts to the act dtype outside -- a free elementwise op)."""
+    return policy.fmt("act") if (out_act and policy.mode == "emulated") \
+        else None
+
+
+def _dot_qmm(x, w, policy, role, *, out_act=True):
+    if not isinstance(w, QTensor):
+        return _dot_xla(x, w, policy, role, out_act=out_act)
+    lead, K = x.shape[:-1], x.shape[-1]
+    y = qmatmul(x.reshape(-1, K).astype(jnp.float32), w.payload, None,
+                w.fmt, _out_fmt(policy, out_act))
+    y = y.reshape(*lead, w.shape[-1])
+    if out_act and policy.mode == "native":
+        y = y.astype(policy.dtype("act"))
+    return y
+
+
+def _einsum_qmm(expr, a, b, policy, role, *, out_act=True):
+    # attention's einsums contract activations (q/k/probs/v), not
+    # parameters; the kernel only wins on a packed *weight* stream, so
+    # anything without one takes the XLA math verbatim
+    return _einsum_xla(expr, a, b, policy, role, out_act=out_act)
+
+
+def _grouped_qmm(a, w, policy, role):
+    if not isinstance(w, QTensor):
+        return _grouped_xla(a, w, policy, role)
+    # Python-unrolled per expert (loop-free HLO, the repo-wide idiom):
+    # each expert's packed block streams through the fused kernel once
+    outs = [qmatmul(a[e].astype(jnp.float32), w.payload[e], None, w.fmt)
+            for e in range(a.shape[0])]
+    return jnp.stack(outs)
+
+
+@dispatch.register_matmul("qmm_pallas")
+class _QmmMatmul:
+    dot = staticmethod(_dot_qmm)
+    einsum = staticmethod(_einsum_qmm)
+    grouped = staticmethod(_grouped_qmm)
 
 
 def act_cast(x, policy: PrecisionPolicy, role: str = "act"):
@@ -137,17 +282,16 @@ def ffn_init(key, d, ff, gated, use_bias, dtype):
 
 
 def _nonlin(x, name):
-    x = x.astype(jnp.float32)
-    if name == "silu":
-        return jax.nn.silu(x)
-    if name == "gelu":
-        return jax.nn.gelu(x)
-    if name == "relu2":
-        return jnp.square(jax.nn.relu(x))
-    raise ValueError(name)
+    # one nonlinearity table for the XLA paths AND the fused-kernel
+    # epilogue: an act_fn that exists here but not in the kernel would
+    # fail only once its weights are packed
+    return _apply_act(x.astype(jnp.float32), name)
 
 
 def ffn_apply(p, x, policy, cfg):
+    if _impl(policy) == "qmm_pallas" and isinstance(p["w_in"], QTensor) \
+            and isinstance(p.get("w_gate", p["w_in"]), QTensor):
+        return _ffn_apply_fused(p, x, policy, cfg)
     h = pdot(x, p["w_in"], policy, "ffn_w", out_act=False)
     if "b_in" in p:
         h = h + p["b_in"].astype(jnp.float32)
@@ -157,6 +301,27 @@ def ffn_apply(p, x, policy, cfg):
         a = a * g
     a = act_cast(a, policy)
     y = pdot(a, p["w_out"], policy, "ffn_w")
+    if "b_out" in p:
+        y = act_cast(y.astype(jnp.float32) + p["b_out"].astype(jnp.float32),
+                     policy)
+    return y
+
+
+def _ffn_apply_fused(p, x, policy, cfg):
+    """The decode hot loop on the packed store: ONE kernel computes
+    ``act_cast(act(x @ w_in + b_in) * (x @ w_gate))`` -- both packed weight
+    matrices stream through the same K sweep and the two ff-wide
+    activations live only in VMEM scratch, never round-tripping HBM."""
+    w_in, w_gate = p["w_in"], p.get("w_gate")
+    assert w_gate is None or w_gate.fmt == w_in.fmt, (w_in.fmt, w_gate.fmt)
+    lead, K = x.shape[:-1], x.shape[-1]
+    a = qmm_ffn(x.reshape(-1, K).astype(jnp.float32), w_in.payload,
+                w_gate.payload if w_gate is not None else None, w_in.fmt,
+                bias=p["b_in"].astype(jnp.float32) if "b_in" in p else None,
+                act=cfg.act_fn, out_fmt=_out_fmt(policy, True))
+    if policy.mode == "native":
+        a = a.astype(policy.dtype("act"))
+    y = pdot(a.reshape(*lead, -1), p["w_out"], policy, "ffn_w")
     if "b_out" in p:
         y = act_cast(y.astype(jnp.float32) + p["b_out"].astype(jnp.float32),
                      policy)

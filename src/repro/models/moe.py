@@ -17,7 +17,9 @@ import numpy as np
 
 from repro import compat
 from repro.core.policy import PrecisionPolicy
-from .layers import _nonlin, act_cast, dense_init, pdot
+from repro.core.qtensor import QTensor
+from .layers import _nonlin, act_cast, dense_init, pdot, pgrouped_dot
+from .qparams import as_array
 
 
 def moe_init(key, cfg, dtype):
@@ -87,24 +89,15 @@ def _moe_apply_global(p, x, cfg, policy: PrecisionPolicy):
     xe = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xt[st])
     xe = xe[:E * C].reshape(E, C, d)
 
-    # --- grouped expert FFN (active FLOPs only) ------------------------------
-    def gdot(a, w, role):
-        if policy.mode == "native":
-            cd = jnp.bfloat16
-            y = jnp.einsum("ecd,edf->ecf", a.astype(cd), w.astype(cd),
-                           preferred_element_type=jnp.float32)
-            return y
-        y = jnp.einsum("ecd,edf->ecf", a.astype(jnp.float32),
-                       w.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
-        return y
-
-    h = gdot(xe, p["w_in"], "ffn_w")
+    # --- grouped expert FFN (active FLOPs only; registry-routed, so with
+    # matmul_impl="qmm_pallas" each expert's packed block streams through
+    # the fused kernel) -------------------------------------------------------
+    h = pgrouped_dot(xe, p["w_in"], policy, "ffn_w")
     a = _nonlin(h, cfg.act_fn)
     if "w_gate" in p:
-        a = a * gdot(xe, p["w_gate"], "ffn_w")
+        a = a * pgrouped_dot(xe, p["w_gate"], policy, "ffn_w")
     a = act_cast(a, policy)
-    ye = gdot(a, p["w_out"], "ffn_w")
+    ye = pgrouped_dot(a, p["w_out"], policy, "ffn_w")
     ye = act_cast(ye, policy).reshape(E * C, d)
 
     # --- combine -------------------------------------------------------------
@@ -129,6 +122,13 @@ def _moe_apply_global(p, x, cfg, policy: PrecisionPolicy):
 
 def moe_apply_sharded(p, x, cfg, policy: PrecisionPolicy, mesh):
     from jax.sharding import PartitionSpec as P
+
+    # Packed expert weights are dequantized host-side before the shard_map:
+    # the EP schedule runs XLA math on its shard-local blocks (a packed
+    # expert-parallel kernel is an open item -- see ROADMAP), and the
+    # in_specs below describe plain arrays.
+    p = {k: (as_array(v) if isinstance(v, QTensor) else v)
+         for k, v in p.items()}
 
     B, S, d = x.shape
     E, K = cfg.moe_experts, cfg.moe_topk
@@ -180,17 +180,12 @@ def moe_apply_sharded(p, x, cfg, policy: PrecisionPolicy, mesh):
         xe = jnp.zeros((E_loc * C + 1, dd), xt.dtype).at[dest].set(xt[st])
         xe = xe[:E_loc * C].reshape(E_loc, C, dd)
 
-        cd = jnp.bfloat16 if policy.mode == "native" else jnp.float32
-        h = jnp.einsum("ecd,edf->ecf", xe.astype(cd), w_in.astype(cd),
-                       preferred_element_type=jnp.float32)
+        h = pgrouped_dot(xe, w_in, policy, "ffn_w")
         a = _nonlin(h, cfg.act_fn)
         if w_gate is not None:
-            a = a * jnp.einsum("ecd,edf->ecf", xe.astype(cd),
-                               w_gate.astype(cd),
-                               preferred_element_type=jnp.float32)
+            a = a * pgrouped_dot(xe, w_gate, policy, "ffn_w")
         a = act_cast(a, policy)
-        ye = jnp.einsum("ecf,efd->ecd", a.astype(cd), w_out.astype(cd),
-                        preferred_element_type=jnp.float32)
+        ye = pgrouped_dot(a, w_out, policy, "ffn_w")
         ye = ye.reshape(E_loc * C, dd)
 
         gathered = jnp.where(keep[:, None], ye[jnp.where(keep, dest, 0)], 0)

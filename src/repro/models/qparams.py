@@ -1,0 +1,135 @@
+"""The packed parameter store: weights in their (e, m) containers.
+
+The serving decode step reads every parameter once per generated token, so
+weight bytes are the other half (with the KV cache) of decode HBM traffic.
+This module turns an ordinary param pytree into a *packed* one: every
+matmul-weight leaf becomes a :class:`~repro.core.qtensor.QTensor` holding
+the exact (e, m) bit pattern of the policy's format for that role in the
+narrowest integer container (uint8/16/32) -- 4x/2x fewer bytes than f32 for
+8/16-bit formats, the paper's vectorized-memory-access win applied to the
+weight stream.  ``models/layers.py`` consumes the packed leaves directly:
+with ``matmul_impl="qmm_pallas"`` the payload bits go straight into the
+fused transprecision GEMV kernel (decoded in-register via the shared
+codec); with ``matmul_impl="xla"`` they are dequantized through XLA first
+(the oracle path).
+
+Built once at load time (``launch/serve.py`` / ``launch/dryrun.py``) --
+packing is a storage transform of an already-initialized (or restored)
+tree, never part of a training step.
+
+Role mapping
+------------
+Leaves are mapped to policy roles by their dict key, mirroring exactly the
+``role`` argument the model code passes to ``pdot``/``pgrouped_dot`` for
+that leaf, so the packed format always matches the format the layer
+declares.  Leaves with no mapping (norm scales, biases, LoRA factors, conv
+filters, token-shift mixers, and the embedding *table*, which is consumed
+by gather rather than matmul) stay untouched.
+
+QTensor leaves are registered pytree nodes, so the packed tree jits,
+shards (``launch/sharding.py`` rules key on the same path names and the
+payload keeps the logical shape), and round-trips through the checkpoint
+manager unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.qtensor import QTensor
+
+# weight-name -> policy role, mirroring the role each call site passes.
+# "wk"/"wv"/"wo" are shared by attention (wq/wk/wv/wo) and rwkv time-mix
+# (wr/wk/wv/wg/wo) -- both consume them under "attn_w".
+_ATTN_W = ("wq", "wk", "wv", "wo", "wr", "wg", "wrkvg",
+           "w_rec_gate", "w_in_gate")
+_FFN_W = ("w_in", "w_gate", "w_out", "cm_k", "cm_v", "cm_r", "cm_kr",
+          "w_branch")
+ROLE_BY_NAME = {
+    **{n: "attn_w" for n in _ATTN_W},
+    **{n: "ffn_w" for n in _FFN_W},
+    "head": "embed_w",   # (d, vocab) logits matmul; the "embed" table is
+    #                      consumed by jnp.take and must stay a plain array
+    "router": "router_w",
+}
+
+PACK_ROLES = ("embed_w", "attn_w", "ffn_w", "router_w")
+
+
+def _leaf_name(path) -> Optional[str]:
+    """Last dict key of a tree path (None for list/index-only paths)."""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "name"):
+            return str(p.name)
+    return None
+
+
+def param_role(path) -> Optional[str]:
+    """Policy role a param leaf is consumed under, or None if the leaf is
+    not a matmul weight (and must stay unpacked)."""
+    name = _leaf_name(path)
+    return ROLE_BY_NAME.get(name) if name is not None else None
+
+
+def encode_params(params, policy: PrecisionPolicy, *,
+                  roles: tuple = PACK_ROLES):
+    """Pack every matmul-weight leaf into its policy-role (e, m) container.
+
+    In native mode the leaf already stores exact members of the role's
+    format, so packing is lossless (payload == bitcast of the native
+    dtype); in emulated mode the f32 leaf is sanitized to the format first
+    (the storage step the XLA paths defer to compute time).  binary32
+    roles pack into uint32 (byte-neutral but uniform: the kernel path then
+    exercises identically under the binary32 baseline policy).
+    """
+    def enc(path, leaf):
+        role = param_role(path)
+        if role is None or role not in roles:
+            return leaf
+        return QTensor.quantize(jnp.asarray(leaf, jnp.float32),
+                                policy.fmt(role))
+    return jax.tree_util.tree_map_with_path(enc, params)
+
+
+def decode_params(params):
+    """Inverse storage transform: every packed leaf back to exact f32."""
+    return jax.tree.map(
+        lambda leaf: leaf.dequantize() if isinstance(leaf, QTensor) else leaf,
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def as_array(w, dtype=None) -> jax.Array:
+    """A packed-or-plain weight as a dense array (dequantized if packed).
+
+    For the few sites that must manipulate a weight elementwise (e.g. the
+    rwkv fused token-shift ``w * mcat`` product) before handing the result
+    to a matmul.  ``dtype`` optionally casts the dense result (native-mode
+    callers pass the role's storage dtype)."""
+    arr = w.dequantize() if isinstance(w, QTensor) else w
+    return arr if dtype is None else arr.astype(dtype)
+
+
+def packed_bytes(params) -> int:
+    """Storage bytes of the tree (packed leaves at container width)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        else:
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def describe_packing(params, packed) -> str:
+    """One-line summary: packed vs unpacked parameter bytes."""
+    raw = packed_bytes(params)
+    pk = packed_bytes(packed)
+    return (f"packed weight store: {pk / 1e6:.1f} MB "
+            f"(vs {raw / 1e6:.1f} MB unpacked, {raw / max(pk, 1):.2f}x)")

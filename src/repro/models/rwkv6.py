@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PrecisionPolicy
-from .layers import act_cast, dense_init, pdot
+from .layers import act_cast, aeinsum, dense_init, pdot
+from .qparams import as_array
 
 
 class RwkvState(NamedTuple):
@@ -124,7 +125,11 @@ def time_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
         mcat = jnp.concatenate(
             [jnp.broadcast_to(mu[i][:, None], (d, d)) for i in range(4)]
             + [jnp.broadcast_to(mu[4][:, None], (d, rank))], axis=1)
-        wm = (p["wrkvg"].astype(jnp.float32) * mcat).astype(p["wrkvg"].dtype)
+        # the mix-scaled copy is a derived weight: materialize it densely
+        # (dequantizing a packed leaf) in the role's storage dtype; the
+        # primary x @ W term still streams the packed payload
+        wm = (as_array(p["wrkvg"]).astype(jnp.float32) * mcat).astype(
+            policy.dtype("attn_w"))
         y = (pdot(x, p["wrkvg"], policy, "attn_w", out_act=False)
              + pdot(dxx, wm, policy, "attn_w", out_act=False))
         r = act_cast(y[..., :d], policy)
@@ -151,8 +156,8 @@ def time_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
         # ---- recurrent decode step -----------------------------------------
         s_in = state.s.astype(jnp.float32)
         kv = kh[:, 0, :, :, None] * vh[:, 0, :, None, :]      # (B,H,dk,dv)
-        o = jnp.einsum("bhk,bhkv->bhv", rh[:, 0],
-                       s_in + u[None, :, :, None] * kv)
+        o = aeinsum("bhk,bhkv->bhv", rh[:, 0],
+                    s_in + u[None, :, :, None] * kv)
         s_new = jnp.exp(lwh[:, 0])[:, :, :, None] * s_in + kv
         wkv = o[:, None, :, :]                                # (B,1,H,dv)
         new_state = RwkvState(s=s_new.astype(state.s.dtype),
@@ -179,15 +184,15 @@ def time_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
         A = jnp.sum(prod, axis=-1)                     # (B,nc,C,C,H)
         ti = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
         A = A * ti[None, None, :, :, None]
-        o_intra = jnp.einsum("bntih,bnihv->bnthv", A, vc)
+        o_intra = aeinsum("bntih,bnihv->bnthv", A, vc)
         # bonus (current token)
-        bonus = jnp.einsum("bnthd,bnthd->bnth",
-                           rc * u[None, None, None, :, :], kc)
+        bonus = aeinsum("bnthd,bnthd->bnth",
+                        rc * u[None, None, None, :, :], kc)
         o_intra = o_intra + bonus[..., None] * vc
 
         # cross-chunk state via associative scan
         k_tail = kc * jnp.exp(cum_end[:, :, None] - cum)   # decays to chunk end
-        contrib = jnp.einsum("bnthk,bnthv->bnhkv", k_tail, vc)
+        contrib = aeinsum("bnthk,bnthv->bnhkv", k_tail, vc)
         a_chunk = jnp.exp(cum_end)                         # (B,nc,H,dk)
 
         def comb(left, right):
@@ -204,7 +209,7 @@ def time_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
             [s0[:, None], a_sc[:, :-1, ..., None] * s0[:, None]
              + s_sc[:, :-1]], axis=1)
         r_tilde = rc * jnp.exp(cum_ex)
-        o_inter = jnp.einsum("bnthk,bnhkv->bnthv", r_tilde, s_in)
+        o_inter = aeinsum("bnthk,bnhkv->bnthv", r_tilde, s_in)
 
         wkv = (o_intra + o_inter).reshape(B, S, H, dh)
         new_state = None
@@ -233,7 +238,8 @@ def channel_mix(p, x, cfg, policy: PrecisionPolicy, state=None):
         mcat = jnp.concatenate(
             [jnp.broadcast_to(m[0][:, None], (d, ff)),
              jnp.broadcast_to(m[1][:, None], (d, d))], axis=1)
-        wm = (p["cm_kr"].astype(jnp.float32) * mcat).astype(p["cm_kr"].dtype)
+        wm = (as_array(p["cm_kr"]).astype(jnp.float32) * mcat).astype(
+            policy.dtype("ffn_w"))
         y = (pdot(x, p["cm_kr"], policy, "ffn_w", out_act=False)
              + pdot(dxx, wm, policy, "ffn_w", out_act=False))
         kk = jnp.square(jax.nn.relu(y[..., :ff].astype(jnp.float32)))

@@ -7,6 +7,7 @@ All parameter/activation tensors follow the :class:`PrecisionPolicy`.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -26,6 +27,15 @@ from .layers import (apply_norm, dense_init, embed_lookup, ffn_apply,
 class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+
+    def _policy(self, policy: PrecisionPolicy) -> PrecisionPolicy:
+        """Lift the config's ``matmul_impl`` into the policy (the policy
+        override wins, mirroring ``decode_impl``), so every pdot/peinsum
+        downstream resolves the right matmul backend."""
+        if policy.matmul_impl is None and self.cfg.matmul_impl != "xla":
+            policy = dataclasses.replace(policy,
+                                         matmul_impl=self.cfg.matmul_impl)
+        return policy
 
     # ------------------------------------------------------------------ init
     def init_params(self, rng, policy: PrecisionPolicy) -> Dict[str, Any]:
@@ -162,6 +172,7 @@ class Model:
     # ----------------------------------------------------------------- train
     def train_loss(self, params, batch, policy: PrecisionPolicy):
         cfg = self.cfg
+        policy = self._policy(policy)
         tokens = batch["tokens"]
         labels = batch["labels"]
         x = embed_lookup(params["embed"], tokens, policy,
@@ -208,6 +219,7 @@ class Model:
                 capacity: Optional[int] = None):
         """Full-sequence forward; returns (last-position logits, states)."""
         cfg = self.cfg
+        policy = self._policy(policy)
         tokens = batch["tokens"]
         B, S = tokens.shape
         capacity = capacity or S
@@ -267,6 +279,7 @@ class Model:
                     enc_out=None, encoder_embeds=None):
         """tokens: (B, 1).  Returns (logits (B, 1, V), new states)."""
         cfg = self.cfg
+        policy = self._policy(policy)
         x = embed_lookup(params["embed"], tokens, policy,
                          scale=cfg.embed_scale)
         if cfg.encoder_layers and enc_out is None:

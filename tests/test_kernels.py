@@ -106,3 +106,108 @@ def test_cast_kernel_grid_boundary_padding():
     want = np.asarray(ref.flexfloat_cast_ref(x, BINARY8))
     np.testing.assert_array_equal(got, want)
     assert got.shape == (257, 300)
+
+
+# ---------------------------------------------------------------------------
+# skinny-M decode GEMV + fused epilogue (the packed-weight serving kernel)
+# ---------------------------------------------------------------------------
+
+from repro.core.qtensor import decode  # noqa: E402
+from repro.kernels.qmatmul import (  # noqa: E402
+    GEMV_MAX_M, default_blocks, qmatmul, qmm_ffn, qmm_hbm_bytes,
+    qmm_weight_bytes)
+
+QFMTS = [BINARY8, BINARY16, BINARY16ALT, BINARY32]
+
+
+def _assert_oracle(got, want, scale, tol=1e-6):
+    """|got - want| <= tol * scale elementwise, where ``scale`` is the
+    dot's absolute-value accumulation |x| @ |w| (+1) -- the natural f32
+    error unit: kernel and oracle round identical products, only the
+    summation tree differs, so the pin is tol in THAT unit."""
+    err = np.abs(np.asarray(got) - np.asarray(want))
+    bad = err > tol * scale
+    assert not bad.any(), (
+        f"{bad.sum()} elements beyond {tol} x accumulation scale; worst "
+        f"normalized {np.max(err / scale):.3e}")
+
+
+@pytest.mark.parametrize("fmt", QFMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("mkn", [(1, 512, 1408), (8, 512, 1408),
+                                 (3, 100, 70)], ids=str)
+def test_qmm_gemv_matches_dequantize_oracle(fmt, mkn):
+    """The skinny-M path (packed weights as the moving operand) pinned
+    <= 1e-6 against the XLA dequantize path, all four paper formats."""
+    m, k, n = mkn
+    assert m <= GEMV_MAX_M  # exercises the GEMV block heuristic
+    rng = np.random.default_rng(fmt.bits * m)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    wp = encode(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), fmt)
+    got = qmatmul(x, wp, None, fmt)
+    want = ref.qmatmul_ref(x, wp, None, fmt)
+    scale = np.abs(np.asarray(x)) @ np.abs(np.asarray(decode(wp, fmt))) + 1.0
+    _assert_oracle(got, want, scale)
+
+
+@pytest.mark.parametrize("fmt", QFMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("gated", [True, False], ids=["gated", "ungated"])
+def test_qmm_ffn_fused_epilogue_matches_oracle(fmt, gated):
+    """One kernel for the gated-FFN pair: act(x @ w_in + b) * (x @ w_gate),
+    pinned <= 1e-6 (in accumulation units) against the XLA dequantize
+    path; the fused output-quantize is bit-exact vs quantizing outside."""
+    from repro.core.flexfloat import quantize
+
+    m, k, n = 8, 384, 512
+    rng = np.random.default_rng(fmt.bits)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    wp = encode(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), fmt)
+    gp = encode(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), fmt) \
+        if gated else None
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+
+    got = qmm_ffn(x, wp, gp, fmt, bias=b, act="silu", out_fmt=None)
+    want = ref.qmatmul_ref(x, wp, None, fmt, gate_payload=gp, bias=b,
+                           act="silu")
+    xa = np.abs(np.asarray(x))
+    sh = xa @ np.abs(np.asarray(decode(wp, fmt))) + np.abs(np.asarray(b)) + 1
+    sg = (xa @ np.abs(np.asarray(decode(gp, fmt))) + 1.0) if gated else 1.0
+    _assert_oracle(got, want, sh * sg)
+
+    got_q = qmm_ffn(x, wp, gp, fmt, bias=b, act="silu", out_fmt=BINARY16ALT)
+    _bits_equal(got_q, quantize(got, BINARY16ALT), msg="fused out-quantize")
+
+
+def test_qmatmul_rounds_ragged_blocks_to_hardware_tiles():
+    """Regression: min(bm, M) alone handed Mosaic unaligned tiles for
+    small/ragged dims -- M=3, K=100 must round up to sublane/lane
+    multiples, pad, and still match the oracle exactly at the edges."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(3, 100)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(100, 130)), jnp.float32)
+    wp = encode(w, BINARY8)
+    got = qmatmul(x, wp, None, BINARY8)
+    assert got.shape == (3, 130)
+    want = ref.qmatmul_ref(x, wp, None, BINARY8)
+    scale = np.abs(np.asarray(x)) @ np.abs(
+        np.asarray(decode(wp, BINARY8))) + 1.0
+    _assert_oracle(got, want, scale)
+    # ... and explicitly-passed ragged blocks are rounded too (the bug was
+    # in the clamping, not the defaults)
+    got2 = qmatmul(x, wp, None, BINARY8, blocks=(3, 100, 100))
+    _assert_oracle(got2, want, scale)
+
+
+def test_gemv_block_heuristic_and_byte_model():
+    """Skinny M selects the weight-streaming blocks; the byte model
+    reports the container ratio on the weight stream (the acceptance
+    number: 4x binary8, 2x binary16/16alt vs the f32 XLA path)."""
+    assert default_blocks(8, 4096, 14336) != default_blocks(256, 4096, 14336)
+    f32 = qmm_weight_bytes(1024, 2816, None)
+    assert f32 / qmm_weight_bytes(1024, 2816, BINARY8) == 4.0
+    assert f32 / qmm_weight_bytes(1024, 2816, BINARY16) == 2.0
+    assert f32 / qmm_weight_bytes(1024, 2816, BINARY16ALT) == 2.0
+    assert f32 / qmm_weight_bytes(1024, 2816, BINARY32) == 1.0
+    # gated pair streams both matrices; totals add x/out/bias terms
+    assert qmm_weight_bytes(64, 128, BINARY8, gated=True) == 2 * 64 * 128
+    assert qmm_hbm_bytes(8, 64, 128, BINARY8, gated=True, bias=True) == (
+        2 * 64 * 128 + 8 * 64 * 4 + 8 * 128 * 4 + 128 * 4)

@@ -174,6 +174,31 @@ def test_serve_rejects_unknown_decode_impl():
               "--decode-impl", "paged_flash"])
 
 
+def test_serve_qmm_pallas_greedy_tokens_match_xla():
+    """--matmul-impl qmm_pallas packs the weights at load and serves the
+    decode GEMMs through the fused transprecision GEMV kernel; under the
+    binary32 policy the packed store is bit-exact (u32 containers), so
+    greedy tokens must match the XLA path token-for-token."""
+    from repro.launch.serve import main
+
+    args = ["--arch", "llama3-8b", "--reduced", "--requests", "3",
+            "--slots", "2", "--max-new", "5", "--prompt-len", "8",
+            "--capacity", "32", "--policy", "binary32"]
+    base = main(args + ["--matmul-impl", "xla"])
+    fused = main(args + ["--matmul-impl", "qmm_pallas"])
+    assert all(r.done for r in fused)
+    assert [r.generated for r in fused] == [r.generated for r in base]
+
+
+def test_serve_rejects_unknown_matmul_impl():
+    import pytest
+
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit):  # argparse choices = legal_matmul_impls
+        main(["--arch", "llama3-8b", "--reduced", "--requests", "1",
+              "--matmul-impl", "qmm"])
+
+
 # ------------------------------------------------------------ programming flow
 def test_full_programming_flow():
     """Paper Sec. III-B steps 1-5 produce a consistent pipeline."""
