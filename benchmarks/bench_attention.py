@@ -37,14 +37,22 @@ from repro.core.policy import transprecision_policy
 from repro.core.qtensor import encode
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import (attention_hbm_bytes,
-                                           flash_decode_reference)
-from repro.kernels.paged_attention import paged_hbm_bytes
+                                           flash_decode_reference,
+                                           ring_ppermute_bytes)
+from repro.kernels.paged_attention import (paged_hbm_bytes,
+                                           paged_ring_ppermute_bytes)
 from repro.kernels.paged_cache import (DEFAULT_PAGE_SIZE,
                                        paged_view_of_contiguous,
                                        pool_fragmentation)
 
 # decode_32k-flavoured cell scaled for CPU: 4 seqs x 4k tokens, 8 KV heads
 B, S, H, G, DH = 4, 4096, 8, 4, 64
+
+# reference ring topology for the analytic ppermute-payload column: the
+# bench runs meshless (wrappers fall back), so the per-step interconnect
+# bytes of the ring rows are reported for the smallest real ring -- the
+# same 2-device host mesh the conformance suite pins the numerics on
+RING_DEVICES = 2
 
 # every legal registry spelling (includes the bare "flash_shmap" alias of
 # "flash_shmap+xla": executing the alias is how the bench locks down that
@@ -91,7 +99,8 @@ def collect(b=B, s=S, h=H, g=G, dh=DH, *, impls=IMPLS,
         cv = jax.lax.bitcast_convert_type(vp, fmt.native_dtype)
 
         for impl in impls:
-            paged = dispatch.canonicalize_impl(impl)[-1] == "paged"
+            parts = dispatch.canonicalize_impl(impl)
+            paged = parts[-1] == "paged"
             kv_bytes = (bytes_f32 if impl == "xla"
                         else bytes_paged if paged else bytes_packed)
             entry = {
@@ -111,6 +120,19 @@ def collect(b=B, s=S, h=H, g=G, dh=DH, *, impls=IMPLS,
                 entry["page_size"] = page
                 entry["pool_frag"] = round(
                     pool_fragmentation(len_np, page), 4)
+            if "ring" in parts:
+                # per-step interconnect payload one device rotates around
+                # the RING_DEVICES-way ring, next to the HBM bytes it
+                # streams: packed containers shrink both by the same ratio
+                if paged:
+                    pool_pages = b * (-(-s // page))
+                    entry["ppermute_bytes"] = paged_ring_ppermute_bytes(
+                        pool_pages, page, h, dh, fmt,
+                        n_devices=RING_DEVICES)
+                else:
+                    entry["ppermute_bytes"] = ring_ppermute_bytes(
+                        b, s, h, dh, fmt, n_devices=RING_DEVICES)
+                entry["ring_devices"] = RING_DEVICES
             if impl == "xla":
                 ref = jax.jit(lambda qq, kk, vv, ll, fmt=fmt:
                               flash_decode_reference(qq, kk, vv, fmt, ll))

@@ -69,6 +69,8 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                 f"regenerate the committed file with the full bench run")
         if name == "BENCH_attention.json":
             legal = set(dispatch.legal_impls())
+            ring = {s for s in legal
+                    if "ring" in dispatch.canonicalize_impl(s)}
             for label, doc in (("committed", committed), ("smoke", smoke)):
                 have = {e.get("impl") for e in doc.get("entries", ())}
                 missing = legal - have
@@ -76,6 +78,24 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                     problems.append(
                         f"{name} ({label}): registry spellings missing "
                         f"from the sweep: {sorted(missing)}")
+                # the ring rows' interconnect column: per-step ppermute
+                # payload bytes must sit next to hbm_bytes on EVERY ring
+                # row (the packed-container collective win is part of the
+                # tracked trajectory, not an optional annotation)
+                ring_rows = [e for e in doc.get("entries", ())
+                             if e.get("impl") in ring]
+                if not ring_rows:
+                    problems.append(
+                        f"{name} ({label}): ring-wrapper rows missing "
+                        f"from the sweep (spellings {sorted(ring)})")
+                bad = [e["impl"] + "/" + e.get("fmt", "?")
+                       for e in ring_rows
+                       if not e.get("ppermute_bytes")
+                       or not e.get("ring_devices")]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): ring rows without a positive "
+                        f"ppermute_bytes/ring_devices column: {bad}")
         if name == "BENCH_kernels.json":
             # the decode-GEMV rows are the weight half of the serving
             # decode byte story: fail if they (or the matmul-impl

@@ -67,6 +67,12 @@ FLASH_SHAPES = {
         decode_impl="flash_shmap+flash_pallas"),
     "decode_32k_paged": ShapeSpec("decode_32k_paged", "decode", 32768, 128,
                                   decode_impl="paged"),
+    # the ring-merge serving variant: same traffic, the fused kernel's
+    # per-device KV shard rotated around the mesh ring (neighbor-only
+    # ppermute) instead of the flash_shmap psum-style merge -- peak
+    # per-device live KV is one shard
+    "decode_32k_ring": ShapeSpec("decode_32k_ring", "decode", 32768, 128,
+                                 decode_impl="ring+flash_pallas"),
     # the packed-WEIGHT serving variant: same traffic, every pdot/peinsum
     # routed through the fused transprecision GEMV kernel over the packed
     # parameter store (models/qparams.py) -- the weight half of decode HBM

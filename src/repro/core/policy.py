@@ -48,8 +48,12 @@ DEFAULT_ROLES = (
 
 
 # Every legal attention-backend spelling (None = defer to the model config).
-# Composed spellings wrap a base backend, e.g. "flash_shmap+flash_pallas"
-# shard_maps the fused packed-KV kernel over the cache's sequence axis.
+# Composed spellings wrap a base backend: "flash_shmap+flash_pallas"
+# shard_maps the fused packed-KV kernel over the cache's sequence axis and
+# psum-merges the partials; "ring+flash_pallas" keeps the same sharding but
+# rotates the KV shards around the mesh ring (neighbor-only ppermute).
+# Growing this tuple is all a new backend needs for CI coverage: the
+# conformance suite (tests/test_conformance.py) parametrizes over it.
 DECODE_IMPLS = (None,) + legal_impls()
 
 # Every legal matmul-backend spelling (None = defer to the model config).

@@ -10,16 +10,27 @@ compose instead of excluding each other:
   fused packed-KV Pallas kernel over a contiguous cache; ``"paged"`` --
   the block-table kernel of ``kernels/paged_attention.py`` over a shared
   page pool, taking an extra ``block_tables`` kwarg) and causal prefill.
-* **wrapper backends** transform another backend.  ``"flash_shmap"``
-  ``shard_map``s any inner decode backend over the cache's *storage* axis:
-  the sequence axis for contiguous bases, the pool's page axis for the
-  ``paged`` base (each device owns 1/n_model of the physical pages and
-  masks block-table entries it does not own -- every token lives on
-  exactly one device).  The per-shard online-softmax partials
-  (max / sum / weighted-V) are combined with three tiny collectives --
-  exact softmax attention, so ``flash_shmap(flash_pallas)`` streams the
-  *packed* payload through the fused kernel *on every chip in parallel*,
-  the near-sensor-cluster win (arXiv 2008.12243) applied to serving.
+* **wrapper backends** transform another backend.  Both wrappers shard
+  the cache's *storage* axis over the mesh's ``model`` axis (the sequence
+  axis for contiguous bases, the pool's page axis for the ``paged`` base)
+  and differ only in the *merge topology*:
+
+  - ``"flash_shmap"`` keeps every shard in place and combines the
+    per-shard online-softmax partials (max / sum / weighted-V) with three
+    tiny all-to-one collectives (psum-style merge) -- exact softmax
+    attention, so ``flash_shmap(flash_pallas)`` streams the *packed*
+    payload through the fused kernel *on every chip in parallel*, the
+    near-sensor-cluster win (arXiv 2008.12243) applied to serving.
+  - ``"ring"`` rotates the K/V payload shards around the mesh ring via
+    neighbor-only ``ppermute`` over n_model steps; each device folds
+    every incoming shard into its queries' running online-softmax state
+    (acc, m, l), so peak per-device live KV stays ONE shard and no
+    all-to-one collective ever forms -- the transprecision-cluster
+    schedule of Montagna et al. (arXiv 2008.12243: explicit data
+    rotation across parallel cores instead of all-to-one reduction)
+    applied to the attention merge.  The fold is associative up to f32
+    rounding, so any rotation order yields the same softmax (pinned by a
+    hypothesis property).
 
 Spellings (``decode_impl`` on configs, policies, shapes and CLI flags)
 are ``+``-compositions read left to right, wrapper first::
@@ -31,10 +42,19 @@ are ``+``-compositions read left to right, wrapper first::
     "flash_shmap+xla"            # sequence-sharded dequantize path
     "flash_shmap+flash_pallas"   # sharded fused kernel (multi-chip serving)
     "flash_shmap+paged"          # page-pool-sharded block-table kernel
+    "ring"                       # == "ring+xla"
+    "ring+xla"                   # ring-rotated dequantize path (debug oracle)
+    "ring+flash_pallas"          # ring-rotated fused kernel
+    "ring+paged"                 # ring-rotated page pool (tables rewritten
+                                 #   to the rotating owner's local ids)
 
 ``validate_impl`` is called at construction time by ``PrecisionPolicy``,
 ``ModelConfig`` and ``ShapeSpec`` so an unknown spelling fails loudly with
 the legal list instead of silently falling through to the XLA path.
+Every legal spelling is conformance-tested against the single XLA
+dequantize oracle by ``tests/test_conformance.py``, whose parametrization
+is ``legal_impls()`` itself -- registering a backend here is what enrolls
+it in the suite.
 
 Contracts (registered by ``models/attention.py`` at import)
 -----------------------------------------------------------
@@ -79,8 +99,8 @@ from repro import compat
 # ---------------------------------------------------------------------------
 
 BASE_IMPLS = ("xla", "flash_pallas", "paged")
-WRAPPER_IMPLS = ("flash_shmap",)
-DEFAULT_INNER = "xla"  # "flash_shmap" alone means flash_shmap+xla
+WRAPPER_IMPLS = ("flash_shmap", "ring")
+DEFAULT_INNER = "xla"  # a bare wrapper spelling means wrapper+xla
 
 _DECODE: dict = {}
 _PREFILL: dict = {}
@@ -111,15 +131,21 @@ def validate_impl(spec: Optional[str], *, allow_none: bool = True,
         if allow_none:
             return None
         raise ValueError(f"{what} must be set; legal values: {legal_impls()}")
+    # membership in the canonicalized legal set, not a structural check:
+    # both wrappers consume the mesh's model axis, so multi-wrapper chains
+    # ("flash_shmap+ring+xla") are meaningless and must be rejected too --
+    # this also keeps legal_impls() and validation in lockstep, which is
+    # what lets tests/test_conformance.py derive its sweep from the
+    # registry alone
     parts = canonicalize_impl(spec)
-    ok = (parts[-1] in BASE_IMPLS
-          and all(p in WRAPPER_IMPLS for p in parts[:-1])
-          and len(set(parts)) == len(parts))
-    if not ok:
+    legal = {canonicalize_impl(s) for s in legal_impls()}
+    if parts not in legal:
         raise ValueError(
             f"unknown {what} {spec!r}; legal spellings are "
-            f"{list(legal_impls())} (wrappers compose left-to-right, e.g. "
-            f"'flash_shmap+flash_pallas' = sequence-sharded fused kernel)")
+            f"{list(legal_impls())} (one wrapper composes with one base, "
+            f"e.g. 'flash_shmap+flash_pallas' = sequence-sharded fused "
+            f"kernel, 'ring+paged' = page pool rotated around the mesh "
+            f"ring)")
     return spec
 
 
@@ -260,49 +286,56 @@ def resolve_prefill(spec: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# the flash_shmap wrapper: shard_map any inner decode backend over the
-# cache's sequence axis and merge the per-shard online-softmax partials
+# the sharded wrappers: flash_shmap and ring share ALL of their gating (mesh
+# probe, model-axis presence, storage-axis divisibility, inner fallback) and
+# differ only in the sharded decode they dispatch to -- one factory keeps
+# the two from ever disagreeing about *when* they shard
 # ---------------------------------------------------------------------------
 
-@register_wrapper("flash_shmap")
-def _flash_shmap_factory(inner: Callable, base: str = DEFAULT_INNER
-                         ) -> Callable:
-    if base == "paged":
-        def wrapped(q, ck, cv, n_valid, *, scale, policy, block_tables,
+def _sharded_wrapper_factory(sharded: Callable, sharded_paged: Callable
+                             ) -> Callable:
+    """Build a wrapper factory around a (contiguous, paged) pair of sharded
+    decode implementations.  The returned factory is what
+    :func:`register_wrapper` stores; both registered wrappers come from
+    here (see the registrations at the bottom of this module)."""
+
+    def factory(inner: Callable, base: str = DEFAULT_INNER) -> Callable:
+        if base == "paged":
+            def wrapped(q, ck, cv, n_valid, *, scale, policy, block_tables,
+                        return_residuals: bool = False):
+                # ck/cv are the page pools; shard their *page* axis (axis 0)
+                mesh = compat.get_ambient_mesh()
+                usable = (not return_residuals
+                          and mesh is not None
+                          and "model" in (mesh.axis_names or ())
+                          and ck.shape[0] % mesh.shape["model"] == 0)
+                if not usable:
+                    return inner(q, ck, cv, n_valid, scale=scale,
+                                 policy=policy, block_tables=block_tables,
+                                 return_residuals=return_residuals)
+                return sharded_paged(inner, mesh, q, ck, cv, n_valid,
+                                     block_tables, scale=scale,
+                                     policy=policy)
+            return wrapped
+
+        def wrapped(q, ck, cv, n_valid, *, scale, policy,
                     return_residuals: bool = False):
-            # ck/cv are the page pools; shard their *page* axis (axis 0)
             mesh = compat.get_ambient_mesh()
-            P = ck.shape[0]
             usable = (not return_residuals
                       and mesh is not None
                       and "model" in (mesh.axis_names or ())
-                      and P % mesh.shape["model"] == 0)
+                      and ck.shape[1] % mesh.shape["model"] == 0)
             if not usable:
+                # no mesh (single host / tests), indivisible cache, or
+                # nested wrapping: run the inner backend unsharded
                 return inner(q, ck, cv, n_valid, scale=scale, policy=policy,
-                             block_tables=block_tables,
                              return_residuals=return_residuals)
-            return _shmap_decode_paged(inner, mesh, q, ck, cv, n_valid,
-                                       block_tables, scale=scale,
-                                       policy=policy)
+            return sharded(inner, mesh, q, ck, cv, n_valid, scale=scale,
+                           policy=policy)
+
         return wrapped
 
-    def wrapped(q, ck, cv, n_valid, *, scale, policy,
-                return_residuals: bool = False):
-        mesh = compat.get_ambient_mesh()
-        S = ck.shape[1]
-        usable = (not return_residuals
-                  and mesh is not None
-                  and "model" in (mesh.axis_names or ())
-                  and S % mesh.shape["model"] == 0)
-        if not usable:
-            # no mesh (single host / tests), indivisible cache, or nested
-            # wrapping: run the inner backend unsharded
-            return inner(q, ck, cv, n_valid, scale=scale, policy=policy,
-                         return_residuals=return_residuals)
-        return _shmap_decode(inner, mesh, q, ck, cv, n_valid, scale=scale,
-                             policy=policy)
-
-    return wrapped
+    return factory
 
 
 def _batch_pspec(mesh, batch: int):
@@ -394,3 +427,160 @@ def _shmap_decode_paged(inner, mesh, q, ck, cv, n_valid, block_tables, *,
         out_specs=P(bspec, None, None, None),
         check_rep=False,
     )(q, ck, cv, n_valid, block_tables)
+
+
+# ---------------------------------------------------------------------------
+# the ring wrapper: rotate K/V shards around the mesh ring (neighbor-only
+# ppermute) and fold each incoming shard into the running online-softmax
+# state -- peak per-device live KV is one shard, no all-to-one collective
+# ---------------------------------------------------------------------------
+
+def _ring_fold(acc, m_run, l_run, o, m, l):
+    """Fold one shard's *normalized* flash partials (o, m, l) into the
+    running (acc, m, l) online-softmax state.
+
+    ``o * l`` recovers the shard's unnormalized weighted-V sum, so this is
+    the standard flash-attention combine: rescale both sides to the new
+    running max and add.  The fold is associative and commutative up to
+    f32 rounding -- any rotation order yields the same softmax (pinned by
+    a hypothesis property in tests/test_properties.py), which is what
+    makes the neighbor-only ring schedule exact.  An empty shard arrives
+    as (0, NEG_INF, 0) -- the backends' shared finite sentinel -- and
+    folds to a no-op.
+    """
+    m_new = jnp.maximum(m_run, m)
+    a_run = jnp.exp(m_run - m_new)
+    a_in = jnp.exp(m - m_new)
+    acc = (acc * a_run[..., None]
+           + o.astype(jnp.float32) * (l * a_in)[..., None])
+    return acc, m_new, l_run * a_run + l * a_in
+
+
+def _ring_finalize(acc, l_run):
+    """(acc, l) -> normalized output with an explicit zero guard (a
+    subnormal epsilon would be FTZ-flushed on XLA CPU and divide 0/0)."""
+    pos = l_run > 0
+    den = jnp.where(pos, l_run, 1.0)[..., None]
+    return jnp.where(pos[..., None], acc / den, 0.0)
+
+
+def _ring_state(q_b):
+    """Fresh per-device (acc, m, l) running state for ``q_b``'s queries.
+
+    The running max starts at the SAME finite sentinel the backends
+    return as ``m`` for an empty shard (``flash_attention.NEG_INF``, a
+    lazy import so validation-only users of this module never pull in
+    Pallas): exp(m - m_new) stays well-defined and an empty shard folds
+    to an exact no-op.  A diverging private sentinel here would give
+    empty shards a nonzero weight."""
+    from .flash_attention import NEG_INF
+    return (jnp.zeros(q_b.shape, jnp.float32),
+            jnp.full(q_b.shape[:-1], NEG_INF, jnp.float32),
+            jnp.zeros(q_b.shape[:-1], jnp.float32))
+
+
+def _ring_decode(inner, mesh, q, ck, cv, n_valid, *, scale, policy):
+    """Ring-rotated decode over a contiguous cache's sequence axis.
+
+    Device ``i`` starts with cache slots [i*s_loc, (i+1)*s_loc); at step
+    ``s`` it holds the shard originally owned by device ``(i - s) % n``
+    (``ppermute`` shifts shards one hop per step), attends its (replicated)
+    queries over it with the shard owner's local valid count, folds the
+    partials into the running state, then passes the shard on.  After
+    n_model steps every device has folded every shard exactly once, so the
+    output is replicated by construction -- no merge collective at all,
+    and the only communication is the neighbor-only rotation.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    s_loc = ck.shape[1] // n_model
+    bspec = _batch_pspec(mesh, q.shape[0])
+    perm = [(i, (i + 1) % n_model) for i in range(n_model)]
+
+    def local(q_b, k_b, v_b, nv_b):
+        idx = jax.lax.axis_index("model")
+        acc, m_run, l_run = _ring_state(q_b)
+        k_cur, v_cur = k_b, v_b
+        for step in range(n_model):
+            owner = (idx - step) % n_model
+            local_n = jnp.clip(nv_b - owner * s_loc, 0, s_loc)
+            o, m, l = inner(q_b, k_cur, v_cur, local_n, scale=scale,
+                            policy=policy, return_residuals=True)
+            acc, m_run, l_run = _ring_fold(acc, m_run, l_run, o, m, l)
+            if step != n_model - 1:  # the last shard is not passed on
+                k_cur = jax.lax.ppermute(k_cur, "model", perm)
+                v_cur = jax.lax.ppermute(v_cur, "model", perm)
+        return _ring_finalize(acc, l_run)
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec)),
+        out_specs=P(bspec, None, None, None),
+        # pallas_call has no replication rule; after n_model folds the
+        # output is replicated by construction
+        check_rep=False,
+    )(q, ck, cv, n_valid)
+
+
+def _ring_decode_paged(inner, mesh, q, ck, cv, n_valid, block_tables, *,
+                       scale, policy):
+    """Ring-rotated paged decode: the pool's page axis is sharded and the
+    pool shards rotate; the block table stays replicated, and at each step
+    every device rewrites it to the *rotating owner's* pool-local page ids
+    (entries the current shard does not hold become -1, masked by the
+    kernel).  Every token is folded exactly once over the full rotation --
+    same exactness argument as the contiguous ring."""
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape["model"]
+    p_loc = ck.shape[0] // n_model
+    bspec = _batch_pspec(mesh, q.shape[0])
+    perm = [(i, (i + 1) % n_model) for i in range(n_model)]
+
+    def local(q_b, kp_l, vp_l, nv_b, tbl_b):
+        idx = jax.lax.axis_index("model")
+        acc, m_run, l_run = _ring_state(q_b)
+        k_cur, v_cur = kp_l, vp_l
+        for step in range(n_model):
+            owner = (idx - step) % n_model
+            first = owner * p_loc
+            owned = (tbl_b >= first) & (tbl_b < first + p_loc)
+            ltbl = jnp.where(owned, tbl_b - first, -1)
+            o, m, l = inner(q_b, k_cur, v_cur, nv_b, scale=scale,
+                            policy=policy, block_tables=ltbl,
+                            return_residuals=True)
+            acc, m_run, l_run = _ring_fold(acc, m_run, l_run, o, m, l)
+            if step != n_model - 1:
+                k_cur = jax.lax.ppermute(k_cur, "model", perm)
+                v_cur = jax.lax.ppermute(v_cur, "model", perm)
+        return _ring_finalize(acc, l_run)
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P("model", None, None, None),   # pool page axis
+                  P("model", None, None, None),
+                  P(bspec),
+                  P(bspec, None)),                # tables replicated
+        out_specs=P(bspec, None, None, None),
+        check_rep=False,
+    )(q, ck, cv, n_valid, block_tables)
+
+
+# ---------------------------------------------------------------------------
+# wrapper registrations: one shared factory, two merge topologies.  The
+# lambdas keep the module globals LATE-bound, so tests can monkeypatch the
+# sharded branch (test_perf_variants spies on _shmap_decode to prove the
+# wrapper genuinely sharded instead of silently taking the mesh fallback).
+# ---------------------------------------------------------------------------
+
+register_wrapper("flash_shmap")(_sharded_wrapper_factory(
+    lambda *a, **k: _shmap_decode(*a, **k),
+    lambda *a, **k: _shmap_decode_paged(*a, **k)))
+register_wrapper("ring")(_sharded_wrapper_factory(
+    lambda *a, **k: _ring_decode(*a, **k),
+    lambda *a, **k: _ring_decode_paged(*a, **k)))

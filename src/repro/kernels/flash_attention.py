@@ -443,3 +443,18 @@ def attention_hbm_bytes(batch: int, seq: int, n_kv: int, head_dim: int,
     item = 4 if fmt is None else fmt.container_dtype.dtype.itemsize
     kv = 2 * batch * seq * n_kv * head_dim * item
     return kv + batch * n_kv * g * head_dim * q_bytes
+
+
+def ring_ppermute_bytes(batch: int, seq: int, n_kv: int, head_dim: int,
+                        fmt, *, n_devices: int) -> int:
+    """Interconnect bytes ONE device sends per decode step under the
+    ``ring`` wrapper over a contiguous cache: its (seq / n_devices)-slot
+    K and V payload shards, passed to the neighbor on each of the
+    n_devices - 1 rotations.  Container-width payloads rotate, so the
+    packed formats shrink the collective by the same ratio as HBM --
+    the transprecision-cluster observation (explicit data rotation moves
+    packed bytes) applied to the attention merge."""
+    fmt = get_format(fmt) if fmt is not None else None
+    item = 4 if fmt is None else fmt.container_dtype.dtype.itemsize
+    shard = batch * (seq // n_devices) * n_kv * head_dim * item
+    return 2 * shard * (n_devices - 1)

@@ -214,3 +214,16 @@ def paged_hbm_bytes(batch: int, lengths, n_kv: int, head_dim: int, fmt, *,
     kv = 2 * pages * page_size * n_kv * head_dim * item
     tables = pages * 4
     return kv + tables + batch * n_kv * g * head_dim * q_bytes
+
+
+def paged_ring_ppermute_bytes(num_pages: int, page_size: int, n_kv: int,
+                              head_dim: int, fmt, *, n_devices: int) -> int:
+    """Interconnect bytes ONE device sends per decode step under the
+    ``ring+paged`` wrapper: its (num_pages / n_devices)-page K and V pool
+    shards, passed whole to the neighbor on each of the n_devices - 1
+    rotations (the block table stays put and is rewritten locally to the
+    rotating owner's page ids, so only payload bytes move)."""
+    fmt = get_format(fmt) if fmt is not None else None
+    item = 4 if fmt is None else fmt.container_dtype.dtype.itemsize
+    shard = (num_pages // n_devices) * page_size * n_kv * head_dim * item
+    return 2 * shard * (n_devices - 1)

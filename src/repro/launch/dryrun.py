@@ -271,8 +271,9 @@ def main():
     ap.add_argument("--decode-impl", default=None,
                     help="attention backend override for every cell: any "
                          "registry spelling from kernels/dispatch.py, e.g. "
-                         "flash_pallas or flash_shmap+flash_pallas "
-                         "(validated; shorthand for --set decode_impl=...)")
+                         "flash_pallas, flash_shmap+flash_pallas, or "
+                         "ring+flash_pallas (validated; shorthand for "
+                         "--set decode_impl=...)")
     ap.add_argument("--matmul-impl", default=None,
                     help="matmul backend override for every cell: 'xla' or "
                          "'qmm_pallas' (packed weight store + fused "

@@ -12,8 +12,12 @@ Serving loop:
     through the fused flash kernel (kernels/flash_attention.py), so the
     bandwidth-bound decode step also *moves* 4x fewer bytes;
     ``--decode-impl flash_shmap+flash_pallas`` shard_maps that kernel over
-    the cache's sequence axis for multi-chip serving (any registry spelling
-    from kernels/dispatch.py is accepted, and unknown ones fail loudly);
+    the cache's sequence axis for multi-chip serving, and
+    ``--decode-impl ring+flash_pallas`` (or ``ring+paged``) replaces the
+    psum-style partial merge with a neighbor-only ``ppermute`` rotation of
+    the KV shards -- peak per-device live KV is one shard (any registry
+    spelling from kernels/dispatch.py is accepted, and unknown ones fail
+    loudly);
   * ``--decode-impl paged`` (or ``flash_shmap+paged``) switches the KV
     storage itself to a block-table page pool (kernels/paged_cache.py):
     pages are allocated as sequences grow and freed the moment they
@@ -289,7 +293,10 @@ def main(argv=None):
                          "else model config; flash_pallas = fused packed-KV "
                          "kernel, flash_shmap+flash_pallas = that kernel "
                          "sequence-sharded over the mesh, paged = block-"
-                         "table page pool with continuous batching)")
+                         "table page pool with continuous batching, "
+                         "ring+flash_pallas / ring+paged = KV shards "
+                         "rotated around the mesh ring via neighbor-only "
+                         "ppermute instead of the psum-style merge)")
     ap.add_argument("--page-size", type=int,
                     default=paged_cache.DEFAULT_PAGE_SIZE,
                     help="tokens per KV page (paged backends; multiple of "

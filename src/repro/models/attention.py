@@ -55,6 +55,18 @@ compose a wrapper with a base backend, ``wrapper+base``:
                           (``paged_view_of_contiguous``).  Composes as
                           ``"flash_shmap+paged"``: the *pool* is sharded
                           over the mesh's model axis.
+  * ``"ring"``         -- the other merge topology: same sharding as
+                          ``flash_shmap`` (sequence axis, or pool page
+                          axis for ``ring+paged``), but the K/V shards
+                          *rotate* around the mesh ring via neighbor-only
+                          ``ppermute`` while each device folds every
+                          incoming shard into its running online-softmax
+                          state -- no all-to-one collective, peak
+                          per-device live KV is one shard.  ``"ring"``
+                          alone means ``"ring+xla"`` (the debuggable
+                          oracle spelling); ``"ring+flash_pallas"`` and
+                          ``"ring+paged"`` are the serving compositions
+                          (conformance-pinned <= 1e-6 on a 2-device mesh).
 
 Prefill (fresh and continuation-from-packed-cache) goes through the same
 registry (``dispatch.resolve_prefill``); a composed spelling resolves to
@@ -129,10 +141,18 @@ def _gqa_scores(q, k, policy):
     return peinsum("bqhgd,bkhd->bhgqk", q, k, policy, "attn_w", out_act=False)
 
 
-def _softmax_weighted(scores_f32, v, policy):
+def _softmax_weighted(scores_f32, v, policy, valid=None):
     """softmax in f32 (range-critical), probs re-cast to attn_probs format,
-    then prob @ v with f32 accumulation."""
+    then prob @ v with f32 accumulation.
+
+    ``valid`` (broadcastable bool over the score shape) re-masks the probs:
+    a FULLY-masked row's softmax degrades to uniform 1/S (the mean of V
+    instead of the zero every masked path must produce), while rows with
+    any valid slot are untouched (their masked probs are exactly 0 already)
+    -- caught by tests/test_conformance.py on zero-length decode rows."""
     probs = jax.nn.softmax(scores_f32, axis=-1)
+    if valid is not None:
+        probs = jnp.where(valid, probs, 0.0)
     probs = act_cast(probs, policy, "attn_probs")
     out = peinsum("bhgqk,bkhd->bqhgd", probs, v, policy, "attn_w")
     return out
@@ -189,7 +209,10 @@ def _decode_xla(q, ck, cv, n_valid, *, scale, policy,
              < n_valid.astype(jnp.int32)[:, None])    # (B, S)
     scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     if not return_residuals:
-        return _softmax_weighted(scores, vv, policy)[:, 0]
+        # valid= zeroes fully-masked (zero-length) rows, which plain
+        # softmax would turn into the mean of V
+        return _softmax_weighted(scores, vv, policy,
+                                 valid[:, None, None, None, :])[:, 0]
     m = jnp.max(scores, axis=-1)                      # (B, H, G, 1)
     e = jnp.exp(scores - m[..., None])
     e = jnp.where(valid[:, None, None, None, :], e, 0.0)

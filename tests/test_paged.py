@@ -1,10 +1,13 @@
-"""Paged (block-table) packed-KV backend tests.
+"""Paged (block-table) packed-KV backend tests: behavior specific to the
+page-pool layout.
 
-Oracle-pins the ``paged`` and ``flash_shmap+paged`` decode spellings to the
-XLA dequantize path (<= 1e-6) for all four paper formats, including ragged
-lengths, sequences spanning >= 3 non-contiguous pages, and page reuse after
-a free/realloc -- plus the host allocator's admission/eviction bookkeeping
-and the model-level PagedKVCache decode path.
+The cross-backend oracle pins (every ``paged``-base spelling vs the XLA
+dequantize reference, all formats, ragged lengths, shuffled non-contiguous
+pages, 1-/2-device meshes) live in ``tests/test_conformance.py``; this
+file keeps what the generic sweep cannot express -- page reuse after
+free/realloc (stale bytes must be invisible, including under pool
+sharding), the device cache ops, the host allocator's bookkeeping, and
+the model/serve-level PagedKVCache wiring.
 """
 import jax
 import jax.numpy as jnp
@@ -45,38 +48,30 @@ def _mk(B=3, S=80, H=2, G=4, dh=32, seed=0):
     return q, k, v
 
 
-# -------------------------------------------------- kernel vs XLA oracle
+# ---------------------------------------------- kernel-specific behavior
+# (the ragged + shuffled-non-contiguous-pages oracle pin moved to
+# tests/test_conformance.py::test_conformance_noncontiguous_pages, which
+# runs it for every paged-base spelling)
 
-@pytest.mark.parametrize("fmt", PAPER_FORMATS, ids=lambda f: f.name)
-def test_paged_decode_vs_oracle_ragged_noncontiguous(fmt):
-    """Kernel == XLA dequantize oracle (<= 1e-6) with ragged lengths and
-    every sequence's pages scattered non-contiguously through the pool
-    (row 0 spans 5 pages, shuffled; row 1 lives in one page; row 2 spans
-    4 pages and straddles a partial page)."""
+def test_paged_reference_matches_contiguous_oracle():
+    """paged_decode_reference == the contiguous dequantize oracle on the
+    gathered view: the paged reference introduces no math of its own, so
+    the conformance suite may pin everything to the one contiguous
+    oracle."""
+    fmt = PAPER_FORMATS[0]
     page, n_pages, num_pages = 16, 5, 20
     B, S = 3, n_pages * page
     q, k, v = _mk(B=B, S=S)
     lengths = jnp.asarray([80, 7, 53], jnp.int32)
-    rng = np.random.default_rng(1)
-    perm = iter(rng.permutation(num_pages).tolist())
-    tables = np.full((B, n_pages), -1, np.int32)
-    for b, need in enumerate([5, 1, 4]):
-        for p in range(need):
-            tables[b, p] = next(perm)
-    assert (tables[0] >= 0).sum() >= 3  # the >= 3-non-contiguous-pages case
-
+    tables = np.asarray([[2, 7, 11, 3, 19], [5, -1, -1, -1, -1],
+                         [8, 0, 14, 9, -1]], np.int32)
     kp, vp = encode(k, fmt), encode(v, fmt)
     kpool = _scatter_to_pool(kp, tables, num_pages, page)
     vpool = _scatter_to_pool(vp, tables, num_pages, page)
     tj = jnp.asarray(tables)
-    got = paged_decode(q, kpool, vpool, fmt, lengths, tj)
     ref = paged_decode_reference(q, kpool, vpool, fmt, lengths, tj)
-    # and against the *contiguous* dequantize oracle: paging must be pure
-    # layout, invisible in the math
     want = flash_decode_reference(q, kp, vp, fmt, lengths)
-    assert float(np.abs(np.asarray(got) - np.asarray(ref)).max()) <= 1e-6
-    assert float(np.abs(np.asarray(got) - np.asarray(want)).max()) <= 1e-6
-    assert not np.isnan(np.asarray(got)).any()
+    assert float(np.abs(np.asarray(ref) - np.asarray(want)).max()) <= 1e-6
 
 
 def test_paged_decode_residuals_match_plain():
@@ -328,7 +323,11 @@ def test_paged_shape_spec_pinned():
     assert ALL_SHAPES["decode_32k_paged"].decode_impl == "paged"
 
 
-# ------------------------------- pool-sharded wrapper vs oracle (2 devices)
+# ------------------- page reuse under pool sharding (2-device subprocess)
+# (the full pool-sharded format/ragged oracle sweep moved to
+# tests/test_conformance.py; what stays here is the page-reuse semantics
+# under sharding -- a freed page re-mapped onto the OTHER shard, with its
+# stale bytes still sitting in the pool -- for both merge topologies)
 
 _SHARDED_PAGED = r"""
 import os
@@ -350,8 +349,6 @@ S = n_pages * page
 q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
 k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
 v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
-# ragged: row 0 full (5 scattered pages -- both shards own some), row 1
-# one page (single shard), row 2 straddles a partial page
 lengths = jnp.asarray([80, 7, 53], jnp.int32)
 perm = iter(rng.permutation(num_pages).tolist())
 tables = np.full((B, n_pages), -1, np.int32)
@@ -359,7 +356,6 @@ for b, need in enumerate([5, 1, 4]):
     for p in range(need):
         tables[b, p] = next(perm)
 scale = float(1.0 / np.sqrt(dh))
-fn = dispatch.resolve_decode("flash_shmap+paged")
 
 def scatter(payload):
     c = np.asarray(payload)
@@ -368,26 +364,12 @@ def scatter(payload):
         for p in range(n_pages):
             if tables[b, p] >= 0:
                 pool[tables[b, p]] = c[b, p*page:(p+1)*page]
-    return jnp.asarray(pool)
+    return pool
 
-for fmt in PAPER_FORMATS:
-    kp, vp = encode(k, fmt), encode(v, fmt)
-    pol = transprecision_policy(kv_fmt=fmt)
-    kpool, vpool = scatter(kp), scatter(vp)
-    ck = jax.lax.bitcast_convert_type(kpool, fmt.native_dtype)
-    cv = jax.lax.bitcast_convert_type(vpool, fmt.native_dtype)
-    tj = jnp.asarray(tables)
-    with compat.use_mesh(mesh):
-        got = jax.jit(lambda q, a, b, n, t: fn(
-            q, a, b, n, scale=scale, policy=pol,
-            block_tables=t))(q, ck, cv, lengths, tj)
-    want = paged_decode_reference(q, kpool, vpool, fmt, lengths, tj,
-                                  scale=scale)
-    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
-    assert err <= 1e-6, (fmt.name, err)
-    assert not np.isnan(np.asarray(got)).any(), fmt.name
-
-# free/realloc under sharding: move row 1's page to the other shard
+# free row 1's page, realloc it on the OTHER shard (boundary: p_loc = 10)
+# and write fresh payload; the stale bytes of the old page stay in the
+# pool and must be invisible under both merge topologies -- page reuse is
+# masking + overwrite, never pool zeroing
 tables2 = tables.copy()
 old = tables2[1, 0]
 free = sorted(set(range(num_pages)) - set(tables2[tables2 >= 0].tolist()))
@@ -396,29 +378,33 @@ tables2[1, 0] = other
 fmt = PAPER_FORMATS[0]
 kp, vp = encode(k, fmt), encode(v, fmt)
 pol = transprecision_policy(kv_fmt=fmt)
-kpool = np.array(scatter(kp)); vpool = np.array(scatter(vp))
-kpool[other] = np.asarray(kp)[1, :page]; vpool[other] = np.asarray(vp)[1, :page]
+kpool, vpool = scatter(kp), scatter(vp)
+kpool[other] = np.asarray(kp)[1, :page]
+vpool[other] = np.asarray(vp)[1, :page]
 ck = jax.lax.bitcast_convert_type(jnp.asarray(kpool), fmt.native_dtype)
 cv = jax.lax.bitcast_convert_type(jnp.asarray(vpool), fmt.native_dtype)
 tj = jnp.asarray(tables2)
-with compat.use_mesh(mesh):
-    got = jax.jit(lambda q, a, b, n, t: fn(
-        q, a, b, n, scale=scale, policy=pol,
-        block_tables=t))(q, ck, cv, lengths, tj)
 want = paged_decode_reference(q, jnp.asarray(kpool), jnp.asarray(vpool),
                               fmt, lengths, tj, scale=scale)
-err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
-assert err <= 1e-6, ("realloc", err)
+for impl in ("flash_shmap+paged", "ring+paged"):
+    fn = dispatch.resolve_decode(impl)
+    with compat.use_mesh(mesh):
+        got = jax.jit(lambda q, a, b, n, t: fn(
+            q, a, b, n, scale=scale, policy=pol,
+            block_tables=t))(q, ck, cv, lengths, tj)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    assert err <= 1e-6, (impl, "realloc", err)
 print("SHARDED_PAGED_OK")
 """
 
 
-def test_flash_shmap_paged_vs_oracle_subprocess():
+def test_page_reuse_under_pool_sharding_subprocess():
     run_child(_SHARDED_PAGED, "SHARDED_PAGED_OK", timeout=480)
 
 
-def test_shmap_paged_falls_back_without_mesh():
-    """flash_shmap+paged outside any mesh == plain paged."""
+@pytest.mark.parametrize("wrapper", ["flash_shmap", "ring"])
+def test_wrapped_paged_falls_back_without_mesh(wrapper):
+    """wrapper+paged outside any mesh == plain paged."""
     fmt = PAPER_FORMATS[0]
     page, n_pages = 16, 3
     B, S = 2, n_pages * page
@@ -432,7 +418,7 @@ def test_shmap_paged_falls_back_without_mesh():
     cv = jax.lax.bitcast_convert_type(vpool, fmt.native_dtype)
     nv = jnp.asarray([48, 31], jnp.int32)
     tj = jnp.asarray(tables)
-    composed = dispatch.resolve_decode("flash_shmap+paged")
+    composed = dispatch.resolve_decode(f"{wrapper}+paged")
     plain = dispatch.resolve_decode("paged")
     a = composed(q, ck, cv, nv, scale=0.25, policy=pol, block_tables=tj)
     b = plain(q, ck, cv, nv, scale=0.25, policy=pol, block_tables=tj)

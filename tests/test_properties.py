@@ -1,6 +1,8 @@
 """Hypothesis property-based tests on the transprecision type system's
-invariants (FlexFloat semantics, IEEE 754 rounding laws) and on the shared
-in-register codec (kernels/codec.py).  Requires ``hypothesis`` (in
+invariants (FlexFloat semantics, IEEE 754 rounding laws), on the shared
+in-register codec (kernels/codec.py), on the PagePool allocator's
+bookkeeping (kernels/paged_cache.py), and on the ring wrapper's
+online-softmax fold (kernels/dispatch.py).  Requires ``hypothesis`` (in
 requirements-dev.txt; CI installs it, so these run on every push)."""
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +14,9 @@ from hypothesis import given, settings, strategies as st
 from repro.core import flexfloat as ff
 from repro.core import qtensor as qt
 from repro.core.formats import PAPER_FORMATS, FpFormat
-from repro.kernels import codec
+from repro.kernels import codec, dispatch
+from repro.kernels import paged_cache as pc
+from repro.kernels.flash_attention import flash_decode_reference
 
 fmt_strategy = st.builds(
     FpFormat,
@@ -176,6 +180,100 @@ def test_unpack_words_roundtrip_from_words(ws, itemsize):
     parts = qt.unpack_words(w, dtype)
     back = qt.pack_words(parts)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator (kernels/paged_cache.py): the serving loop drives it
+# with arbitrary admit/grow/free interleavings, so the invariants must hold
+# after EVERY mutation, not just along the happy path the system tests walk
+# ---------------------------------------------------------------------------
+
+_N_SLOTS = 3
+_PAGE = 8
+
+pool_ops = st.lists(
+    st.tuples(st.sampled_from(["alloc", "grow", "free"]),
+              st.integers(min_value=0, max_value=_N_SLOTS - 1),  # slot
+              st.integers(min_value=0, max_value=40)),           # tokens
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=150, deadline=None)
+@given(ops=pool_ops, num_pages=st.integers(min_value=2, max_value=8),
+       pages_per_seq=st.integers(min_value=1, max_value=4))
+def test_page_pool_interleavings_never_double_map(ops, num_pages,
+                                                  pages_per_seq):
+    """No interleaving of allocate/ensure_capacity/free_slot may ever map
+    one physical page into two slots (or into a slot AND the free list),
+    every page is always accounted for, the device-facing tables mirror
+    host ownership exactly, and ``can_admit`` agrees with a brute-force
+    count of unowned pages."""
+    pool = pc.PagePool(num_pages=num_pages, page_size=_PAGE,
+                       n_slots=_N_SLOTS, pages_per_seq=pages_per_seq)
+    for op, slot, toks in ops:
+        if op == "alloc" and slot not in pool.owned:
+            pool.allocate(slot, toks)
+        elif op == "grow" and slot in pool.owned:
+            pool.ensure_capacity(slot, toks)
+        elif op == "free":
+            pool.free_slot(slot)
+        owned = [p for pages in pool.owned.values() for p in pages]
+        assert len(owned) == len(set(owned))          # never double-mapped
+        assert not set(owned) & set(pool.free)        # disjoint from free
+        assert sorted(owned + pool.free) == list(range(num_pages))
+        for s in range(_N_SLOTS):                     # tables == ownership
+            mapped = [p for p in pool.tables[s].tolist() if p >= 0]
+            assert mapped == pool.owned.get(s, [])
+        brute_free = num_pages - len(owned)           # brute-force count
+        assert len(pool.free) == brute_free
+        for want in (0, 1, _PAGE, _PAGE + 1, 5 * _PAGE + 1):
+            need = -(-max(want, 1) // _PAGE)
+            assert pool.can_admit(want) == (need <= brute_free
+                                            and need <= pages_per_seq)
+
+
+# ---------------------------------------------------------------------------
+# ring-merge associativity (kernels/dispatch.py): folding per-shard flash
+# partials in ANY rotation order must reproduce the monolithic softmax --
+# the property that makes the neighbor-only ring schedule exact regardless
+# of which shard a device starts with
+# ---------------------------------------------------------------------------
+
+@st.composite
+def ring_cases(draw):
+    n_shards = draw(st.integers(min_value=1, max_value=5))
+    s_loc = draw(st.integers(min_value=1, max_value=8))
+    order = draw(st.permutations(list(range(n_shards))))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    lens = draw(st.lists(st.integers(min_value=0, max_value=40),
+                         min_size=2, max_size=2))
+    return n_shards, s_loc, tuple(order), seed, lens
+
+
+@settings(max_examples=60, deadline=None)
+@given(case=ring_cases())
+def test_ring_fold_any_rotation_order_matches_monolithic(case):
+    n_shards, s_loc, order, seed, lens = case
+    S = n_shards * s_loc
+    rng = np.random.default_rng(seed)
+    B, H, G, dh = 2, 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, H, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    lengths = jnp.asarray([min(n, S) for n in lens], jnp.int32)
+    want = flash_decode_reference(q, k, v, None, lengths)
+    acc, m_run, l_run = dispatch._ring_state(q)
+    for sh in order:  # an arbitrary rotation order, not just 0..n-1
+        lo = sh * s_loc
+        local_n = jnp.clip(lengths - lo, 0, s_loc)
+        o, m, l = flash_decode_reference(
+            q, k[:, lo:lo + s_loc], v[:, lo:lo + s_loc], None, local_n,
+            return_residuals=True)
+        acc, m_run, l_run = dispatch._ring_fold(acc, m_run, l_run, o, m, l)
+    got = dispatch._ring_finalize(acc, l_run)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+    assert not np.isnan(np.asarray(got)).any()
 
 
 @settings(max_examples=50, deadline=None)

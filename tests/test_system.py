@@ -174,6 +174,71 @@ def test_serve_rejects_unknown_decode_impl():
               "--decode-impl", "paged_flash"])
 
 
+def test_serve_greedy_tokens_identical_across_base_impls():
+    """Serve-level determinism across the decode registry, part 1: under
+    the binary32 policy every base backend reads bit-identical cache
+    payloads (u32 containers) and computes in f32, so greedy tokens must
+    match the xla spelling token-for-token.  The base list is derived from
+    the registry (wrapper spellings are meshless fallbacks to these bases
+    in-process; they run genuinely sharded in the 2-device subprocess
+    below).  Extends the PR 4 xla-vs-qmm greedy pin to the attention
+    registry."""
+    from repro.kernels import dispatch
+    from repro.launch.serve import main
+
+    args = ["--arch", "llama3-8b", "--reduced", "--requests", "3",
+            "--slots", "2", "--max-new", "5", "--prompt-len", "8",
+            "--capacity", "32", "--policy", "binary32", "--page-size", "8"]
+    bases = [i for i in dispatch.legal_impls()
+             if len(dispatch.canonicalize_impl(i)) == 1]
+    assert set(bases) == set(dispatch.BASE_IMPLS)
+    want = None
+    for impl in bases:
+        reqs = main(args + ["--decode-impl", impl])
+        assert all(r.done for r in reqs), impl
+        toks = [r.generated for r in reqs]
+        if want is None:
+            want = toks  # bases iterate registry order; "xla" is first
+        assert toks == want, f"greedy divergence: {impl} vs {bases[0]}"
+
+
+_SERVE_REGISTRY_2DEV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+from repro import compat
+from repro.kernels import dispatch
+from repro.launch.serve import main
+
+mesh = compat.make_mesh((2,), ("model",))
+args = ["--arch", "llama3-8b", "--reduced", "--requests", "2",
+        "--slots", "2", "--max-new", "4", "--prompt-len", "4",
+        "--capacity", "32", "--policy", "binary32", "--page-size", "8"]
+with compat.use_mesh(mesh):
+    base = main(args + ["--decode-impl", "xla"])
+    want = [r.generated for r in base]
+    # every wrapper spelling, derived from the registry inside the child:
+    # flash_shmap shards the cache (psum merge), ring rotates it
+    # (neighbor-only ppermute) -- both genuinely 2-way sharded here, and
+    # greedy tokens must still match the unsharded xla serve exactly
+    wrapped = [i for i in dispatch.legal_impls()
+               if len(dispatch.canonicalize_impl(i)) > 1]
+    assert len(wrapped) >= 8, wrapped
+    for impl in wrapped:
+        got = main(args + ["--decode-impl", impl])
+        toks = [r.generated for r in got]
+        assert all(r.done for r in got), impl
+        assert toks == want, ("greedy divergence", impl, toks, want)
+print("SERVE_REGISTRY_2DEV_OK")
+"""
+
+
+def test_serve_greedy_tokens_identical_across_wrappers_2dev_subprocess():
+    """Part 2: the wrapper spellings under a real 2-device mesh (sequence /
+    page-pool axis genuinely sharded, ring rotation genuinely rotating)
+    serve the same greedy tokens as the unsharded xla loop."""
+    run_child(_SERVE_REGISTRY_2DEV, "SERVE_REGISTRY_2DEV_OK", timeout=540)
+
+
 def test_serve_qmm_pallas_greedy_tokens_match_xla():
     """--matmul-impl qmm_pallas packs the weights at load and serves the
     decode GEMMs through the fused transprecision GEMV kernel; under the
