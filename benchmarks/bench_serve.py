@@ -1,0 +1,79 @@
+"""Serving-engine bench: TTFT, decode tokens/s, and peak transient
+prefill bytes per registry spelling, through the real engine
+(scheduler + chunked prefill + page pool), not a synthetic loop.
+
+Rows land in ``BENCH_serve.json`` next to the attention/kernel
+aggregates:
+
+* ``bench="engine_serve"`` -- chunked page-granular prefill (the engine
+  default): ``peak_prefill_bytes`` is one page of K/V per layer.
+* ``bench="engine_serve_whole"`` -- whole-prompt prefill (the old
+  monolithic serve loop's memory behavior), kept in the trajectory so the
+  O(page) vs O(prompt) transient-staging win stays a diffable number.
+"""
+import numpy as np
+
+
+def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
+            capacity=64, impls=("xla", "paged", "flash_shmap+paged"),
+            policy_name="transprecision", smoke=False) -> list:
+    import jax
+
+    from repro.core.policy import get_policy
+    from repro.engine import Engine, Request
+    from repro.models.registry import build
+
+    if smoke:
+        requests, prompt_len, max_new = 2, 16, 4
+
+    model, cfg = build("llama3-8b", reduced=True)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, min(cfg.vocab, 97), prompt_len).tolist()
+               for _ in range(requests)]
+    shape = f"s{slots}_p{prompt_len}_n{max_new}_pg{page_size}"
+
+    entries = []
+    params = None
+    for impl in impls:
+        policy = get_policy(policy_name, decode_impl=impl)
+        if params is None:  # same policy dtypes across decode impls
+            params = model.init_params(jax.random.PRNGKey(0), policy)
+        modes = [("engine_serve", None)]
+        if impl == "paged":  # one whole-prompt row pins the O(prompt) cost
+            modes.append(("engine_serve_whole", 0))
+        for bench, chunk in modes:
+            eng = Engine(model, cfg, policy, params, slots=slots,
+                         capacity=capacity, page_size=page_size,
+                         prefill_chunk=chunk)
+            reqs = [Request(i, list(p), max_new)
+                    for i, p in enumerate(prompts)]
+            eng.run(reqs)
+            s = eng.summary
+            entries.append({
+                "bench": bench,
+                "impl": impl,
+                "fmt": policy.fmt("kv_cache").name,
+                "shape": shape,
+                "ttft_mean_s": s["ttft_mean_s"],
+                "tokens_per_s": s["tokens_per_s"],
+                "peak_prefill_tokens": s["peak_prefill_transient_tokens"],
+                "peak_prefill_bytes": s["peak_prefill_transient_bytes"],
+                "page_size": page_size,
+                "decode_tokens": s["decode_tokens"],
+                "evictions": s["evictions"],
+            })
+    return entries
+
+
+def report(entries=None) -> list:
+    """(name, us_per_call, derived) rows for the CSV tail."""
+    entries = entries if entries is not None else collect()
+    out = []
+    for e in entries:
+        out.append((
+            f"{e['bench']}_{e['impl']}_{e['fmt']}_{e['shape']}",
+            float(e["ttft_mean_s"] or 0.0) * 1e6,
+            f"tok_s={e['tokens_per_s']:.1f};"
+            f"peak_prefill_bytes={e['peak_prefill_bytes']}",
+        ))
+    return out

@@ -1,9 +1,9 @@
 """Schema guard: fail when the bench-smoke aggregates drift from the
 committed perf-trajectory files.
 
-``BENCH_attention.json`` / ``BENCH_kernels.json`` at the repo root are the
-diffable perf record; the CI smoke writes the same aggregates (tiny shapes)
-to ``results/bench_smoke/``.  If a bench change renames/adds/drops entry
+``BENCH_attention.json`` / ``BENCH_kernels.json`` / ``BENCH_serve.json`` at
+the repo root are the diffable perf record; the CI smoke writes the same
+aggregates (tiny shapes) to ``results/bench_smoke/``.  If a bench change renames/adds/drops entry
 keys, the committed files silently stop matching what the next full run
 would produce -- drift that previously only surfaced at the next manual
 bench.  This script pins, per file:
@@ -26,7 +26,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if ROOT not in sys.path:
     sys.path.insert(0, ROOT)
 
-FILES = ("BENCH_attention.json", "BENCH_kernels.json")
+FILES = ("BENCH_attention.json", "BENCH_kernels.json", "BENCH_serve.json")
 
 
 def _load(path: str) -> dict:
@@ -119,6 +119,35 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                     problems.append(
                         f"{name} ({label}): GEMV batch coverage lost -- "
                         f"need B1 and B8 rows, have {sorted(batches)}")
+        if name == "BENCH_serve.json":
+            # the engine rows ARE the serving story: TTFT, decode
+            # throughput and the O(page_size) transient-prefill staging
+            # must stay tracked for the paged path and at least one
+            # wrapped spelling, with positive measured values
+            for label, doc in (("committed", committed), ("smoke", smoke)):
+                rows = [e for e in doc.get("entries", ())
+                        if e.get("bench", "").startswith("engine_serve")]
+                if not rows:
+                    problems.append(
+                        f"{name} ({label}): engine rows "
+                        f"(bench='engine_serve*') missing from the sweep")
+                    continue
+                have = {e.get("impl") for e in rows}
+                missing = {"paged", "flash_shmap+paged"} - have
+                if missing:
+                    problems.append(
+                        f"{name} ({label}): engine impl coverage lost -- "
+                        f"missing {sorted(missing)}, have {sorted(have)}")
+                bad = [e.get("impl", "?") + "/" + e.get("shape", "?")
+                       for e in rows
+                       if not e.get("ttft_mean_s")
+                       or not e.get("tokens_per_s")
+                       or not e.get("peak_prefill_bytes")]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): engine rows without positive "
+                        f"ttft_mean_s/tokens_per_s/peak_prefill_bytes: "
+                        f"{bad}")
     return problems
 
 

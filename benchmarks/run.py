@@ -1,15 +1,16 @@
 """Benchmark entry point: one function per paper table/figure, plus the
 schema-stable perf-trajectory files.
 
-Every run aggregates the attention and kernel benches into
-``BENCH_attention.json`` / ``BENCH_kernels.json`` at the repo root (schema:
+Every run aggregates the attention, kernel, and serving-engine benches into
+``BENCH_attention.json`` / ``BENCH_kernels.json`` / ``BENCH_serve.json`` at
+the repo root (schema:
 ``{"schema": 1, "timestamp": <--timestamp or null>, "entries": [...]}`` with
 entries carrying shape / impl / fmt / ms_per_step / hbm_bytes), so future
 PRs can diff the trajectory instead of re-deriving it from logs.  Pass the
 timestamp in via ``--timestamp`` (never sampled in-process) so identical
 code produces byte-identical files.
 
-``--smoke`` runs only those two benches on tiny shapes with the Pallas
+``--smoke`` runs only those benches on tiny shapes with the Pallas
 kernels executed (interpret mode off TPU) -- the CI step that exercises the
 kernel bodies on every push; ``--quick`` shrinks the paper-figure sweep.
 """
@@ -43,7 +44,7 @@ def run_smoke(args) -> None:
     Smoke entries are NOT the perf trajectory: without an explicit
     --out-dir they land in results/bench_smoke/, never clobbering the
     committed full-shape BENCH_*.json at the repo root."""
-    from benchmarks import bench_attention, bench_kernels
+    from benchmarks import bench_attention, bench_kernels, bench_serve
 
     from repro.kernels import dispatch
 
@@ -51,8 +52,10 @@ def run_smoke(args) -> None:
     attn = bench_attention.collect(2, 256, 2, 2, 32, time_interpret=True)
     kern = bench_kernels.collect(256, 128, use_pallas=True,
                                  gemv_d=128, gemv_ff=256)
+    serve = bench_serve.collect(smoke=True)
     write_bench_json("attention", attn, args.timestamp, out_dir)
     write_bench_json("kernels", kern, args.timestamp, out_dir)
+    write_bench_json("serve", serve, args.timestamp, out_dir)
     # hard fail unless EVERY legal registry spelling ran: the smoke is the
     # one place the full decode_impl/matmul_impl surface executes outside
     # pytest, so a spelling missing here means a backend landed without
@@ -67,6 +70,10 @@ def run_smoke(args) -> None:
     assert not executed, (
         f"smoke entries without an executed timing: "
         f"{[(e['impl'], e['fmt']) for e in executed]}")
+    # the engine bench must keep the paged + wrapped-paged serve paths in
+    # the trajectory (the transient-prefill-memory win lives here)
+    serve_impls = {e["impl"] for e in serve}
+    assert {"paged", "flash_shmap+paged"} <= serve_impls, serve_impls
     print("[bench] smoke ok")
 
 
@@ -97,7 +104,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_attention, bench_fig4, bench_fig5,
                             bench_fig6, bench_fig7, bench_kernels, bench_llm,
-                            bench_table1, paper_results)
+                            bench_serve, bench_table1, paper_results)
 
     cache = paper_results.compute(quick=args.quick)
 
@@ -111,9 +118,11 @@ def main(argv=None) -> None:
         use_pallas=args.time_interpret or jax_on_tpu())
     attn_entries = bench_attention.collect(
         time_interpret=args.time_interpret)
+    serve_entries = bench_serve.collect()
     out_dir = args.out_dir or ROOT
     write_bench_json("attention", attn_entries, args.timestamp, out_dir)
     write_bench_json("kernels", kern_entries, args.timestamp, out_dir)
+    write_bench_json("serve", serve_entries, args.timestamp, out_dir)
 
     print("\n== CSV ==")
     print("name,us_per_call,derived")
@@ -125,6 +134,8 @@ def main(argv=None) -> None:
     for name, us, derived in bench_kernels.report(entries=kern_entries):
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_attention.report(entries=attn_entries):
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in bench_serve.report(entries=serve_entries):
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_llm.report():
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,30 @@
+"""Disaggregated serving engine: scheduler / prefill workers /
+page-streaming transport, split out of the old monolithic
+``launch/serve.py``.
+
+Layers (each separately testable):
+
+* :mod:`repro.engine.scheduler` -- continuous batching over the shared
+  :class:`~repro.kernels.paged_cache.PagePool`: admission, chunked prefill
+  interleaved with decode, growth, LIFO eviction.
+* :mod:`repro.engine.worker` -- the jitted prefill (page-granular chunked
+  or whole-prompt) and decode steps.
+* :mod:`repro.engine.transport` -- how finished packed-KV pages reach the
+  decode pool: zero-copy colocated, or streamed page-by-page between
+  devices (disaggregated prefill).
+* :mod:`repro.engine.stats` -- per-step JSONL observability (queue depth,
+  pool occupancy, TTFT, tokens/s, peak transient prefill bytes).
+* :mod:`repro.engine.reference` -- the synchronous single-request oracle
+  the engine's greedy tokens are pinned against.
+"""
+from .reference import synchronous_generate
+from .scheduler import Engine, Request
+from .stats import EngineStats
+from .transport import ColocatedTransport, StreamedTransport
+from .worker import DecodeWorker, PrefillTask, PrefillWorker
+
+__all__ = [
+    "ColocatedTransport", "DecodeWorker", "Engine", "EngineStats",
+    "PrefillTask", "PrefillWorker", "Request", "StreamedTransport",
+    "synchronous_generate",
+]

@@ -1,0 +1,43 @@
+"""Synchronous single-request reference loop: the engine's oracle.
+
+No scheduler, no page pool, no chunking: each prompt is prefilled whole
+into a contiguous KV cache and decoded greedily one request at a time.
+Under binary32 the engine's greedy tokens (chunked page-granular prefill +
+interleaved scheduling + any registry decode spelling) must match this
+loop token-for-token -- that is the determinism contract
+``tests/test_system.py`` pins.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def synchronous_generate(model, cfg, policy, params, prompts, *,
+                         max_new: int, capacity: int) -> List[List[int]]:
+    """Greedy-decode each prompt independently; returns the generated
+    token lists (first token included, like ``Request.generated``)."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, policy, capacity))
+    decode = jax.jit(lambda p, t, s: model.decode_step(p, t, s, policy))
+    outs: List[List[int]] = []
+    for prompt in prompts:
+        batch = {"tokens": jnp.asarray([list(prompt)], jnp.int32)}
+        if cfg.prefix_len:
+            batch["prefix_embeds"] = jnp.zeros(
+                (1, cfg.prefix_len, cfg.d_model), jnp.float32)
+        if cfg.encoder_layers:
+            batch["encoder_embeds"] = jnp.zeros(
+                (1, cfg.encoder_len, cfg.d_model), jnp.float32)
+        logits, states = prefill(params, batch)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        # mirror the engine's completion rule: the first token comes from
+        # prefill and counts toward max_new, then one decode step per
+        # further token
+        while len(toks) < max_new:
+            t = jnp.asarray([[toks[-1]]], jnp.int32)
+            logits, states = decode(params, t, states)
+            toks.append(int(jnp.argmax(logits[0, -1, :])))
+        outs.append(toks)
+    return outs

@@ -1,0 +1,303 @@
+"""Continuous-batching scheduler: admission, chunked prefill interleaved
+with decode, growth, and LIFO eviction over one shared page pool.
+
+The engine unifies the two serving loops the old ``launch/serve.py``
+carried (contiguous fixed-capacity vs. paged): every sequence now lives in
+a block-table page pool, and contiguous attention backends read it through
+the gather bridge in ``models/attention.py`` -- so any registry spelling
+serves through one code path.
+
+Each engine step does, in order:
+
+1. **Admission** -- when no prompt is in flight and a slot is free, pop
+   the queue head if ``PagePool.can_admit`` says its KV (plus one decode
+   token) fits, and reserve its pages up front.
+2. **One prefill chunk** -- the in-flight prompt advances by one chunk
+   (default: one page of tokens) via :class:`~repro.engine.worker.
+   PrefillWorker`; finished pages move through the
+   :mod:`~repro.engine.transport` into the decode pool.  Because only a
+   chunk runs per step, a long prompt never stalls the decode batch below.
+3. **Growth / eviction** -- every decoding slot needs a mapped page for
+   its next token; when the pool runs dry the most recently admitted
+   sequence (decoding *or* mid-prefill) is evicted back to the queue head
+   and its pages reused immediately (LIFO: the oldest admitted sequence
+   always finishes, so the loop makes progress).
+4. **One batched decode step** -- the mid-prefill slot's block-table row
+   is masked to -1 on the device, so its in-progress KV is invisible:
+   ``append_decode`` drops the write and its length does not advance; the
+   garbage logits for that row are discarded host-side.
+
+Per-step observability flows through :class:`~repro.engine.stats.
+EngineStats` (queue depth, pool occupancy / fragmentation, TTFT, decode
+tokens/s) as JSON lines.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import paged_cache
+
+from .stats import EngineStats
+from .transport import ColocatedTransport
+from .worker import DecodeWorker, PrefillTask, PrefillWorker
+
+
+class Request:
+    def __init__(self, rid: int, prompt: List[int], max_new: int):
+        self.rid = rid
+        self.prompt = prompt
+        self.max_new = max_new
+        self.generated: List[int] = []
+        self.done = False
+        self.evictions = 0
+
+    def reset(self):
+        """Requeued after eviction: generation restarts from the prompt."""
+        self.generated = []
+        self.evictions += 1
+
+
+def _insert_slot(all_states, one_states, slot: int, n_slots: int):
+    """Write a 1-sequence state pytree into row ``slot`` of the batched
+    state (arrays without a leading slots axis are taken wholesale)."""
+    return jax.tree.map(
+        lambda all_s, one: all_s.at[slot:slot + 1].set(one)
+        if hasattr(all_s, "at") and all_s.ndim and
+        all_s.shape[0] == n_slots else one,
+        all_states, one_states)
+
+
+class Engine:
+    """Paged continuous-batching engine over a fixed number of slots.
+
+    prefill_chunk: tokens prefilled per engine step.  ``None`` defaults to
+    one page (the transient staging buffer is then one page per attention
+    layer); ``0`` forces whole-prompt prefill (the old serve.py behavior,
+    and the only mode for prefix-LM archs).
+    """
+
+    def __init__(self, model, cfg, policy, params, *, slots: int,
+                 capacity: int,
+                 page_size: int = paged_cache.DEFAULT_PAGE_SIZE,
+                 pool_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 transport=None, stats: Optional[EngineStats] = None):
+        self.model, self.cfg, self.policy = model, cfg, policy
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        if cfg.encoder_layers:
+            raise ValueError(
+                f"arch {cfg.arch}: the serving engine is decoder-only "
+                f"(enc-dec decode needs per-step encoder context)")
+        self.attn_layers = [li for li, k in enumerate(cfg.attn_pattern)
+                            if k == "attn"]
+        if (self.attn_layers and cfg.window is not None
+                and capacity > cfg.window):
+            raise ValueError(
+                f"arch {cfg.arch}: --capacity {capacity} exceeds the "
+                f"sliding window {cfg.window}; the paged engine keeps every "
+                f"cached token, which matches windowed attention only while "
+                f"capacity <= window -- lower --capacity")
+        page = paged_cache.validate_page_size(page_size)
+        self.page = page
+        self.pages_per_seq = -(-capacity // page)
+        if pool_pages is None:
+            self.num_pages = slots * self.pages_per_seq
+        elif pool_pages > 0:
+            self.num_pages = pool_pages
+        else:
+            raise ValueError(
+                f"--pool-pages must be positive, got {pool_pages}")
+        self.pool = paged_cache.PagePool(self.num_pages, page, slots,
+                                         self.pages_per_seq)
+        self.stats = stats if stats is not None else EngineStats()
+        self.device = jax.devices()[0]
+
+        states = model.init_state(slots, page, policy)
+        for li in self.attn_layers:
+            states[li] = paged_cache.init_paged_cache(
+                slots, self.num_pages, page, self.pages_per_seq, cfg.n_kv,
+                cfg.head_dim, policy.dtype("kv_cache"))
+        self.states = states
+
+        self.transport = transport if transport is not None \
+            else ColocatedTransport()
+        self.transport.setup(self)
+        chunk_tokens = page if prefill_chunk is None else prefill_chunk
+        self.prefill_worker = PrefillWorker(model, cfg, policy,
+                                            self.transport, self.stats,
+                                            chunk_tokens=chunk_tokens)
+        self.decode_worker = DecodeWorker(model, policy)
+        self.kv_bytes_per_token = (
+            len(self.attn_layers) * cfg.n_kv * cfg.head_dim * 2
+            * np.dtype(policy.dtype("kv_cache")).itemsize)
+        self.summary: Optional[dict] = None
+
+    # ------------------------------------------------------------------ utils
+    def _push_tables(self, mask_slot: Optional[int] = None) -> None:
+        """Mirror the host block tables onto the device; ``mask_slot``
+        hides a mid-prefill slot from the decode step (-1 rows drop
+        ``append_decode`` writes and keep its length frozen)."""
+        tables = self.pool.tables
+        if mask_slot is not None:
+            tables = tables.copy()
+            tables[mask_slot] = -1
+        for li in self.attn_layers:
+            self.states[li] = paged_cache.set_block_tables(self.states[li],
+                                                           tables)
+
+    def _init_pstates(self):
+        """B=1 recurrent-layer states for a fresh prompt (attn -> None:
+        attention KV goes straight into the page pool)."""
+        one = self.model.init_state(1, self.page, self.policy)
+        one = [None if k == "attn" else s
+               for k, s in zip(self.cfg.attn_pattern, one)]
+        return self.transport.to_prefill(one)
+
+    # -------------------------------------------------------------------- run
+    def run(self, reqs: List[Request]) -> List[Request]:
+        n = self.slots
+        for r in reqs:
+            worst = self.pool.pages_for(len(r.prompt) + r.max_new)
+            if worst > self.pages_per_seq or worst > self.num_pages:
+                raise ValueError(
+                    f"a single request needs {worst} pages (prompt "
+                    f"{len(r.prompt)} + max-new {r.max_new}, page size "
+                    f"{self.page}) but the pool offers "
+                    f"min({self.pages_per_seq} per-seq, {self.num_pages} "
+                    f"total); raise --capacity/--pool-pages")
+
+        queue = list(reqs)
+        slots: List[Optional[Request]] = [None] * n
+        admitted_at = [0] * n  # admission counter per slot (LIFO eviction:
+        admissions = 0         # newest goes first)
+        task: Optional[PrefillTask] = None
+        tokens = jnp.zeros((n, 1), jnp.int32)
+        completed = 0
+        decode_steps = 0
+        engine_step = 0
+
+        def evict(si: int) -> None:
+            nonlocal task
+            r = slots[si]
+            r.reset()
+            queue.insert(0, r)
+            self.pool.free_slot(si)
+            for li in self.attn_layers:
+                self.states[li] = paged_cache.release_slot(self.states[li],
+                                                           si)
+            if task is not None and task.slot == si:
+                self.transport.abort(self, task)
+                task = None
+            slots[si] = None
+            self.stats.note_eviction()
+
+        def newest_active() -> Optional[int]:
+            active = [si for si in range(n) if slots[si] is not None]
+            return max(active, key=lambda si: admitted_at[si]) \
+                if active else None
+
+        def finish_slot(si: int) -> None:
+            nonlocal completed
+            slots[si].done = True
+            completed += 1
+            self.pool.free_slot(si)
+            for li in self.attn_layers:
+                self.states[li] = paged_cache.release_slot(self.states[li],
+                                                           si)
+            slots[si] = None
+
+        while completed < len(reqs):
+            new_tokens = 0
+            # ---- admission: at most one prompt in flight ------------------
+            if task is None and queue:
+                si = next((i for i in range(n) if slots[i] is None), None)
+                need = len(queue[0].prompt)
+                if si is not None and self.pool.can_admit(need + 1):
+                    r = queue.pop(0)
+                    ok = self.pool.allocate(si, need)
+                    assert ok, (si, need)  # can_admit held above
+                    slots[si] = r
+                    admissions += 1
+                    admitted_at[si] = admissions
+                    self.stats.note_admitted(r.rid)
+                    task = PrefillTask(r, si, need)
+                    task.pstates = self._init_pstates()
+                    self.transport.begin(self, task)
+            # ---- one prefill chunk (decode below still runs) --------------
+            ran_chunk = False
+            if task is not None:
+                ran_chunk = True
+                self._push_tables()
+                view, vslot = self.transport.prefill_view(self, task)
+                view = self.prefill_worker.step(task, view, vslot)
+                self.transport.absorb(self, task, view)
+                if task.done:
+                    self.transport.finish(self, task)
+                    r, si = task.request, task.slot
+                    for li, kind in enumerate(self.cfg.attn_pattern):
+                        if kind != "attn":
+                            self.states[li] = _insert_slot(
+                                self.states[li],
+                                self.transport.to_decode(task.pstates[li]),
+                                si, n)
+                    nxt = int(jnp.argmax(task.logits[0, -1]))
+                    r.generated.append(nxt)
+                    self.stats.note_first_token(r.rid)
+                    self.stats.note_decode_tokens(1)
+                    new_tokens += 1
+                    tokens = tokens.at[si, 0].set(nxt)
+                    task = None
+            # ---- growth: every decoding slot needs a mapped page for its
+            # next token; evict LIFO when the pool runs dry ------------------
+            for si in range(n):
+                if slots[si] is None or (task is not None
+                                         and task.slot == si):
+                    continue
+                while slots[si] is not None and not self.pool.ensure_capacity(
+                        si, int(self.pool.lens[si]) + 1):
+                    victim = newest_active()
+                    evict(victim)
+                    if victim == si:
+                        break
+            # ---- one batched decode step over the page pool ---------------
+            decoding = [si for si in range(n)
+                        if slots[si] is not None
+                        and not (task is not None and task.slot == si)]
+            if decoding:
+                self._push_tables(
+                    mask_slot=task.slot if task is not None else None)
+                logits, self.states = self.decode_worker.step(
+                    self.params, tokens, self.states)
+                decode_steps += 1
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+                for si in decoding:
+                    r = slots[si]
+                    self.pool.note_decode_step(si)
+                    r.generated.append(int(nxt[si]))
+                    self.stats.note_decode_tokens(1)
+                    new_tokens += 1
+                    if len(r.generated) >= r.max_new:
+                        finish_slot(si)
+                tokens = nxt.astype(jnp.int32)[:, None]
+            elif not ran_chunk:
+                # pre-run feasibility makes this unreachable; guard anyway
+                raise RuntimeError(
+                    "engine stalled: queue non-empty but no slot admissible "
+                    "and no sequence decoding")
+            engine_step += 1
+            self.stats.step_record(
+                step=engine_step, queue_depth=len(queue),
+                prefilling=1 if ran_chunk else 0, decoding=len(decoding),
+                new_tokens=new_tokens, pool_stats=self.pool.stats())
+
+        self.decode_steps = decode_steps
+        self.summary = self.stats.summary(
+            kv_bytes_per_token=self.kv_bytes_per_token)
+        self.stats.close()
+        return reqs

@@ -1,0 +1,106 @@
+"""EngineStats: structured per-step observability for the serving engine.
+
+One dict per engine step -- queue depth, in-flight prefill, decode batch
+size, tokens emitted this step, and the ``PagePool.stats()`` snapshot
+(occupancy / internal fragmentation / peak pages) -- appended to
+``records`` and, when an output path is given, written as one JSON line
+per step (plus a final ``"kind": "summary"`` line) so the bench harness
+and external tooling consume the same stream the tests assert on.
+
+The summary carries the serving-level quality numbers the ROADMAP's
+disaggregation item asks for: time-to-first-token per request, decode
+tokens/s, eviction count, and the peak *transient* prefill staging size
+(in tokens and KV bytes) -- the quantity chunked page-granular prefill
+drives from O(prompt) down to O(page).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+
+class EngineStats:
+    def __init__(self, out_path: Optional[str] = None):
+        self.out_path = out_path
+        self.records: List[dict] = []
+        self.ttft_s: Dict[int, float] = {}      # rid -> s to first token
+        self._admitted_t: Dict[int, float] = {}
+        self.decode_tokens = 0
+        self.evictions = 0
+        # largest contiguous K/V staging buffer any prefill step built, in
+        # tokens (chunked prefill: one chunk; whole-prompt: the prompt)
+        self.peak_prefill_transient_tokens = 0
+        self._t0 = time.perf_counter()
+        self._fh = open(out_path, "w") if out_path else None
+
+    # -- event hooks (called by scheduler / workers) -------------------------
+    def note_admitted(self, rid) -> None:
+        # first admission only: a re-admission after eviction keeps the
+        # original clock, so TTFT stays end-to-end from the user's view
+        self._admitted_t.setdefault(rid, time.perf_counter())
+
+    def note_first_token(self, rid) -> None:
+        if rid not in self.ttft_s and rid in self._admitted_t:
+            self.ttft_s[rid] = time.perf_counter() - self._admitted_t[rid]
+
+    def note_prefill_transient(self, n_tokens: int) -> None:
+        self.peak_prefill_transient_tokens = max(
+            self.peak_prefill_transient_tokens, int(n_tokens))
+
+    def note_decode_tokens(self, n: int) -> None:
+        self.decode_tokens += int(n)
+
+    def note_eviction(self) -> None:
+        self.evictions += 1
+
+    # -- per-step record ------------------------------------------------------
+    def step_record(self, *, step: int, queue_depth: int, prefilling: int,
+                    decoding: int, new_tokens: int,
+                    pool_stats: dict) -> dict:
+        rec = {
+            "kind": "step",
+            "step": step,
+            "t_s": round(time.perf_counter() - self._t0, 6),
+            "queue_depth": queue_depth,
+            "prefilling": prefilling,
+            "decoding": decoding,
+            "new_tokens": new_tokens,
+        }
+        rec.update({f"pool_{k}": v for k, v in pool_stats.items()})
+        self.records.append(rec)
+        self._emit(rec)
+        return rec
+
+    # -- end of run -----------------------------------------------------------
+    def summary(self, *, kv_bytes_per_token: int = 0) -> dict:
+        dt = time.perf_counter() - self._t0
+        ttft = sorted(self.ttft_s.values())
+        s = {
+            "kind": "summary",
+            "requests": len(self.ttft_s),
+            "steps": len(self.records),
+            "elapsed_s": round(dt, 6),
+            "decode_tokens": self.decode_tokens,
+            "tokens_per_s": round(self.decode_tokens / dt, 3) if dt > 0
+            else 0.0,
+            "ttft_mean_s": round(sum(ttft) / len(ttft), 6) if ttft else None,
+            "ttft_max_s": round(ttft[-1], 6) if ttft else None,
+            "evictions": self.evictions,
+            "peak_prefill_transient_tokens":
+                self.peak_prefill_transient_tokens,
+            "peak_prefill_transient_bytes":
+                self.peak_prefill_transient_tokens * int(kv_bytes_per_token),
+        }
+        self._emit(s)
+        return s
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def _emit(self, rec: dict) -> None:
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
+            self._fh.flush()

@@ -1,0 +1,155 @@
+"""Page-handoff transport: how finished packed-KV pages reach the decode
+pool.
+
+Block tables are what make disaggregated prefill cheap: a prefill chunk
+lands as N fixed-size pages, so the handoff between a prefill worker and
+the decode workers is a set of page copies -- no contiguous staging buffer,
+no reshuffle.  Two transports implement the same contract:
+
+:class:`ColocatedTransport`
+    Prefill writes straight into the decode pool (zero-copy: the chunk's
+    ``write_chunk`` scatter IS the handoff).  The default, and the only
+    mode that composes with mesh-sharded wrapper spellings (the pool itself
+    is sharded there).
+
+:class:`StreamedTransport`
+    The disaggregated mode: the prefill worker owns a private single-slot
+    page pool (and its own copy of the params) on a *prefill device*, and
+    every finished page is copied into the decode pool's physical page the
+    moment the chunk cursor passes it -- peak in-flight handoff is one
+    ragged page per layer.  Multi-host is simulated locally with
+    ``--xla_force_host_platform_device_count`` (prefill on device 1, decode
+    on device 0); on one device the same code degenerates to page copies
+    within the pool, which keeps the transport path itself under test
+    everywhere.
+
+Scheduler-facing contract (driven once per prefill chunk):
+``begin`` -> [``prefill_view`` -> worker chunk -> ``absorb``]* ->
+``finish`` (or ``abort`` on mid-flight eviction).  ``absorb`` may stream
+completed pages eagerly; ``finish`` flushes the ragged tail and publishes
+the slot's device-side sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import paged_cache
+
+
+class ColocatedTransport:
+    """Zero-copy handoff: the prefill worker writes the decode pool."""
+
+    name = "colocated"
+
+    def setup(self, engine) -> None:
+        self.params = engine.params
+
+    def begin(self, engine, task) -> None:
+        pass
+
+    def to_prefill(self, tree):
+        return tree
+
+    def to_decode(self, tree):
+        return tree
+
+    def prefill_view(self, engine, task):
+        return engine.states, task.slot
+
+    def absorb(self, engine, task, view_states) -> None:
+        engine.states = view_states
+
+    def finish(self, engine, task) -> None:
+        pass  # write_chunk already set the device-side seq_lens
+
+    def abort(self, engine, task) -> None:
+        pass  # the scheduler releases the slot's pages + table row
+
+
+class StreamedTransport:
+    """Disaggregated handoff: private prefill pool, page-by-page copies.
+
+    device_index: which local device hosts the prefill worker (default:
+    device 1 when more than one device is present, else device 0).
+    """
+
+    name = "streamed"
+
+    def __init__(self, device_index=None):
+        self.device_index = device_index
+
+    def setup(self, engine) -> None:
+        devs = jax.devices()
+        if self.device_index is None:
+            self.device_index = 1 if len(devs) > 1 else 0
+        self.prefill_device = devs[self.device_index]
+        self._cross = self.prefill_device != engine.device
+        self.params = (jax.device_put(engine.params, self.prefill_device)
+                       if self._cross else engine.params)
+        cfg, policy = engine.cfg, engine.policy
+        # single-slot source pool, identity block table: logical page p of
+        # the in-flight prompt is physical page p -- sized for the longest
+        # admissible sequence, reused across requests (stale bytes are
+        # overwritten; lengths reset in begin())
+        self.src_states = [None] * len(cfg.attn_pattern)
+        ident = np.arange(engine.pages_per_seq, dtype=np.int32)[None, :]
+        for li in engine.attn_layers:
+            src = paged_cache.init_paged_cache(
+                1, engine.pages_per_seq, engine.page, engine.pages_per_seq,
+                cfg.n_kv, cfg.head_dim, policy.dtype("kv_cache"))
+            src = paged_cache.set_block_tables(src, ident)
+            self.src_states[li] = (jax.device_put(src, self.prefill_device)
+                                   if self._cross else src)
+
+    def begin(self, engine, task) -> None:
+        for li in engine.attn_layers:
+            self.src_states[li] = paged_cache.set_seq_len(
+                self.src_states[li], 0, 0)
+
+    def to_prefill(self, tree):
+        return jax.device_put(tree, self.prefill_device) if self._cross \
+            else tree
+
+    def to_decode(self, tree):
+        return jax.device_put(tree, None) if self._cross else tree
+
+    def prefill_view(self, engine, task):
+        return self.src_states, 0
+
+    def absorb(self, engine, task, view_states) -> None:
+        self.src_states = view_states
+        # stream every page the chunk cursor has fully passed
+        self._copy_pages(engine, task, task.streamed,
+                         task.offset // engine.page)
+
+    def finish(self, engine, task) -> None:
+        # flush the ragged final page, then publish the slot's length on
+        # the decode side (pages arrived by copy, not write_chunk)
+        self._copy_pages(engine, task, task.streamed,
+                         engine.pool.pages_for(task.n_tokens))
+        for li in engine.attn_layers:
+            engine.states[li] = paged_cache.set_seq_len(
+                engine.states[li], task.slot, task.n_tokens)
+
+    def abort(self, engine, task) -> None:
+        pass  # begin() resets the source lengths for the next task
+
+    def _copy_pages(self, engine, task, lo: int, hi: int) -> None:
+        if lo >= hi:
+            return
+        src_ids = jnp.arange(lo, hi, dtype=jnp.int32)
+        dst_ids = jnp.asarray(
+            engine.pool.tables[task.slot, lo:hi].copy(), jnp.int32)
+        for li in engine.attn_layers:
+            src = self.src_states[li]
+            kpg, vpg = src.k_pool[src_ids], src.v_pool[src_ids]
+            if self._cross:  # the actual device-to-device page transfer
+                kpg = jax.device_put(kpg, engine.device)
+                vpg = jax.device_put(vpg, engine.device)
+            dst = engine.states[li]
+            engine.states[li] = dst._replace(
+                k_pool=dst.k_pool.at[dst_ids].set(kpg),
+                v_pool=dst.v_pool.at[dst_ids].set(vpg))
+        task.streamed = hi

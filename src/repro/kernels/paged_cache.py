@@ -155,16 +155,21 @@ def append_decode(cache: PagedKVCache, k, v) -> PagedKVCache:
         seq_lens=jnp.where(mapped, pos + 1, pos))
 
 
-def write_prefill(cache: PagedKVCache, slot, k, v) -> PagedKVCache:
-    """Write a prefilled prompt (positions 0..S-1) into ``slot``'s pages.
+def write_chunk(cache: PagedKVCache, slot, k, v, offset) -> PagedKVCache:
+    """Scatter one prefill *chunk* (positions offset..offset+S-1) into
+    ``slot``'s mapped pages.
 
-    k / v: (S, n_kv, head_dim) -- one sequence, e.g. ``KVCache.k[0][:S]``
-    from the transient contiguous prefill cache.  Pages must already be
-    mapped by the host allocator; unmapped tails are dropped (and the
-    recorded length clamped to what was actually mapped).
+    k / v: (S, n_kv, head_dim) -- one sequence's chunk.  The chunk is free
+    to straddle page boundaries, cover less or more than one page, and end
+    ragged; token ``i`` lands at logical position ``offset + i`` exactly
+    where :func:`write_prefill` would have put it (the whole-prompt write
+    is the ``offset=0`` special case and delegates here).  Pages must
+    already be mapped by the host allocator; unmapped tails are dropped and
+    the recorded length clamped to ``offset + #mapped``, so chunked prefill
+    only ever stages O(chunk) transient tokens instead of O(prompt).
     """
     S = k.shape[0]
-    pos = jnp.arange(S)
+    pos = jnp.arange(S) + offset
     lp = jnp.clip(pos // cache.page_size, 0, cache.pages_per_seq - 1)
     phys = cache.block_tables[slot, lp]
     mapped = (phys >= 0) & (pos < cache.capacity)
@@ -176,7 +181,26 @@ def write_prefill(cache: PagedKVCache, slot, k, v) -> PagedKVCache:
                                k.astype(cache.k_pool.dtype)),
         v_pool=_scatter_tokens(cache.v_pool, phys, off,
                                v.astype(cache.v_pool.dtype)),
-        seq_lens=cache.seq_lens.at[slot].set(n_mapped))
+        seq_lens=cache.seq_lens.at[slot].set(offset + n_mapped))
+
+
+def write_prefill(cache: PagedKVCache, slot, k, v) -> PagedKVCache:
+    """Write a prefilled prompt (positions 0..S-1) into ``slot``'s pages.
+
+    k / v: (S, n_kv, head_dim) -- one sequence, e.g. ``KVCache.k[0][:S]``
+    from the transient contiguous prefill cache.  Pages must already be
+    mapped by the host allocator; unmapped tails are dropped (and the
+    recorded length clamped to what was actually mapped).
+    """
+    return write_chunk(cache, slot, k, v, 0)
+
+
+def set_seq_len(cache: PagedKVCache, slot, n) -> PagedKVCache:
+    """Host-declared length for ``slot``.  Page-streaming transports copy
+    finished pages into the pool wholesale (no :func:`write_chunk` on the
+    destination), so the device-side length is set explicitly at handoff."""
+    return cache._replace(
+        seq_lens=cache.seq_lens.at[slot].set(jnp.asarray(n, jnp.int32)))
 
 
 def release_slot(cache: PagedKVCache, slot: int) -> PagedKVCache:

@@ -1,0 +1,54 @@
+"""Shared argparse wiring for the backend-selection flags.
+
+``launch/serve.py`` and ``launch/dryrun.py`` both expose
+``--decode-impl`` / ``--matmul-impl`` (and the serving side adds
+``--page-size`` / ``--pool-pages``); the two copies drifted once already
+(dryrun validated lazily via ``validate_impl`` while serve used argparse
+``choices``, so the same typo failed with a different exception in each
+tool).  This module is the single home of that wiring: the legal spellings
+come straight from the registries (``dispatch.legal_impls()`` /
+``legal_matmul_impls()``), so a newly registered backend appears in every
+CLI's help text and validation by registration alone.
+"""
+from __future__ import annotations
+
+from repro.kernels import dispatch, paged_cache
+
+
+def add_backend_args(ap, *, include_pool: bool = True):
+    """Add the backend flags to ``ap`` (argparse validates via choices).
+
+    include_pool: also add the page-pool sizing flags (serving loops);
+    dry-run compiles cells against contiguous state stand-ins and skips
+    them.
+    """
+    ap.add_argument("--decode-impl", default=None,
+                    choices=list(dispatch.legal_impls()),
+                    help="attention backend (default: fused path on TPU, "
+                         "else model config; flash_pallas = fused packed-KV "
+                         "kernel, flash_shmap+flash_pallas = that kernel "
+                         "sequence-sharded over the mesh, paged = block-"
+                         "table page pool with continuous batching, "
+                         "ring+flash_pallas / ring+paged = KV shards "
+                         "rotated around the mesh ring via neighbor-only "
+                         "ppermute instead of the psum-style merge)")
+    ap.add_argument("--matmul-impl", default=None,
+                    choices=list(dispatch.legal_matmul_impls()),
+                    help="matmul backend (default: model config; "
+                         "qmm_pallas = pack the weights once at load into "
+                         "the (e, m) container store and stream them "
+                         "through the fused transprecision GEMV kernel -- "
+                         "the weight half of decode HBM bytes shrinks by "
+                         "the container ratio)")
+    if include_pool:
+        ap.add_argument("--page-size", type=int,
+                        default=paged_cache.DEFAULT_PAGE_SIZE,
+                        help="tokens per KV page (multiple of 8 so pages "
+                             "stay u32-word-aligned for every packed "
+                             "format)")
+        ap.add_argument("--pool-pages", type=int, default=None,
+                        help="physical pages in the shared pool (default: "
+                             "slots * ceil(capacity / page_size); smaller "
+                             "values exercise admission control and "
+                             "eviction)")
+    return ap

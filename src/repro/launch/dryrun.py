@@ -268,17 +268,10 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (e.g. moe_impl=shard_map)")
-    ap.add_argument("--decode-impl", default=None,
-                    help="attention backend override for every cell: any "
-                         "registry spelling from kernels/dispatch.py, e.g. "
-                         "flash_pallas, flash_shmap+flash_pallas, or "
-                         "ring+flash_pallas (validated; shorthand for "
-                         "--set decode_impl=...)")
-    ap.add_argument("--matmul-impl", default=None,
-                    help="matmul backend override for every cell: 'xla' or "
-                         "'qmm_pallas' (packed weight store + fused "
-                         "transprecision GEMV; validated; shorthand for "
-                         "--set matmul_impl=...)")
+    # shared backend flags (shorthand for --set decode_impl=... /
+    # --set matmul_impl=...; argparse choices validate the spelling)
+    from repro.launch.cli import add_backend_args
+    add_backend_args(ap, include_pool=False)
     ap.add_argument("--kv-fmt", default=None,
                     help="override kv_cache format (e.g. binary16alt)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
@@ -293,13 +286,9 @@ def main():
             pass
         overrides[k] = v
     if args.decode_impl is not None:
-        from repro.kernels.dispatch import validate_impl
-        overrides["decode_impl"] = validate_impl(args.decode_impl,
-                                                 what="--decode-impl")
+        overrides["decode_impl"] = args.decode_impl
     if args.matmul_impl is not None:
-        from repro.kernels.dispatch import validate_matmul_impl
-        overrides["matmul_impl"] = validate_matmul_impl(args.matmul_impl,
-                                                        what="--matmul-impl")
+        overrides["matmul_impl"] = args.matmul_impl
 
     archs = configs.ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]

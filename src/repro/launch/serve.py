@@ -1,280 +1,51 @@
-"""Batched serving driver: continuous batching over a request queue.
+"""Batched serving CLI: a thin front-end over :mod:`repro.engine`.
 
 ``python -m repro.launch.serve --arch llama3-8b --reduced --requests 16``
 
-Serving loop:
-  * fixed decode-batch slots; new requests are prefill'd individually and
-    their KV state inserted into a free slot (continuous batching);
+The serving loop itself lives in the engine package (scheduler / workers /
+transport -- see docs/engine.md); this module only parses flags, builds
+the model + policy, and prints the summary line.  Every request is served
+out of one block-table page pool:
+
   * KV caches stored in the policy's ``kv_cache`` format (binary8/e5m2 by
     default -- 4x smaller working set, the paper's trick on the serving
     bottleneck);
-  * ``--decode-impl flash_pallas`` additionally streams the packed payload
-    through the fused flash kernel (kernels/flash_attention.py), so the
-    bandwidth-bound decode step also *moves* 4x fewer bytes;
-    ``--decode-impl flash_shmap+flash_pallas`` shard_maps that kernel over
-    the cache's sequence axis for multi-chip serving, and
-    ``--decode-impl ring+flash_pallas`` (or ``ring+paged``) replaces the
-    psum-style partial merge with a neighbor-only ``ppermute`` rotation of
-    the KV shards -- peak per-device live KV is one shard (any registry
-    spelling from kernels/dispatch.py is accepted, and unknown ones fail
-    loudly);
-  * ``--decode-impl paged`` (or ``flash_shmap+paged``) switches the KV
-    storage itself to a block-table page pool (kernels/paged_cache.py):
-    pages are allocated as sequences grow and freed the moment they
-    finish, admission is gated on pool occupancy, and when the pool runs
-    dry mid-decode the most recently admitted sequence is evicted back to
-    the queue (its pages reused immediately) -- the vLLM memory model on
-    top of transprecision packed storage.  ``--page-size`` sets the page
-    granule, ``--pool-pages`` caps the pool (defaults to slots x
-    ceil(capacity / page_size), i.e. no memory pressure);
-  * when no ``--decode-impl`` is given and a TPU backend is present, serving
-    defaults to the fused path (``dispatch.default_serving_impl``);
-  * finished sequences free their slot (and, paged, their pages)
-    immediately.
+  * any registry spelling from kernels/dispatch.py is accepted: paged
+    backends read the pool natively, contiguous backends (``xla``,
+    ``flash_pallas``, the ``flash_shmap+``/``ring+`` wrappers) read it
+    through the gather bridge in models/attention.py -- one code path,
+    eleven spellings, unknown ones fail loudly at argparse time;
+  * prompts prefill in page-sized chunks interleaved with decode steps
+    (``--prefill-chunk``; 0 restores whole-prompt prefill), so a long
+    prompt never stalls the decode batch and the transient prefill
+    staging buffer is one page per layer instead of prompt-sized;
+  * ``--disaggregate`` moves prefill to a second device (simulate hosts
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``) and
+    streams finished KV pages into the decode pool page-by-page;
+  * admission is gated on pool occupancy; when the pool runs dry the most
+    recently admitted sequence is evicted back to the queue (LIFO) and its
+    pages reused immediately -- the vLLM memory model on top of
+    transprecision packed storage.  ``--page-size`` sets the granule,
+    ``--pool-pages`` caps the pool (default: no memory pressure);
+  * ``--stats-out`` streams per-step scheduler/pool stats as JSON lines.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.core.policy import get_policy
-from repro.kernels import dispatch, paged_cache
+from repro.engine import (ColocatedTransport, Engine, EngineStats, Request,
+                          StreamedTransport)
+from repro.kernels import dispatch
+from repro.launch.cli import add_backend_args
 from repro.models import qparams
 from repro.models.registry import build
 
-
-class Request:
-    def __init__(self, rid: int, prompt: List[int], max_new: int):
-        self.rid = rid
-        self.prompt = prompt
-        self.max_new = max_new
-        self.generated: List[int] = []
-        self.done = False
-        self.evictions = 0
-
-    def reset(self):
-        """Requeued after eviction: generation restarts from the prompt."""
-        self.generated = []
-        self.evictions += 1
-
-
-def _insert_slot(all_states, one_states, slot: int, n_slots: int):
-    """Write a 1-sequence state pytree into row ``slot`` of the batched
-    state (arrays without a leading slots axis are taken wholesale)."""
-    return jax.tree.map(
-        lambda all_s, one: all_s.at[slot:slot + 1].set(one)
-        if hasattr(all_s, "at") and all_s.ndim and
-        all_s.shape[0] == n_slots else one,
-        all_states, one_states)
-
-
-def _run_contiguous(args, model, cfg, policy, params, reqs, impl):
-    """The original fixed-capacity loop: per-slot contiguous KV caches."""
-    queue = list(reqs)
-    slots: List[Optional[Request]] = [None] * args.slots
-
-    states = model.init_state(args.slots, args.capacity, policy)
-    tokens = jnp.zeros((args.slots, 1), jnp.int32)
-
-    prefill_one = jax.jit(lambda p, b: model.prefill(p, b, policy,
-                                                     args.capacity))
-    decode = jax.jit(lambda p, t, s: model.decode_step(p, t, s, policy))
-
-    t0 = time.perf_counter()
-    steps = 0
-    completed = 0
-    while completed < len(reqs):
-        # fill free slots via prefill
-        for si in range(args.slots):
-            if slots[si] is None and queue:
-                r = queue.pop(0)
-                logits, one_states = prefill_one(params, _batch(cfg, r))
-                nxt = int(jnp.argmax(logits[0, -1]))
-                r.generated.append(nxt)
-                slots[si] = r
-                states = _insert_slot(states, one_states, si, args.slots)
-                tokens = tokens.at[si, 0].set(nxt)
-        if all(s is None for s in slots):
-            break
-        # one batched decode step for all active slots
-        logits, states = decode(params, tokens, states)
-        steps += 1
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-        for si, r in enumerate(slots):
-            if r is None:
-                continue
-            tok = int(nxt[si])
-            r.generated.append(tok)
-            if len(r.generated) >= r.max_new:
-                r.done = True
-                completed += 1
-                slots[si] = None
-        tokens = nxt.astype(jnp.int32)[:, None]
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.generated) for r in reqs)
-    print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
-          f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
-          f"(kv format: {policy.fmt('kv_cache').name}, "
-          f"decode: {impl or cfg.decode_impl}, "
-          f"matmul: {policy.matmul_impl or cfg.matmul_impl})")
-    return reqs
-
-
-def _batch(cfg, r: Request) -> dict:
-    batch = {"tokens": jnp.asarray([r.prompt], jnp.int32)}
-    if cfg.prefix_len:
-        batch["prefix_embeds"] = jnp.zeros(
-            (1, cfg.prefix_len, cfg.d_model), jnp.float32)
-    if cfg.encoder_layers:
-        batch["encoder_embeds"] = jnp.zeros(
-            (1, cfg.encoder_len, cfg.d_model), jnp.float32)
-    return batch
-
-
-def _run_paged(args, model, cfg, policy, params, reqs, impl):
-    """Continuous batching over a shared block-table page pool.
-
-    Admission, growth and eviction are host-side decisions against
-    ``PagePool`` occupancy; the device sees only (pools, block_tables,
-    seq_lens) flowing through one jitted decode step per iteration.
-    """
-    if any(k == "attn" for k in cfg.attn_pattern) and cfg.window is not None:
-        raise ValueError(
-            f"arch {cfg.arch}: paged serving does not support sliding-window "
-            f"ring buffers; use a contiguous --decode-impl")
-    page = paged_cache.validate_page_size(args.page_size)
-    pages_per_seq = -(-args.capacity // page)
-    if args.pool_pages is None:
-        num_pages = args.slots * pages_per_seq
-    elif args.pool_pages > 0:
-        num_pages = args.pool_pages
-    else:
-        raise ValueError(f"--pool-pages must be positive, got "
-                         f"{args.pool_pages}")
-    pool = paged_cache.PagePool(num_pages, page, args.slots, pages_per_seq)
-    worst = pool.pages_for(args.prompt_len + args.max_new)
-    if worst > pages_per_seq or worst > num_pages:
-        raise ValueError(
-            f"a single request needs {worst} pages "
-            f"(prompt {args.prompt_len} + max-new {args.max_new}, page size "
-            f"{page}) but the pool offers min({pages_per_seq} per-seq, "
-            f"{num_pages} total); raise --capacity/--pool-pages")
-
-    states = model.init_state(args.slots, page, policy)
-    attn_layers = [li for li, k in enumerate(cfg.attn_pattern) if k == "attn"]
-    for li in attn_layers:
-        states[li] = paged_cache.init_paged_cache(
-            args.slots, num_pages, page, pages_per_seq, cfg.n_kv,
-            cfg.head_dim, policy.dtype("kv_cache"))
-    tokens = jnp.zeros((args.slots, 1), jnp.int32)
-
-    # capacity=None: the transient contiguous prefill cache is prompt-sized,
-    # immediately rewritten into pages (prefill-to-pages)
-    prefill_one = jax.jit(lambda p, b: model.prefill(p, b, policy, None))
-    decode = jax.jit(lambda p, t, s: model.decode_step(p, t, s, policy))
-
-    queue = list(reqs)
-    slots: List[Optional[Request]] = [None] * args.slots
-    admitted_at = [0] * args.slots  # admission counter per slot (for LIFO
-    admissions = 0                  # eviction: newest goes first)
-    evictions = 0
-
-    def evict(si: int):
-        nonlocal evictions
-        r = slots[si]
-        r.reset()
-        queue.insert(0, r)
-        pool.free_slot(si)
-        for li in attn_layers:
-            states[li] = paged_cache.release_slot(states[li], si)
-        slots[si] = None
-        evictions += 1
-
-    def newest_active() -> Optional[int]:
-        active = [si for si in range(args.slots) if slots[si] is not None]
-        return max(active, key=lambda si: admitted_at[si]) if active else None
-
-    t0 = time.perf_counter()
-    steps = 0
-    completed = 0
-    while completed < len(reqs):
-        # ---- admission: prefill into free slots while pages remain --------
-        for si in range(args.slots):
-            if slots[si] is None and queue and pool.can_admit(
-                    len(queue[0].prompt) + 1):
-                r = queue.pop(0)
-                ok = pool.allocate(si, len(r.prompt))
-                assert ok, (si, len(r.prompt))  # can_admit held above
-                logits, one_states = prefill_one(params, _batch(cfg, r))
-                nxt = int(jnp.argmax(logits[0, -1]))
-                r.generated.append(nxt)
-                for li, kind in enumerate(cfg.attn_pattern):
-                    if kind == "attn":
-                        states[li] = paged_cache.set_block_tables(
-                            states[li], pool.tables)
-                        states[li] = paged_cache.write_prefill(
-                            states[li], si, one_states[li].k[0],
-                            one_states[li].v[0])
-                    else:
-                        states[li] = _insert_slot(states[li], one_states[li],
-                                                  si, args.slots)
-                slots[si] = r
-                admissions += 1
-                admitted_at[si] = admissions
-                tokens = tokens.at[si, 0].set(nxt)
-        if all(s is None for s in slots):
-            break
-        # ---- growth: every active slot needs a mapped page for the next
-        # token; when the pool is dry, evict the newest sequence (LIFO --
-        # the oldest admitted sequence always finishes, so the loop makes
-        # progress) and requeue it
-        for si in range(args.slots):
-            while slots[si] is not None and not pool.ensure_capacity(
-                    si, int(pool.lens[si]) + 1):
-                victim = newest_active()
-                evict(victim)
-                if victim == si:
-                    break
-        if all(s is None for s in slots):
-            continue
-        for li in attn_layers:
-            states[li] = paged_cache.set_block_tables(states[li],
-                                                      pool.tables)
-        # ---- one batched decode step over the page pool -------------------
-        logits, states = decode(params, tokens, states)
-        steps += 1
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-        for si, r in enumerate(slots):
-            if r is None:
-                continue
-            pool.note_decode_step(si)
-            tok = int(nxt[si])
-            r.generated.append(tok)
-            if len(r.generated) >= r.max_new:
-                r.done = True
-                completed += 1
-                pool.free_slot(si)
-                for li in attn_layers:
-                    states[li] = paged_cache.release_slot(states[li], si)
-                slots[si] = None
-        tokens = nxt.astype(jnp.int32)[:, None]
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.generated) for r in reqs)
-    st = pool.stats()
-    print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
-          f"{steps} batched steps, {total_tokens/dt:.1f} tok/s "
-          f"(kv format: {policy.fmt('kv_cache').name}, decode: {impl}, "
-          f"matmul: {policy.matmul_impl or cfg.matmul_impl}, "
-          f"page_size: {page}, pool: {st['peak_pages_used']}/"
-          f"{st['num_pages']} pages peak, frag: "
-          f"{st['internal_fragmentation']}, evictions: {evictions})")
-    return reqs
+__all__ = ["Request", "main"]
 
 
 def main(argv=None):
@@ -287,33 +58,18 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
     ap.add_argument("--policy", default="transprecision")
-    ap.add_argument("--decode-impl", default=None,
-                    choices=list(dispatch.legal_impls()),
-                    help="attention backend (default: fused path on TPU, "
-                         "else model config; flash_pallas = fused packed-KV "
-                         "kernel, flash_shmap+flash_pallas = that kernel "
-                         "sequence-sharded over the mesh, paged = block-"
-                         "table page pool with continuous batching, "
-                         "ring+flash_pallas / ring+paged = KV shards "
-                         "rotated around the mesh ring via neighbor-only "
-                         "ppermute instead of the psum-style merge)")
-    ap.add_argument("--page-size", type=int,
-                    default=paged_cache.DEFAULT_PAGE_SIZE,
-                    help="tokens per KV page (paged backends; multiple of "
-                         "8 so pages stay u32-word-aligned for every "
-                         "packed format)")
-    ap.add_argument("--pool-pages", type=int, default=None,
-                    help="physical pages in the shared pool (default: "
-                         "slots * ceil(capacity / page_size); smaller "
-                         "values exercise admission control and eviction)")
-    ap.add_argument("--matmul-impl", default=None,
-                    choices=list(dispatch.legal_matmul_impls()),
-                    help="matmul backend (default: model config; "
-                         "qmm_pallas = pack the weights once at load into "
-                         "the (e, m) container store and stream them "
-                         "through the fused transprecision GEMV kernel -- "
-                         "the weight half of decode HBM bytes shrinks by "
-                         "the container ratio)")
+    add_backend_args(ap, include_pool=True)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens prefilled per engine step (default: one "
+                         "page; 0 = whole-prompt prefill, the old "
+                         "monolithic behavior)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="run prefill on a second device and stream "
+                         "finished KV pages into the decode pool "
+                         "(simulate hosts with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=2)")
+    ap.add_argument("--stats-out", default=None,
+                    help="write per-step engine stats as JSON lines here")
     args = ap.parse_args(argv)
 
     # the policy-level override wins inside attention.decode_impl(), so no
@@ -323,6 +79,14 @@ def main(argv=None):
     policy = get_policy(args.policy, decode_impl=impl,
                         matmul_impl=args.matmul_impl)
     model, cfg = build(args.arch, reduced=args.reduced)
+    effective_impl = impl or cfg.decode_impl
+    if args.disaggregate and len(dispatch.canonicalize_impl(
+            effective_impl)) > 1:
+        raise ValueError(
+            f"--disaggregate streams pages between single-device pools; "
+            f"mesh-sharded spelling {effective_impl!r} keeps the pool "
+            f"sharded across the mesh -- use a base spelling "
+            f"(xla / flash_pallas / paged)")
     params = model.init_params(jax.random.PRNGKey(0), policy)
     if (args.matmul_impl or cfg.matmul_impl) == "qmm_pallas":
         # the packed parameter store is built ONCE at load time; every
@@ -337,10 +101,34 @@ def main(argv=None):
                     args.max_new)
             for i in range(args.requests)]
 
-    paged = (impl is not None
-             and dispatch.canonicalize_impl(impl)[-1] == "paged")
-    runner = _run_paged if paged else _run_contiguous
-    return runner(args, model, cfg, policy, params, reqs, impl)
+    transport = StreamedTransport() if args.disaggregate \
+        else ColocatedTransport()
+    engine = Engine(model, cfg, policy, params,
+                    slots=args.slots, capacity=args.capacity,
+                    page_size=args.page_size, pool_pages=args.pool_pages,
+                    prefill_chunk=args.prefill_chunk, transport=transport,
+                    stats=EngineStats(args.stats_out))
+    engine.run(reqs)
+
+    s = engine.summary
+    st = engine.pool.stats()
+    total_tokens = sum(len(r.generated) for r in reqs)
+    dt = max(s["elapsed_s"], 1e-9)
+    print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
+          f"{engine.decode_steps} batched steps, "
+          f"{total_tokens/dt:.1f} tok/s "
+          f"(kv format: {policy.fmt('kv_cache').name}, "
+          f"decode: {effective_impl}, "
+          f"matmul: {policy.matmul_impl or cfg.matmul_impl}, "
+          f"page_size: {engine.page}, pool: {st['peak_pages_used']}/"
+          f"{st['num_pages']} pages peak, frag: "
+          f"{st['internal_fragmentation']}, "
+          f"evictions: {s['evictions']}, "
+          f"transport: {transport.name}, "
+          f"ttft mean: {s['ttft_mean_s']}s, "
+          f"peak prefill staging: {s['peak_prefill_transient_tokens']} "
+          f"tokens)")
+    return reqs
 
 
 if __name__ == "__main__":

@@ -407,19 +407,34 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
         # ---- decode over a paged (block-table) cache ----------------------
         if S != 1:
             raise ValueError("paged KV caches decode one token at a time; "
-                             "prefill lands via paged_cache.write_prefill")
-        if cfg.window is not None:
-            raise ValueError("paged KV caches do not support sliding-window "
-                             "ring buffers; use a contiguous KVCache")
-        if dispatch.canonicalize_impl(impl)[-1] != "paged":
+                             "prefill lands via paged_cache.write_chunk")
+        if cfg.window is not None and cache.capacity > cfg.window:
             raise ValueError(
-                f"decode_impl {impl!r} cannot read a PagedKVCache; use a "
-                f"'paged' base spelling ('paged' or 'flash_shmap+paged')")
+                f"paged KV cache capacity {cache.capacity} exceeds the "
+                f"sliding window {cfg.window}; size the pool so "
+                f"pages_per_seq * page_size <= window (every cached token "
+                f"then sits inside the window) or use a contiguous KVCache "
+                f"ring buffer")
         new_cache = paged_cache.append_decode(cache, k, v)
         fn = dispatch.resolve_decode(impl)
-        out = fn(qg[:, 0], new_cache.k_pool, new_cache.v_pool,
-                 new_cache.seq_lens, scale=scale, policy=policy,
-                 block_tables=new_cache.block_tables)
+        if dispatch.canonicalize_impl(impl)[-1] == "paged":
+            out = fn(qg[:, 0], new_cache.k_pool, new_cache.v_pool,
+                     new_cache.seq_lens, scale=scale, policy=policy,
+                     block_tables=new_cache.block_tables)
+        else:
+            # contiguous-impl bridge (the reverse of
+            # paged_view_of_contiguous): gather every slot's pages into the
+            # (B, pages_per_seq * page_size, H, dh) view and hand the
+            # per-slot lengths to the contiguous decode contract.  Unmapped
+            # pages alias physical page 0 in the gather; their positions sit
+            # at or beyond seq_lens, which every decode backend masks -- so
+            # ALL registry spellings serve one paged state.
+            ckg = paged_cache.gather_pages(new_cache.k_pool,
+                                           new_cache.block_tables)
+            cvg = paged_cache.gather_pages(new_cache.v_pool,
+                                           new_cache.block_tables)
+            out = fn(qg[:, 0], ckg, cvg, new_cache.seq_lens, scale=scale,
+                     policy=policy)
         out = act_cast(out, policy)[:, None]
     elif cache is not None:
         # ---- decode: append k/v then attend over the cache ----------------
@@ -574,5 +589,63 @@ def prefill_from_cache(p, x, cfg, policy, cache: KVCache, q_offset: int,
     # attending over the full capacity is exact
     out = fn(qg, kp, vp, scale=scale, policy=policy, window=cfg.window,
              prefix_len=prefix_len, chunk=chunk, q_offset=q_offset, fmt=fmt)
+    out = out.reshape(B, S, cfg.q_dim)
+    return pdot(out, p["wo"], policy, "attn_w"), new_cache
+
+
+def prefill_paged_chunk(p, x, cfg, policy, cache: PagedKVCache, slot: int,
+                        q_offset: int, chunk=None):
+    """One chunked-prefill step for ONE sequence, straight into its pages.
+
+    The page-granular sibling of :func:`prefill_from_cache`: compute this
+    chunk's K/V, scatter them into ``slot``'s mapped pages at positions
+    [q_offset, q_offset + S) (``paged_cache.write_chunk``), then attend the
+    chunk's queries causally over the slot's gathered pages through the
+    SAME registry prefill dispatch.  The only transient contiguous K/V
+    buffer is the chunk itself -- O(chunk) tokens per layer instead of the
+    O(prompt) staging cache a whole-prompt ``write_prefill`` needs.
+
+    x: (1, S, d) -- chunked prefill is per-sequence (continuous batching
+    admits one request at a time); ``slot``/``q_offset`` must be static
+    under jit (the XLA prefill path does Python arithmetic on the offset).
+    Positions at or beyond q_offset + S in the gathered view (stale page
+    tails, unmapped pages aliasing page 0) are causally masked, so
+    attending over the slot's full addressable capacity is exact.
+    Returns (out, new_cache with seq_lens[slot] = q_offset + S).
+    """
+    B, S, _ = x.shape
+    n_kv, dh = cfg.n_kv, cfg.head_dim
+    G = cfg.n_heads // n_kv
+    if B != 1:
+        raise ValueError("prefill_paged_chunk is per-sequence (B == 1)")
+    if cfg.window is not None and cache.capacity > cfg.window:
+        raise ValueError(
+            f"paged KV cache capacity {cache.capacity} exceeds the sliding "
+            f"window {cfg.window}; chunked paged prefill needs every cached "
+            f"token inside the window")
+    if q_offset + S > cache.capacity:
+        raise ValueError(f"chunk [{q_offset}, {q_offset + S}) exceeds the "
+                         f"slot capacity {cache.capacity}")
+
+    q = _split_heads(pdot(x, p["wq"], policy, "attn_w"), cfg.n_heads, dh)
+    k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), n_kv, dh)
+    v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), n_kv, dh)
+    positions = (jnp.arange(S)[None, :] + q_offset).astype(jnp.int32)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = paged_cache.write_chunk(cache, slot, k[0], v[0], q_offset)
+
+    scale = np.float32(1.0 / np.sqrt(dh))
+    qg = q.reshape(B, S, n_kv, G, dh)
+    impl = decode_impl(cfg, policy)
+    fn = dispatch.resolve_prefill(impl)
+    tbl = new_cache.block_tables[slot:slot + 1]
+    ck = paged_cache.gather_pages(new_cache.k_pool, tbl)
+    cv = paged_cache.gather_pages(new_cache.v_pool, tbl)
+    kp, vp, fmt = _cache_payload(ck, cv, policy)
+    out = fn(qg, kp, vp, scale=scale, policy=policy, window=cfg.window,
+             prefix_len=0, chunk=chunk, q_offset=q_offset, fmt=fmt)
     out = out.reshape(B, S, cfg.q_dim)
     return pdot(out, p["wo"], policy, "attn_w"), new_cache

@@ -275,6 +275,64 @@ class Model:
         logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
         return logits, states
 
+    def prefill_chunk(self, params, tokens, states, pstates,
+                      policy: PrecisionPolicy, *, slot: int, q_offset: int):
+        """One chunked-prefill step for ONE sequence (tokens: (1, C)).
+
+        Attention layers scatter the chunk's K/V page-by-page into ``slot``
+        of the shared :class:`~repro.kernels.paged_cache.PagedKVCache` in
+        ``states`` (``attn.prefill_paged_chunk``); recurrent layers (rwkv /
+        rglru) carry their own B=1 state through ``pstates`` -- their
+        chunked parallel forms already thread state across chunks.  Non-attn
+        entries of ``states`` pass through untouched; the scheduler merges
+        ``pstates`` into the batched state when the prompt completes.
+
+        ``slot`` / ``q_offset`` must be static under jit.  Returns
+        (last-position logits, new_states, new_pstates).
+        """
+        cfg = self.cfg
+        policy = self._policy(policy)
+        if cfg.prefix_len or cfg.encoder_layers:
+            raise ValueError(
+                "prefill_chunk is decoder-only; prefix-LM / enc-dec archs "
+                "prefill whole-prompt (Model.prefill)")
+        B, C = tokens.shape
+        x = embed_lookup(params["embed"], tokens, policy,
+                         scale=cfg.embed_scale)
+        chunk = cfg.attn_chunk if C > cfg.attn_chunk else None
+        new_states = list(states)
+        new_pstates = list(pstates)
+        for li, (kind, layer) in enumerate(zip(cfg.attn_pattern,
+                                               params["layers"])):
+            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+            if kind == "attn":
+                a, st = attn.prefill_paged_chunk(
+                    layer["mix"], h, cfg, policy, states[li], slot,
+                    q_offset, chunk=chunk)
+                new_states[li] = st
+            elif kind == "rwkv":
+                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, policy,
+                                          state=pstates[li])
+                new_pstates[li] = st
+            else:
+                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
+                                              state=pstates[li])
+                new_pstates[li] = st
+            x = x + a
+            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            if kind == "rwkv":
+                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
+                                             state=new_pstates[li])
+                new_pstates[li] = st
+            elif cfg.moe_experts:
+                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+            else:
+                f = ffn_apply(layer["ffn"], h, policy, cfg)
+            x = x + f
+        x = apply_norm(x, params["final_norm"], policy, cfg.norm)
+        logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
+        return logits, new_states, new_pstates
+
     def decode_step(self, params, tokens, states, policy: PrecisionPolicy,
                     enc_out=None, encoder_embeds=None):
         """tokens: (B, 1).  Returns (logits (B, 1, V), new states)."""

@@ -159,6 +159,66 @@ def test_append_decode_skips_unmapped_slots():
     np.testing.assert_array_equal(np.asarray(cache.seq_lens), [0, 0])
 
 
+@pytest.mark.parametrize("chunk", [5, 7, 8, 12])
+@pytest.mark.parametrize("fmt", PAPER_FORMATS, ids=lambda f: f.name)
+def test_write_chunk_bit_identical_to_write_prefill(fmt, chunk):
+    """Page-granular chunked prefill writes: scattering a 20-token prompt
+    in chunks of 5 (< page, straddles a page boundary mid-chunk), 7
+    (ragged final chunk), 8 (== page) and 12 (> page) must leave the pool
+    bytes and seq_lens bit-identical to the one-shot whole-prompt
+    write_prefill, for every paper format."""
+    rng = np.random.default_rng(0)
+    S, page, pages_per_seq, num_pages = 20, 8, 3, 7
+    H, dh = 2, 16
+    kf = jnp.asarray(rng.normal(size=(1, S, H, dh)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(1, S, H, dh)), jnp.float32)
+    k = jax.lax.bitcast_convert_type(encode(kf, fmt), fmt.native_dtype)[0]
+    v = jax.lax.bitcast_convert_type(encode(vf, fmt), fmt.native_dtype)[0]
+
+    pool = paged_cache.PagePool(num_pages, page, 1, pages_per_seq)
+    assert pool.allocate(0, S)
+    cache = paged_cache.init_paged_cache(1, num_pages, page, pages_per_seq,
+                                         H, dh, fmt.native_dtype)
+    cache = paged_cache.set_block_tables(cache, pool.tables)
+
+    whole = paged_cache.write_prefill(cache, 0, k, v)
+    chunked = cache
+    for off in range(0, S, chunk):
+        c = min(chunk, S - off)
+        chunked = paged_cache.write_chunk(chunked, 0, k[off:off + c],
+                                          v[off:off + c], off)
+
+    def bits(x):
+        n = np.dtype(x.dtype).itemsize * 8
+        return np.asarray(jax.lax.bitcast_convert_type(
+            x, getattr(jnp, f"uint{n}")))
+
+    np.testing.assert_array_equal(bits(chunked.k_pool), bits(whole.k_pool))
+    np.testing.assert_array_equal(bits(chunked.v_pool), bits(whole.v_pool))
+    np.testing.assert_array_equal(np.asarray(chunked.seq_lens),
+                                  np.asarray(whole.seq_lens))
+    assert int(chunked.seq_lens[0]) == S
+
+
+def test_write_chunk_respects_table_mask_and_capacity():
+    """Chunk positions past the slot's mapped pages (or past capacity) are
+    dropped and do not advance seq_lens -- the same drop-mode contract
+    append_decode obeys."""
+    page, pages_per_seq, num_pages = 8, 2, 4
+    pool = paged_cache.PagePool(num_pages, page, 1, pages_per_seq)
+    assert pool.allocate(0, 8)  # one mapped page only
+    cache = paged_cache.init_paged_cache(1, num_pages, page, pages_per_seq,
+                                         1, 8, jnp.float32)
+    cache = paged_cache.set_block_tables(cache, pool.tables)
+    k = jnp.ones((12, 1, 8), jnp.float32)
+    out = paged_cache.write_chunk(cache, 0, k, k, 0)
+    assert int(out.seq_lens[0]) == 8  # tokens 8..11 hit an unmapped page
+    # an explicit length override (streamed-transport handoff publishes
+    # the final length after page copies)
+    out = paged_cache.set_seq_len(out, 0, 5)
+    assert int(out.seq_lens[0]) == 5
+
+
 def test_validate_page_size():
     paged_cache.validate_page_size(8)
     paged_cache.validate_page_size(64)
@@ -297,16 +357,45 @@ def test_mha_paged_view_clamps_overflowing_token_count():
                                    err_msg=f"step {step}")
 
 
-def test_mha_paged_cache_rejects_contiguous_impl():
-    cfg = _cfg(decode_impl="xla")
+def test_mha_contiguous_impl_reads_paged_cache_via_gather_bridge():
+    """A contiguous spelling (xla) decoding over a PagedKVCache gathers the
+    pool through the block tables and must match the native paged path --
+    the bridge that lets every registry spelling serve out of one page
+    pool (the engine's unified code path)."""
     pol = binary32_policy()
-    p = att.attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
-    pcache = paged_cache.init_paged_cache(2, 4, 8, 2, cfg.n_kv,
-                                          cfg.head_dim, jnp.float32)
-    xt = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 64), jnp.float32)
-    with pytest.raises(ValueError) as ei:
-        att.mha(p, xt, cfg, pol, cache=pcache)
-    assert "paged" in str(ei.value)
+    cfg_x = _cfg(decode_impl="xla")
+    cfg_p = _cfg(decode_impl="paged")
+    p = att.attn_init(jax.random.PRNGKey(0), cfg_x, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64),
+                          jnp.float32) * 0.5
+    _, ccache = att.prefill_to_cache(p, x, cfg_x, pol, capacity=32)
+
+    page, pages_per_seq, num_pages = 8, 4, 12
+    pool = paged_cache.PagePool(num_pages, page, 2, pages_per_seq)
+    pcache = paged_cache.init_paged_cache(2, num_pages, page, pages_per_seq,
+                                          cfg_x.n_kv, cfg_x.head_dim,
+                                          pol.dtype("kv_cache"))
+    for s in range(2):
+        assert pool.allocate(s, 12)
+    pcache = paged_cache.set_block_tables(pcache, pool.tables)
+    for s in range(2):
+        pcache = paged_cache.write_prefill(pcache, s, ccache.k[s, :12],
+                                           ccache.v[s, :12])
+    pcache_x = pcache
+    for step in range(3):
+        xt = jax.random.normal(jax.random.PRNGKey(10 + step), (2, 1, 64),
+                               jnp.float32) * 0.5
+        for s in range(2):
+            assert pool.ensure_capacity(s, 13 + step)
+        pcache = paged_cache.set_block_tables(pcache, pool.tables)
+        pcache_x = paged_cache.set_block_tables(pcache_x, pool.tables)
+        o_p, pcache = att.mha(p, xt, cfg_p, pol, cache=pcache)
+        o_x, pcache_x = att.mha(p, xt, cfg_x, pol, cache=pcache_x)
+        np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_p),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"step {step}")
+        np.testing.assert_array_equal(np.asarray(pcache.seq_lens),
+                                      np.asarray(pcache_x.seq_lens))
 
 
 def test_decode_paged_requires_block_tables():

@@ -140,12 +140,15 @@ def test_serve_paged_end_to_end():
 
 def test_serve_paged_eviction_under_pool_pressure():
     """A pool too small for all slots forces LIFO eviction + requeue; every
-    request must still complete (the oldest sequence always finishes)."""
+    request must still complete (the oldest sequence always finishes).
+    (The engine admits prompts one at a time, which staggers growth, so
+    the pool here is one page tighter than the old monolithic loop needed
+    to hit pressure.)"""
     from repro.launch.serve import main
     reqs = main(["--arch", "llama3-8b", "--reduced", "--requests", "4",
                  "--slots", "3", "--max-new", "10", "--prompt-len", "8",
                  "--capacity", "32", "--decode-impl", "paged",
-                 "--page-size", "8", "--pool-pages", "5"])
+                 "--page-size", "8", "--pool-pages", "4"])
     assert all(r.done for r in reqs)
     assert all(len(r.generated) >= 10 for r in reqs)
     assert sum(r.evictions for r in reqs) > 0  # pressure actually applied
@@ -237,6 +240,67 @@ def test_serve_greedy_tokens_identical_across_wrappers_2dev_subprocess():
     page-pool axis genuinely sharded, ring rotation genuinely rotating)
     serve the same greedy tokens as the unsharded xla loop."""
     run_child(_SERVE_REGISTRY_2DEV, "SERVE_REGISTRY_2DEV_OK", timeout=540)
+
+
+_ENGINE_DETERMINISM_2DEV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, numpy as np
+from repro import compat
+from repro.core.policy import get_policy
+from repro.engine import (ColocatedTransport, Engine, Request,
+                          StreamedTransport, synchronous_generate)
+from repro.models.registry import build
+
+model, cfg = build("llama3-8b", reduced=True)
+pol0 = get_policy("binary32")
+params = model.init_params(jax.random.PRNGKey(0), pol0)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, min(cfg.vocab, 97), 8).tolist()
+           for _ in range(4)]
+want = synchronous_generate(model, cfg, pol0, params, prompts,
+                            max_new=4, capacity=32)
+
+def run(impl, transport, chunk, mesh=None):
+    pol = get_policy("binary32", decode_impl=impl)
+    cm = compat.use_mesh(mesh) if mesh is not None else None
+    if cm is not None:
+        cm.__enter__()
+    try:
+        eng = Engine(model, cfg, pol, params, slots=2, capacity=32,
+                     page_size=8, prefill_chunk=chunk, transport=transport)
+        reqs = [Request(i, list(p), 4) for i, p in enumerate(prompts)]
+        eng.run(reqs)
+    finally:
+        if cm is not None:
+            cm.__exit__(None, None, None)
+    assert all(r.done for r in reqs)
+    return [r.generated for r in reqs]
+
+# chunked prefill with a ragged chunk (3 does not divide the 8-token
+# prompt), interleaved with decode steps: greedy tokens must equal the
+# synchronous whole-prompt loop token-for-token
+assert run("paged", ColocatedTransport(), 3) == want
+# disaggregated: prefill runs on device 1, finished pages are streamed
+# into the decode pool on device 0
+assert run("paged", StreamedTransport(), 3) == want
+assert run("xla", StreamedTransport(), None) == want
+# wrapper spellings under a live 2-device mesh (sharded decode over the
+# pool the chunked prefill populated)
+mesh = compat.make_mesh((2,), ("model",))
+assert run("flash_shmap+paged", ColocatedTransport(), 3, mesh=mesh) == want
+assert run("ring+xla", ColocatedTransport(), None, mesh=mesh) == want
+print("ENGINE_DETERMINISM_2DEV_OK")
+"""
+
+
+def test_engine_deterministic_vs_synchronous_2dev_subprocess():
+    """The engine's whole pipeline -- chunked page-granular prefill,
+    interleaved scheduling, page-streaming transport, sharded wrappers --
+    is a pure refactor of generation order: under binary32 its greedy
+    tokens must match the synchronous single-request reference loop."""
+    run_child(_ENGINE_DETERMINISM_2DEV, "ENGINE_DETERMINISM_2DEV_OK",
+              timeout=540)
 
 
 def test_serve_qmm_pallas_greedy_tokens_match_xla():
