@@ -10,8 +10,26 @@ aggregates:
 * ``bench="engine_serve_whole"`` -- whole-prompt prefill (the old
   monolithic serve loop's memory behavior), kept in the trajectory so the
   O(page) vs O(prompt) transient-staging win stays a diffable number.
+* ``bench="engine_serve_spec"`` -- speculative decoding with the binary8
+  packed draft model sharing the page pool, on a repetitive-prompt
+  workload (a tiled 8-token motif -- the regime speculation targets):
+  rows carry ``accept_rate``, ``steps_per_token``, ``draft_fmt`` and
+  ``speculate_k`` so the steps-not-bytes win stays a diffable number too.
 """
 import numpy as np
+
+SPECULATE_K = 4
+
+
+def _repetitive_prompts(vocab, n, length, motif=8, seed=0):
+    """Prompts made of a tiled per-request motif: highly predictable
+    continuations, the workload speculative decoding is built for."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        m = rng.integers(0, min(vocab, 97), motif)
+        out.append(np.tile(m, -(-length // motif))[:length].tolist())
+    return out
 
 
 def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
@@ -21,6 +39,7 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
 
     from repro.core.policy import get_policy
     from repro.engine import Engine, Request
+    from repro.launch.serve import build_draft
     from repro.models.registry import build
 
     if smoke:
@@ -30,26 +49,29 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, min(cfg.vocab, 97), prompt_len).tolist()
                for _ in range(requests)]
+    rep_prompts = _repetitive_prompts(cfg.vocab, requests, prompt_len)
     shape = f"s{slots}_p{prompt_len}_n{max_new}_pg{page_size}"
 
     entries = []
     params = None
+    draft = build_draft(model, cfg, reduced=True, k=SPECULATE_K)
     for impl in impls:
         policy = get_policy(policy_name, decode_impl=impl)
         if params is None:  # same policy dtypes across decode impls
             params = model.init_params(jax.random.PRNGKey(0), policy)
-        modes = [("engine_serve", None)]
+        modes = [("engine_serve", None, prompts, None)]
         if impl == "paged":  # one whole-prompt row pins the O(prompt) cost
-            modes.append(("engine_serve_whole", 0))
-        for bench, chunk in modes:
+            modes.append(("engine_serve_whole", 0, prompts, None))
+        modes.append(("engine_serve_spec", None, rep_prompts, draft))
+        for bench, chunk, pset, spec in modes:
             eng = Engine(model, cfg, policy, params, slots=slots,
                          capacity=capacity, page_size=page_size,
-                         prefill_chunk=chunk)
+                         prefill_chunk=chunk, speculative=spec)
             reqs = [Request(i, list(p), max_new)
-                    for i, p in enumerate(prompts)]
+                    for i, p in enumerate(pset)]
             eng.run(reqs)
             s = eng.summary
-            entries.append({
+            row = {
                 "bench": bench,
                 "impl": impl,
                 "fmt": policy.fmt("kv_cache").name,
@@ -61,7 +83,15 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
                 "page_size": page_size,
                 "decode_tokens": s["decode_tokens"],
                 "evictions": s["evictions"],
-            })
+            }
+            if spec is not None:
+                row.update({
+                    "accept_rate": s["accept_rate"],
+                    "steps_per_token": s["steps_per_token"],
+                    "draft_fmt": spec.policy.fmt("attn_w").name,
+                    "speculate_k": spec.k,
+                })
+            entries.append(row)
     return entries
 
 
@@ -70,10 +100,14 @@ def report(entries=None) -> list:
     entries = entries if entries is not None else collect()
     out = []
     for e in entries:
+        derived = (f"tok_s={e['tokens_per_s']:.1f};"
+                   f"peak_prefill_bytes={e['peak_prefill_bytes']}")
+        if "accept_rate" in e:
+            derived += (f";accept_rate={e['accept_rate']}"
+                        f";steps_per_token={e['steps_per_token']}")
         out.append((
             f"{e['bench']}_{e['impl']}_{e['fmt']}_{e['shape']}",
             float(e["ttft_mean_s"] or 0.0) * 1e6,
-            f"tok_s={e['tokens_per_s']:.1f};"
-            f"peak_prefill_bytes={e['peak_prefill_bytes']}",
+            derived,
         ))
     return out

@@ -148,6 +148,29 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                         f"{name} ({label}): engine rows without positive "
                         f"ttft_mean_s/tokens_per_s/peak_prefill_bytes: "
                         f"{bad}")
+                # speculative rows are the steps-not-bytes half of the
+                # decode story: the accept-rate column (and a measured
+                # steps_per_token < 1 on the repetitive workload) must
+                # stay tracked, not silently drop out of the sweep
+                spec = [e for e in rows
+                        if e.get("bench") == "engine_serve_spec"]
+                if not spec:
+                    problems.append(
+                        f"{name} ({label}): speculative rows "
+                        f"(bench='engine_serve_spec') missing from the "
+                        f"sweep")
+                bad = [e.get("impl", "?") + "/" + e.get("shape", "?")
+                       for e in spec
+                       if not e.get("accept_rate")
+                       or not e.get("steps_per_token")
+                       or e.get("steps_per_token") >= 1.0
+                       or not e.get("draft_fmt")
+                       or not e.get("speculate_k")]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): speculative rows without a "
+                        f"positive accept_rate / steps_per_token < 1.0 / "
+                        f"draft_fmt / speculate_k: {bad}")
     return problems
 
 

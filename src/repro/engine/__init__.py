@@ -16,15 +16,19 @@ Layers (each separately testable):
   pool occupancy, TTFT, tokens/s, peak transient prefill bytes).
 * :mod:`repro.engine.reference` -- the synchronous single-request oracle
   the engine's greedy tokens are pinned against.
+* :mod:`repro.engine.speculative` -- the binary8 packed draft model that
+  proposes k tokens per step; the target verifies them in one batched
+  forward and greedy acceptance keeps tokens bit-identical.
 """
 from .reference import synchronous_generate
 from .scheduler import Engine, Request
+from .speculative import SpeculativeDecoder
 from .stats import EngineStats
 from .transport import ColocatedTransport, StreamedTransport
 from .worker import DecodeWorker, PrefillTask, PrefillWorker
 
 __all__ = [
     "ColocatedTransport", "DecodeWorker", "Engine", "EngineStats",
-    "PrefillTask", "PrefillWorker", "Request", "StreamedTransport",
-    "synchronous_generate",
+    "PrefillTask", "PrefillWorker", "Request", "SpeculativeDecoder",
+    "StreamedTransport", "synchronous_generate",
 ]

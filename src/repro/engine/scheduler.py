@@ -46,6 +46,20 @@ from .transport import ColocatedTransport
 from .worker import DecodeWorker, PrefillTask, PrefillWorker
 
 
+def _host(tree):
+    """The engine loop's single device->host synchronization point.
+
+    Everything the host needs from a step -- the argmax'd next-token ids,
+    or a speculation round's (targets, emit counts, accept counts) --
+    crosses in ONE explicit ``jax.device_get`` per step, instead of one
+    implicit transfer per sequence (the old ``int(nxt[si])`` loop pulled
+    the whole logits row once per slot).  Tests monkeypatch this to count
+    transfers and run the loop under
+    ``jax.transfer_guard_device_to_host("disallow")`` to prove no implicit
+    transfer remains."""
+    return jax.device_get(tree)
+
+
 class Request:
     def __init__(self, rid: int, prompt: List[int], max_new: int):
         self.rid = rid
@@ -85,7 +99,8 @@ class Engine:
                  page_size: int = paged_cache.DEFAULT_PAGE_SIZE,
                  pool_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 transport=None, stats: Optional[EngineStats] = None):
+                 transport=None, stats: Optional[EngineStats] = None,
+                 speculative=None):
         self.model, self.cfg, self.policy = model, cfg, policy
         self.params = params
         self.slots = slots
@@ -136,6 +151,9 @@ class Engine:
         self.kv_bytes_per_token = (
             len(self.attn_layers) * cfg.n_kv * cfg.head_dim * 2
             * np.dtype(policy.dtype("kv_cache")).itemsize)
+        self.spec = speculative
+        if self.spec is not None:
+            self.spec.setup(self)
         self.summary: Optional[dict] = None
 
     # ------------------------------------------------------------------ utils
@@ -150,6 +168,12 @@ class Engine:
         for li in self.attn_layers:
             self.states[li] = paged_cache.set_block_tables(self.states[li],
                                                            tables)
+        if self.spec is not None:
+            dtables = self.pool.ns_tables(self.spec.NS)
+            if mask_slot is not None:
+                dtables = dtables.copy()
+                dtables[mask_slot] = -1
+            self.spec.push_tables(dtables)
 
     def _init_pstates(self):
         """B=1 recurrent-layer states for a fresh prompt (attn -> None:
@@ -164,13 +188,17 @@ class Engine:
         n = self.slots
         for r in reqs:
             worst = self.pool.pages_for(len(r.prompt) + r.max_new)
-            if worst > self.pages_per_seq or worst > self.num_pages:
+            total = worst * (2 if self.spec is not None else 1)
+            if worst > self.pages_per_seq or total > self.num_pages:
                 raise ValueError(
-                    f"a single request needs {worst} pages (prompt "
+                    f"a single request needs {total} pages (prompt "
                     f"{len(r.prompt)} + max-new {r.max_new}, page size "
-                    f"{self.page}) but the pool offers "
-                    f"min({self.pages_per_seq} per-seq, {self.num_pages} "
-                    f"total); raise --capacity/--pool-pages")
+                    f"{self.page}"
+                    + (", x2 for the draft namespace"
+                       if self.spec is not None else "")
+                    + f") but the pool offers min({self.pages_per_seq} "
+                    f"per-seq, {self.num_pages} total); raise "
+                    f"--capacity/--pool-pages")
 
         queue = list(reqs)
         slots: List[Optional[Request]] = [None] * n
@@ -187,10 +215,12 @@ class Engine:
             r = slots[si]
             r.reset()
             queue.insert(0, r)
-            self.pool.free_slot(si)
+            self.pool.free_slot(si)  # frees BOTH namespaces atomically
             for li in self.attn_layers:
                 self.states[li] = paged_cache.release_slot(self.states[li],
                                                            si)
+            if self.spec is not None:
+                self.spec.release_slot(si)
             if task is not None and task.slot == si:
                 self.transport.abort(self, task)
                 task = None
@@ -210,6 +240,8 @@ class Engine:
             for li in self.attn_layers:
                 self.states[li] = paged_cache.release_slot(self.states[li],
                                                            si)
+            if self.spec is not None:
+                self.spec.release_slot(si)
             slots[si] = None
 
         while completed < len(reqs):
@@ -218,9 +250,14 @@ class Engine:
             if task is None and queue:
                 si = next((i for i in range(n) if slots[i] is None), None)
                 need = len(queue[0].prompt)
-                if si is not None and self.pool.can_admit(need + 1):
+                needs = ((need + 1, need) if self.spec is not None
+                         else (need + 1,))
+                if si is not None and self.pool.can_admit(*needs):
                     r = queue.pop(0)
                     ok = self.pool.allocate(si, need)
+                    if self.spec is not None:
+                        ok = ok and self.pool.allocate(si, need,
+                                                       ns=self.spec.NS)
                     assert ok, (si, need)  # can_admit held above
                     slots[si] = r
                     admissions += 1
@@ -246,21 +283,39 @@ class Engine:
                                 self.states[li],
                                 self.transport.to_decode(task.pstates[li]),
                                 si, n)
-                    nxt = int(jnp.argmax(task.logits[0, -1]))
+                    nxt = int(_host(jnp.argmax(task.logits[0, -1])))
                     r.generated.append(nxt)
                     self.stats.note_first_token(r.rid)
                     self.stats.note_decode_tokens(1)
                     new_tokens += 1
                     tokens = tokens.at[si, 0].set(nxt)
                     task = None
+                    if self.spec is not None:
+                        # the target prompt just landed; write the draft's
+                        # KV for it into the draft-namespace pages (tables
+                        # were pushed at the top of this prefill section)
+                        self.spec.prefill_prompt(si, r.prompt)
             # ---- growth: every decoding slot needs a mapped page for its
             # next token; evict LIFO when the pool runs dry ------------------
             for si in range(n):
                 if slots[si] is None or (task is not None
                                          and task.slot == si):
                     continue
-                while slots[si] is not None and not self.pool.ensure_capacity(
-                        si, int(self.pool.lens[si]) + 1):
+                while slots[si] is not None:
+                    L = int(self.pool.lens[si])
+                    if self.spec is not None:
+                        # grow by this round's worst case in BOTH
+                        # namespaces: k appends, clamped to what the
+                        # request can still emit
+                        gi = min(self.spec.k,
+                                 slots[si].max_new - len(slots[si].generated))
+                        ok = (self.pool.ensure_capacity(si, L + gi)
+                              and self.pool.ensure_capacity(
+                                  si, L + gi, ns=self.spec.NS))
+                    else:
+                        ok = self.pool.ensure_capacity(si, L + 1)
+                    if ok:
+                        break
                     victim = newest_active()
                     evict(victim)
                     if victim == si:
@@ -269,17 +324,49 @@ class Engine:
             decoding = [si for si in range(n)
                         if slots[si] is not None
                         and not (task is not None and task.slot == si)]
-            if decoding:
+            if decoding and self.spec is not None:
+                # ---- one speculation round: k draft steps + 1 verify -----
+                self._push_tables(
+                    mask_slot=task.slot if task is not None else None)
+                tgt_d, m_d, acc_d, pending, self.states = self.spec.round(
+                    self.params, tokens, self.states)
+                decode_steps += 1
+                self.stats.note_target_step()
+                tgt, m, acc = _host((tgt_d, m_d, acc_d))
+                proposed = accepted = 0
+                for si in decoding:
+                    r = slots[si]
+                    L = int(self.pool.lens[si])
+                    gi = min(self.spec.k, r.max_new - len(r.generated))
+                    # positions >= gi had no mapped page (growth clamped
+                    # to gi); the device rollback took the same min, so
+                    # clamp the host-side view identically
+                    mi = min(int(m[si]), gi)
+                    r.generated.extend(int(t) for t in tgt[si, :mi])
+                    self.stats.note_decode_tokens(mi)
+                    new_tokens += mi
+                    proposed += gi
+                    accepted += min(int(acc[si]), gi)
+                    self.pool.truncate(si, L + mi)
+                    self.pool.truncate(si, L + mi, ns=self.spec.NS)
+                    if len(r.generated) >= r.max_new:
+                        finish_slot(si)
+                self.stats.note_spec_round(proposed=proposed,
+                                           accepted=accepted)
+                tokens = pending
+            elif decoding:
                 self._push_tables(
                     mask_slot=task.slot if task is not None else None)
                 logits, self.states = self.decode_worker.step(
                     self.params, tokens, self.states)
                 decode_steps += 1
+                self.stats.note_target_step()
                 nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+                nxt_h = _host(nxt)
                 for si in decoding:
                     r = slots[si]
                     self.pool.note_decode_step(si)
-                    r.generated.append(int(nxt[si]))
+                    r.generated.append(int(nxt_h[si]))
                     self.stats.note_decode_tokens(1)
                     new_tokens += 1
                     if len(r.generated) >= r.max_new:

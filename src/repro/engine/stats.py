@@ -28,6 +28,12 @@ class EngineStats:
         self._admitted_t: Dict[int, float] = {}
         self.decode_tokens = 0
         self.evictions = 0
+        # speculative decoding: batched target forward steps (decode steps
+        # or verify rounds), draft proposals judged, proposals accepted
+        self.target_steps = 0
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         # largest contiguous K/V staging buffer any prefill step built, in
         # tokens (chunked prefill: one chunk; whole-prompt: the prompt)
         self.peak_prefill_transient_tokens = 0
@@ -53,6 +59,18 @@ class EngineStats:
 
     def note_eviction(self) -> None:
         self.evictions += 1
+
+    def note_target_step(self) -> None:
+        """One batched target forward (a decode step or a verify round)."""
+        self.target_steps += 1
+
+    def note_spec_round(self, *, proposed: int, accepted: int) -> None:
+        """One speculation round: ``proposed`` draft tokens judged by the
+        verify step across the batch, ``accepted`` of them matched the
+        target's argmax."""
+        self.spec_rounds += 1
+        self.spec_proposed += int(proposed)
+        self.spec_accepted += int(accepted)
 
     # -- per-step record ------------------------------------------------------
     def step_record(self, *, step: int, queue_depth: int, prefilling: int,
@@ -87,6 +105,15 @@ class EngineStats:
             "ttft_mean_s": round(sum(ttft) / len(ttft), 6) if ttft else None,
             "ttft_max_s": round(ttft[-1], 6) if ttft else None,
             "evictions": self.evictions,
+            # steps-per-token < 1.0 means speculation is paying: fewer
+            # batched target forwards than tokens emitted.  accept_rate is
+            # None for non-speculative runs (no proposals to judge).
+            "target_steps": self.target_steps,
+            "steps_per_token": round(self.target_steps / self.decode_tokens,
+                                     4) if self.decode_tokens else None,
+            "spec_rounds": self.spec_rounds,
+            "accept_rate": round(self.spec_accepted / self.spec_proposed, 4)
+            if self.spec_proposed else None,
             "peak_prefill_transient_tokens":
                 self.peak_prefill_transient_tokens,
             "peak_prefill_transient_bytes":

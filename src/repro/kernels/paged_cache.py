@@ -184,6 +184,37 @@ def write_chunk(cache: PagedKVCache, slot, k, v, offset) -> PagedKVCache:
         seq_lens=cache.seq_lens.at[slot].set(offset + n_mapped))
 
 
+def append_block(cache: PagedKVCache, k, v) -> PagedKVCache:
+    """Append ``K`` tokens per slot at positions ``seq_lens[s] + i``.
+
+    k / v: (n_slots, K, n_kv, head_dim) -- the multi-token generalization
+    of :func:`append_decode` used by speculative decoding: the draft model
+    appends its k look-ahead tokens in one step, and the target's verify
+    step appends the k tokens it is checking.  Token ``i`` of slot ``s``
+    lands exactly where ``K`` sequential :func:`append_decode` calls would
+    have put it (same cast, same drop semantics), so the verify path stays
+    bit-identical to plain decode.  A slot's length advances by its run of
+    *leading* mapped positions (a masked or capacity-exhausted slot
+    advances 0..K), which keeps host and device length bookkeeping in
+    lockstep with the allocator's page map.
+    """
+    K = k.shape[1]
+    base = cache.seq_lens
+    pos = base[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+    lp = jnp.clip(pos // cache.page_size, 0, cache.pages_per_seq - 1)
+    phys = jnp.take_along_axis(cache.block_tables, lp, axis=1)
+    mapped = (phys >= 0) & (pos < cache.capacity)
+    phys = jnp.where(mapped, phys, -1)
+    off = pos % cache.page_size
+    adv = jnp.sum(jnp.cumprod(mapped.astype(jnp.int32), axis=1), axis=1)
+    return cache._replace(
+        k_pool=_scatter_tokens(cache.k_pool, phys, off,
+                               k.astype(cache.k_pool.dtype)),
+        v_pool=_scatter_tokens(cache.v_pool, phys, off,
+                               v.astype(cache.v_pool.dtype)),
+        seq_lens=base + adv)
+
+
 def write_prefill(cache: PagedKVCache, slot, k, v) -> PagedKVCache:
     """Write a prefilled prompt (positions 0..S-1) into ``slot``'s pages.
 
@@ -201,6 +232,17 @@ def set_seq_len(cache: PagedKVCache, slot, n) -> PagedKVCache:
     destination), so the device-side length is set explicitly at handoff."""
     return cache._replace(
         seq_lens=cache.seq_lens.at[slot].set(jnp.asarray(n, jnp.int32)))
+
+
+def truncate_seq_lens(cache: PagedKVCache, max_lens) -> PagedKVCache:
+    """Device half of speculative rollback: clamp every slot's length to
+    ``max_lens`` (per-slot int32).  Entries past the clamp stay as stale
+    pool bytes -- every reader masks positions at or beyond ``seq_lens``,
+    and the host allocator's :meth:`PagePool.truncate` returns the pages
+    past the truncation point to the free list."""
+    return cache._replace(
+        seq_lens=jnp.minimum(cache.seq_lens,
+                             jnp.asarray(max_lens, jnp.int32)))
 
 
 def release_slot(cache: PagedKVCache, slot: int) -> PagedKVCache:
@@ -269,7 +311,18 @@ class PagePool:
     then pushes ``self.tables`` into the device :class:`PagedKVCache` via
     :func:`set_block_tables`.  Freed pages return to the free list in LIFO
     order so reuse is immediate (and deliberately exercised by tests:
-    stale payload bytes in a reused page must be invisible)."""
+    stale payload bytes in a reused page must be invisible).
+
+    **Namespaces.**  One physical free list can back several logical page
+    maps -- speculative decoding keeps the target model's KV and the draft
+    model's KV for the *same* slot under distinct namespace tags (default
+    ``""`` for the target, ``"draft"`` for the draft), so admission,
+    growth, eviction and the occupancy stats stay one allocator.  Every
+    mutation takes an ``ns`` keyword (default: the default namespace, which
+    keeps the pre-namespace API intact: ``pool.tables`` / ``pool.lens`` /
+    ``pool.owned`` are the default namespace's views); ``free_slot`` frees
+    a slot across ALL namespaces atomically -- evicting a sequence can
+    never strand its draft pages."""
 
     def __init__(self, num_pages: int, page_size: int, n_slots: int,
                  pages_per_seq: int):
@@ -279,10 +332,45 @@ class PagePool:
         self.n_slots = n_slots
         self.pages_per_seq = pages_per_seq
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
-        self.owned: dict = {}           # slot -> [physical page ids]
-        self.lens = np.zeros(n_slots, np.int64)
-        self.tables = np.full((n_slots, pages_per_seq), -1, np.int32)
+        self._ns: dict = {}             # tag -> {owned, lens, tables}
+        self._ensure_ns("")
         self.peak_pages_used = 0
+
+    def _ensure_ns(self, ns: str) -> dict:
+        if ns not in self._ns:
+            self._ns[ns] = {
+                "owned": {},            # slot -> [physical page ids]
+                "lens": np.zeros(self.n_slots, np.int64),
+                "tables": np.full((self.n_slots, self.pages_per_seq), -1,
+                                  np.int32),
+            }
+        return self._ns[ns]
+
+    # -- default-namespace views (the pre-namespace API) ---------------------
+    @property
+    def owned(self) -> dict:
+        return self._ns[""]["owned"]
+
+    @property
+    def lens(self) -> np.ndarray:
+        return self._ns[""]["lens"]
+
+    @property
+    def tables(self) -> np.ndarray:
+        return self._ns[""]["tables"]
+
+    @property
+    def namespaces(self) -> tuple:
+        return tuple(self._ns)
+
+    def ns_owned(self, ns: str = "") -> dict:
+        return self._ensure_ns(ns)["owned"]
+
+    def ns_lens(self, ns: str = "") -> np.ndarray:
+        return self._ensure_ns(ns)["lens"]
+
+    def ns_tables(self, ns: str = "") -> np.ndarray:
+        return self._ensure_ns(ns)["tables"]
 
     # -- queries -------------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -299,35 +387,47 @@ class PagePool:
     def internal_fragmentation(self) -> float:
         """Fraction of *allocated* pool slots holding no valid token --
         the bytes block-tables waste (vs a perfectly packed pool), the
-        quantity vLLM drove to <4 %.  0.0 when nothing is allocated."""
+        quantity vLLM drove to <4 %.  0.0 when nothing is allocated.
+        Sums valid tokens across every namespace (draft pages are
+        allocated pool slots like any other)."""
         slots = self.pages_used * self.page_size
         if slots == 0:
             return 0.0
-        return 1.0 - float(self.lens.sum()) / slots
+        valid = sum(float(ns["lens"].sum()) for ns in self._ns.values())
+        return 1.0 - valid / slots
 
-    def can_admit(self, n_tokens: int) -> bool:
-        need = self.pages_for(max(n_tokens, 1))
-        return need <= len(self.free) and need <= self.pages_per_seq
+    def can_admit(self, n_tokens: int, *more_tokens: int) -> bool:
+        """True when every requested sequence fits: each token count maps
+        to its own block table (<= pages_per_seq) and the page *sum* fits
+        the free list.  Speculative admission passes the target and draft
+        needs together -- one admission decision over one allocator."""
+        needs = [self.pages_for(max(n, 1)) for n in (n_tokens,) + more_tokens]
+        return (sum(needs) <= len(self.free)
+                and max(needs) <= self.pages_per_seq)
 
     # -- mutations -----------------------------------------------------------
-    def allocate(self, slot: int, n_tokens: int) -> bool:
+    def allocate(self, slot: int, n_tokens: int, *, ns: str = "") -> bool:
         """Map pages for a fresh ``n_tokens``-token sequence in ``slot``."""
-        assert slot not in self.owned, f"slot {slot} already allocated"
+        space = self._ensure_ns(ns)
+        assert slot not in space["owned"], \
+            f"slot {slot} already allocated in namespace {ns!r}"
         if not self.can_admit(n_tokens):
             return False
         need = self.pages_for(max(n_tokens, 1))
         pages = [self.free.pop() for _ in range(need)]
-        self.owned[slot] = pages
-        self.tables[slot, :need] = pages
-        self.lens[slot] = n_tokens
+        space["owned"][slot] = pages
+        space["tables"][slot, :need] = pages
+        space["lens"][slot] = n_tokens
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
         return True
 
-    def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
+    def ensure_capacity(self, slot: int, n_tokens: int, *,
+                        ns: str = "") -> bool:
         """Grow ``slot``'s mapping to cover ``n_tokens`` total tokens.
         False when the pool is out of pages (caller evicts) or the block
         table is full (sequence hit ``pages_per_seq * page_size``)."""
-        pages = self.owned[slot]
+        space = self._ensure_ns(ns)
+        pages = space["owned"][slot]
         need = self.pages_for(n_tokens)
         if need > self.pages_per_seq:
             return False
@@ -335,21 +435,40 @@ class PagePool:
             if not self.free:
                 return False
             pg = self.free.pop()
-            self.tables[slot, len(pages)] = pg
+            space["tables"][slot, len(pages)] = pg
             pages.append(pg)
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
         return True
 
-    def note_decode_step(self, slot: int) -> None:
-        self.lens[slot] += 1
+    def note_decode_step(self, slot: int, *, ns: str = "") -> None:
+        self._ensure_ns(ns)["lens"][slot] += 1
+
+    def truncate(self, slot: int, n_tokens: int, *, ns: str = "") -> int:
+        """Speculative rollback, host half: shrink ``slot``'s recorded
+        length to ``n_tokens`` and return exactly the pages past the
+        truncation point to the free list (LIFO, like ``free_slot``).
+        -> #pages freed."""
+        space = self._ensure_ns(ns)
+        pages = space["owned"][slot]
+        keep = self.pages_for(max(n_tokens, 1))
+        excess = pages[keep:]
+        del pages[keep:]
+        self.free.extend(reversed(excess))
+        space["tables"][slot, keep:] = -1
+        space["lens"][slot] = n_tokens
+        return len(excess)
 
     def free_slot(self, slot: int) -> int:
-        """Return ``slot``'s pages to the free list; -> #pages freed."""
-        pages = self.owned.pop(slot, [])
-        self.free.extend(reversed(pages))
-        self.tables[slot] = -1
-        self.lens[slot] = 0
-        return len(pages)
+        """Return ``slot``'s pages -- across EVERY namespace, atomically --
+        to the free list; -> #pages freed."""
+        freed = 0
+        for space in self._ns.values():
+            pages = space["owned"].pop(slot, [])
+            self.free.extend(reversed(pages))
+            space["tables"][slot] = -1
+            space["lens"][slot] = 0
+            freed += len(pages)
+        return freed
 
     def stats(self) -> dict:
         return {

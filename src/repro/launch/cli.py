@@ -52,3 +52,27 @@ def add_backend_args(ap, *, include_pool: bool = True):
                              "values exercise admission control and "
                              "eviction)")
     return ap
+
+
+def add_speculative_args(ap):
+    """Speculative-decoding flags shared by serve.py and the bench.
+
+    The draft model is the transprecision thesis applied per-token: its
+    weights AND KV pack into binary8 (the narrowest container the codec
+    expresses), and exact greedy acceptance -- the target verifies all k
+    proposals in one batched step -- keeps the emitted tokens bit-identical
+    to non-speculative decode, so the narrow format can only cost
+    acceptance rate, never correctness.
+    """
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="draft tokens proposed per engine step (0 = "
+                         "speculation off); the target verifies all k in "
+                         "one batched forward, greedy acceptance keeps "
+                         "tokens bit-identical to non-speculative decode")
+    ap.add_argument("--draft-config", default=None,
+                    help="arch name for the draft model (default: the "
+                         "target arch; the draft always serves binary8 "
+                         "packed weights + binary8 KV from its own page-"
+                         "pool namespace, so even the same arch drafts "
+                         "at container-width bytes)")
+    return ap

@@ -60,7 +60,7 @@ def batch_struct(cfg, B: int, S: int, mesh, *, with_labels: bool):
 
 
 def input_specs(arch: str, shape_name: str, mesh, policy,
-                cfg_overrides=None):
+                cfg_overrides=None, speculate_k: int = 0):
     """ShapeDtypeStruct stand-ins for every model input of this cell."""
     import dataclasses as _dc
     cfg = configs.get(arch)
@@ -97,6 +97,34 @@ def input_specs(arch: str, shape_name: str, mesh, policy,
                              with_labels=False)
         return model, cfg, {"params": params, "batch": batch}
 
+    if speculate_k:
+        # speculative verify: k tokens per sequence against the PAGED
+        # cache (the serving engine's layout) -- roofline of the verify
+        # half of a speculation round
+        from repro.kernels import paged_cache as _pc
+        if (cfg.encoder_layers or cfg.prefix_len
+                or any(k != "attn" for k in cfg.attn_pattern)):
+            raise ValueError(
+                f"--speculate-k: arch {arch} is not an all-attention "
+                f"decoder (verify_step cannot roll back recurrent / "
+                f"prefix state)")
+        B, page = spec.global_batch, _pc.DEFAULT_PAGE_SIZE
+        pps = -(-spec.seq_len // page)
+        states = jax.eval_shape(lambda: [
+            _pc.init_paged_cache(B, B * pps, page, pps, cfg.n_kv,
+                                 cfg.head_dim, policy.dtype("kv_cache"))
+            for _ in cfg.attn_pattern])
+        s_sh = tree_state_shardings(states, mesh, B)
+        states = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=sh),
+            states, s_sh)
+        tokens = jax.ShapeDtypeStruct(
+            (B, speculate_k), jnp.int32,
+            sharding=NamedSharding(mesh, batch_spec(B, mesh, extra_dims=1)))
+        return model, cfg, {"params": params, "tokens": tokens,
+                            "states": states, "extra": {}}
+
     # decode: one new token against a cache of length seq_len
     states = jax.eval_shape(
         lambda: model.init_state(spec.global_batch, spec.seq_len, policy))
@@ -121,7 +149,8 @@ def input_specs(arch: str, shape_name: str, mesh, policy,
 # step functions
 # ---------------------------------------------------------------------------
 
-def make_step_fn(model, cfg, kind: str, policy, lr: float = 3e-4):
+def make_step_fn(model, cfg, kind: str, policy, lr: float = 3e-4,
+                 speculate_k: int = 0):
     if kind == "train":
         def train_step(params, opt_state, batch):
             loss, grads = jax.value_and_grad(
@@ -135,6 +164,11 @@ def make_step_fn(model, cfg, kind: str, policy, lr: float = 3e-4):
             return model.prefill(params, batch, policy)
         return prefill_step
 
+    if speculate_k:
+        def verify_step(params, tokens, states, extra):
+            return model.verify_step(params, tokens, states, policy)
+        return verify_step
+
     def serve_step(params, tokens, states, extra):
         return model.decode_step(params, tokens, states, policy, **extra)
     return serve_step
@@ -144,18 +178,20 @@ def make_step_fn(model, cfg, kind: str, policy, lr: float = 3e-4):
 # one dry-run cell
 # ---------------------------------------------------------------------------
 
-def model_flops(cfg, spec) -> float:
+def model_flops(cfg, spec, speculate_k: int = 0) -> float:
     n_active = cfg.active_param_count()
     if spec.kind == "train":
         return 6.0 * n_active * spec.global_batch * spec.seq_len
     if spec.kind == "prefill":
         return 2.0 * n_active * spec.global_batch * spec.seq_len
-    return 2.0 * n_active * spec.global_batch  # decode: one token per seq
+    # decode: one token per seq; verify: k tokens per seq in one step
+    return 2.0 * n_active * spec.global_batch * max(speculate_k, 1)
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              policy_name: str = "transprecision",
              cfg_overrides=None, kv_fmt=None, tag: str = "",
+             speculate_k: int = 0,
              verbose: bool = True) -> Dict[str, Any]:
     spec = ALL_SHAPES[shape_name]
     if not runnable(arch, shape_name):
@@ -177,10 +213,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # set_mesh (not the bare Mesh context manager) where available so model
     # code can reach the ambient abstract mesh for shard_map paths (MoE EP,
     # flash-decode); compat falls back to the Mesh context manager
+    if speculate_k and spec.kind != "decode":
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "policy": policy_name, "status": "skipped",
+                "reason": "--speculate-k lowers the verify step of a "
+                          "speculation round; only serve shapes decode"}
     with compat.use_mesh(mesh):
         model, cfg, ins = input_specs(arch, shape_name, mesh, policy,
-                                      cfg_overrides)
-        step = make_step_fn(model, cfg, spec.kind, policy)
+                                      cfg_overrides,
+                                      speculate_k=speculate_k)
+        step = make_step_fn(model, cfg, spec.kind, policy,
+                            speculate_k=speculate_k)
 
         if spec.kind == "train":
             args = (ins["params"], ins["opt"], ins["batch"])
@@ -206,14 +250,15 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     coll_bytes = hlo_analysis.total_collective_bytes(coll)
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))
-    mf = model_flops(cfg, spec)
+    mf = model_flops(cfg, spec, speculate_k)
     terms = hlo_analysis.roofline(flops_dev, bytes_dev, coll_bytes, n_chips,
                                   mf)
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
         "n_chips": n_chips, "policy": policy_name, "status": "ok",
-        "kind": spec.kind,
+        "kind": "verify" if speculate_k else spec.kind,
+        "speculate_k": speculate_k,
         "flops_per_device": flops_dev,
         "bytes_per_device": bytes_dev,
         "collective_bytes_per_device": coll_bytes,
@@ -274,6 +319,10 @@ def main():
     add_backend_args(ap, include_pool=False)
     ap.add_argument("--kv-fmt", default=None,
                     help="override kv_cache format (e.g. binary16alt)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="lower the k-token speculative verify step "
+                         "instead of single-token decode for decode-kind "
+                         "shapes (paged-cache stand-ins)")
     ap.add_argument("--tag", default="", help="suffix for the result file")
     args = ap.parse_args()
 
@@ -312,6 +361,7 @@ def main():
                                    policy_name=args.policy,
                                    cfg_overrides=overrides or None,
                                    kv_fmt=args.kv_fmt,
+                                   speculate_k=args.speculate_k,
                                    tag=args.tag)
                 except Exception as e:  # record failures, keep sweeping
                     res = {"arch": arch, "shape": shape,

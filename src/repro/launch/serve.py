@@ -37,15 +37,37 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core.formats import BINARY8
 from repro.core.policy import get_policy
 from repro.engine import (ColocatedTransport, Engine, EngineStats, Request,
-                          StreamedTransport)
+                          SpeculativeDecoder, StreamedTransport)
 from repro.kernels import dispatch
-from repro.launch.cli import add_backend_args
+from repro.launch.cli import add_backend_args, add_speculative_args
 from repro.models import qparams
 from repro.models.registry import build
 
-__all__ = ["Request", "main"]
+__all__ = ["Request", "build_draft", "main"]
+
+
+def build_draft(model, cfg, *, arch=None, reduced=False, k):
+    """Build the binary8 packed draft side for speculative serving.
+
+    By default the draft shares the target's architecture (and, via the
+    shared PRNG seed, its weights) but serves them through the narrowest
+    transprecision point: binary8 weights in the packed container store,
+    binary8 KV in its own page-pool namespace.  ``arch`` swaps in a
+    different (typically smaller) draft architecture; the vocab must match
+    the target's or ``SpeculativeDecoder.setup`` rejects it.
+    """
+    dmodel, dcfg = model, cfg
+    if arch is not None and arch != cfg.arch:
+        dmodel, dcfg = build(arch, reduced=reduced)
+    draft_policy = get_policy(
+        "transprecision", decode_impl="paged").with_overrides(
+        embed_w=BINARY8, attn_w=BINARY8, ffn_w=BINARY8)
+    dparams = dmodel.init_params(jax.random.PRNGKey(0), draft_policy)
+    dparams = qparams.encode_params(dparams, draft_policy)
+    return SpeculativeDecoder(dmodel, dcfg, draft_policy, dparams, k=k)
 
 
 def main(argv=None):
@@ -70,6 +92,7 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=2)")
     ap.add_argument("--stats-out", default=None,
                     help="write per-step engine stats as JSON lines here")
+    add_speculative_args(ap)
     args = ap.parse_args(argv)
 
     # the policy-level override wins inside attention.decode_impl(), so no
@@ -101,13 +124,21 @@ def main(argv=None):
                     args.max_new)
             for i in range(args.requests)]
 
+    speculative = None
+    if args.speculate_k:
+        speculative = build_draft(model, cfg, arch=args.draft_config,
+                                  reduced=args.reduced, k=args.speculate_k)
+        print(f"[serve] speculative: draft={speculative.cfg.arch} "
+              f"(binary8 packed weights, binary8 KV), k={args.speculate_k}")
+
     transport = StreamedTransport() if args.disaggregate \
         else ColocatedTransport()
     engine = Engine(model, cfg, policy, params,
                     slots=args.slots, capacity=args.capacity,
                     page_size=args.page_size, pool_pages=args.pool_pages,
                     prefill_chunk=args.prefill_chunk, transport=transport,
-                    stats=EngineStats(args.stats_out))
+                    stats=EngineStats(args.stats_out),
+                    speculative=speculative)
     engine.run(reqs)
 
     s = engine.summary
@@ -124,7 +155,10 @@ def main(argv=None):
           f"{st['num_pages']} pages peak, frag: "
           f"{st['internal_fragmentation']}, "
           f"evictions: {s['evictions']}, "
-          f"transport: {transport.name}, "
+          + (f"accept rate: {s['accept_rate']}, "
+             f"steps/token: {s['steps_per_token']}, "
+             if args.speculate_k else "")
+          + f"transport: {transport.name}, "
           f"ttft mean: {s['ttft_mean_s']}s, "
           f"peak prefill staging: {s['peak_prefill_transient_tokens']} "
           f"tokens)")

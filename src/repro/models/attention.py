@@ -500,6 +500,81 @@ def mha(p, x, cfg, policy: PrecisionPolicy, *,
     return pdot(out, p["wo"], policy, "attn_w"), new_cache
 
 
+def verify_paged(p, x, cfg, policy: PrecisionPolicy, cache: PagedKVCache):
+    """Speculative-verify attention: append ``K`` tokens per slot to the
+    paged cache, then attend each position through the registered *decode*
+    backend -- bit-identical, position by position, to ``K`` sequential
+    single-token :func:`mha` decode calls.
+
+    x: (B, K, d) -- the k tokens under verification, batched over slots.
+    The projections / rope / output matmul run once over all K positions
+    (one weight pass instead of K -- the speculative-decoding win on the
+    bandwidth-bound weight stream), while the attention core is a
+    Python-unrolled per-position loop over the SAME registry decode
+    contract the plain decode step uses: position ``i`` sees
+    ``n_valid = seq_lens_before + i + 1`` (its own token included), entries
+    written for later positions sit at or beyond that bound and every
+    backend masks them.  A slot whose block-table row is masked (-1)
+    drops all K writes, keeps its length frozen, and produces the same
+    discarded garbage row as the plain decode step.
+
+    Returns (out (B, K, q_dim), new_cache with K appended per mapped slot).
+    The caller rolls back rejected positions by truncating ``seq_lens``
+    (:func:`repro.kernels.paged_cache.truncate_seq_lens`) -- entries past
+    the truncation point are stale bytes every reader masks.
+    """
+    B, K, _ = x.shape
+    n_kv, dh = cfg.n_kv, cfg.head_dim
+    G = cfg.n_heads // n_kv
+    if cfg.window is not None and cache.capacity > cfg.window:
+        raise ValueError(
+            f"paged KV cache capacity {cache.capacity} exceeds the sliding "
+            f"window {cfg.window}; size the pool so pages_per_seq * "
+            f"page_size <= window")
+
+    q = _split_heads(pdot(x, p["wq"], policy, "attn_w"), cfg.n_heads, dh)
+    k = _split_heads(pdot(x, p["wk"], policy, "attn_w"), n_kv, dh)
+    v = _split_heads(pdot(x, p["wv"], policy, "attn_w"), n_kv, dh)
+    base = cache.seq_lens
+    positions = base[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = paged_cache.append_block(cache, k, v)
+
+    scale = np.float32(1.0 / np.sqrt(dh))
+    qg = q.reshape(B, K, n_kv, G, dh)
+    impl = decode_impl(cfg, policy)
+    fn = dispatch.resolve_decode(impl)
+    paged_base = dispatch.canonicalize_impl(impl)[-1] == "paged"
+    if not paged_base:
+        # contiguous-impl bridge, hoisted: one gather serves all K
+        # positions -- entries at or beyond each position's n_valid are
+        # masked by the backend, so the post-append view is exact for
+        # every position (same reasoning as the mha paged branch)
+        ckg = paged_cache.gather_pages(new_cache.k_pool,
+                                      new_cache.block_tables)
+        cvg = paged_cache.gather_pages(new_cache.v_pool,
+                                      new_cache.block_tables)
+    outs = []
+    for i in range(K):
+        # frozen (masked / unmapped) slots advanced 0..i tokens; clamping
+        # to the post-append length reproduces the sequential decode
+        # step's n_valid exactly for every slot
+        n_valid = jnp.minimum(base + (i + 1), new_cache.seq_lens)
+        if paged_base:
+            o = fn(qg[:, i], new_cache.k_pool, new_cache.v_pool, n_valid,
+                   scale=scale, policy=policy,
+                   block_tables=new_cache.block_tables)
+        else:
+            o = fn(qg[:, i], ckg, cvg, n_valid, scale=scale, policy=policy)
+        outs.append(act_cast(o, policy))
+    out = jnp.stack(outs, axis=1)
+    out = out.reshape(B, K, cfg.q_dim)
+    return pdot(out, p["wo"], policy, "attn_w"), new_cache
+
+
 def decode_impl(cfg, policy: PrecisionPolicy) -> str:
     """Resolve the attention backend: the policy override (serving-time
     knob, no model rebuild) wins over the config default."""

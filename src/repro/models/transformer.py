@@ -333,6 +333,57 @@ class Model:
         logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
         return logits, new_states, new_pstates
 
+    def verify_step(self, params, tokens, states,
+                    policy: PrecisionPolicy):
+        """Speculative-verify forward: k tokens per slot in ONE batched
+        step, logits for every position.
+
+        tokens: (B, K) -- position ``i`` of row ``b`` is the token the
+        sequence consumes at cache position ``seq_lens[b] + i`` (the
+        pending token followed by the draft's proposals).  Returns
+        (logits (B, K, V), new states with K entries appended per mapped
+        slot) where ``logits[:, i]`` is bit-identical to the logits K
+        sequential :meth:`decode_step` calls would produce -- the
+        embeddings, projections, norms, FFN and lm-head all act row-wise,
+        and the attention core dispatches per position through the same
+        registry decode backend (``attn.verify_paged``).  That identity is
+        what makes greedy acceptance exact: a verified token IS the token
+        non-speculative decode would have emitted.
+
+        Requires an all-attention decoder-only arch over paged caches --
+        recurrent layer states (rwkv / rglru) cannot roll back to a
+        mid-chunk position, and enc-dec / prefix-LM archs never reach the
+        engine's speculative path.
+        """
+        cfg = self.cfg
+        policy = self._policy(policy)
+        if cfg.encoder_layers or cfg.prefix_len:
+            raise ValueError(
+                "verify_step is decoder-only (no prefix / encoder context)")
+        if any(kind != "attn" for kind in cfg.attn_pattern):
+            raise ValueError(
+                f"arch {cfg.arch}: verify_step needs an all-attention "
+                f"pattern -- recurrent layer states (rwkv / rglru) cannot "
+                f"roll back rejected speculative positions")
+        x = embed_lookup(params["embed"], tokens, policy,
+                         scale=cfg.embed_scale)
+        new_states = list(states)
+        for li, layer in enumerate(params["layers"]):
+            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+            a, st = attn.verify_paged(layer["mix"], h, cfg, policy,
+                                      states[li])
+            new_states[li] = st
+            x = x + a
+            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            if cfg.moe_experts:
+                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+            else:
+                f = ffn_apply(layer["ffn"], h, policy, cfg)
+            x = x + f
+        x = apply_norm(x, params["final_norm"], policy, cfg.norm)
+        logits = lm_logits(x, self._head_w(params), policy)
+        return logits, new_states
+
     def decode_step(self, params, tokens, states, policy: PrecisionPolicy,
                     enc_out=None, encoder_embeds=None):
         """tokens: (B, 1).  Returns (logits (B, 1, V), new states)."""

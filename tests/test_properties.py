@@ -232,6 +232,63 @@ def test_page_pool_interleavings_never_double_map(ops, num_pages,
                                             and need <= pages_per_seq)
 
 
+ns_pool_ops = st.lists(
+    st.tuples(st.sampled_from(["alloc", "grow", "truncate", "free"]),
+              st.integers(min_value=0, max_value=_N_SLOTS - 1),  # slot
+              st.sampled_from(["", "draft"]),                    # namespace
+              st.integers(min_value=0, max_value=40)),           # tokens
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=150, deadline=None)
+@given(ops=ns_pool_ops, num_pages=st.integers(min_value=2, max_value=8),
+       pages_per_seq=st.integers(min_value=1, max_value=4))
+def test_page_pool_namespace_interleavings(ops, num_pages, pages_per_seq):
+    """Speculative serving drives the allocator from TWO namespaces per
+    slot (target KV in "", draft KV in "draft") with truncation (rollback)
+    in the mix.  No interleaving may double-map a page across namespaces,
+    ``can_admit`` must account for all namespaces' needs at once,
+    ``truncate`` must free exactly the pages past the truncation point,
+    and ``free_slot`` must release BOTH namespaces atomically."""
+    pool = pc.PagePool(num_pages=num_pages, page_size=_PAGE,
+                       n_slots=_N_SLOTS, pages_per_seq=pages_per_seq)
+    for op, slot, ns, toks in ops:
+        if op == "alloc" and slot not in pool.ns_owned(ns):
+            pool.allocate(slot, toks, ns=ns)
+        elif op == "grow" and slot in pool.ns_owned(ns):
+            pool.ensure_capacity(slot, toks, ns=ns)
+        elif op == "truncate" and slot in pool.ns_owned(ns):
+            before = list(pool.ns_owned(ns)[slot])
+            keep = pool.pages_for(max(min(toks, pool.ns_lens(ns)[slot]), 1))
+            freed = pool.truncate(
+                slot, min(toks, int(pool.ns_lens(ns)[slot])), ns=ns)
+            # exactly the pages past the truncation point came back
+            assert freed == len(before) - min(keep, len(before))
+            assert pool.ns_owned(ns)[slot] == before[:keep]
+        elif op == "free":
+            owned_before = sum(
+                len(pool.ns_owned(t).get(slot, ()))
+                for t in pool.namespaces)
+            assert pool.free_slot(slot) == owned_before  # both ns at once
+        owned = [p for t in pool.namespaces
+                 for pages in pool.ns_owned(t).values() for p in pages]
+        assert len(owned) == len(set(owned))          # never double-mapped
+        assert not set(owned) & set(pool.free)        # disjoint from free
+        assert sorted(owned + pool.free) == list(range(num_pages))
+        for t in pool.namespaces:                     # tables == ownership
+            for s in range(_N_SLOTS):
+                mapped = [p for p in pool.ns_tables(t)[s].tolist()
+                          if p >= 0]
+                assert mapped == pool.ns_owned(t).get(s, [])
+        brute_free = num_pages - len(owned)
+        for a, b in ((0, 0), (1, _PAGE), (_PAGE + 1, 1),
+                     (3 * _PAGE, 2 * _PAGE)):
+            needs = [-(-max(w, 1) // _PAGE) for w in (a, b)]
+            assert pool.can_admit(a, b) == (
+                sum(needs) <= brute_free
+                and max(needs) <= pages_per_seq)
+
+
 # ---------------------------------------------------------------------------
 # ring-merge associativity (kernels/dispatch.py): folding per-shard flash
 # partials in ANY rotation order must reproduce the monolithic softmax --

@@ -1,0 +1,350 @@
+"""Speculative decoding: exactness, allocator namespaces, and the
+one-transfer-per-step engine loop.
+
+The load-bearing claim is *bit-identity*: greedy speculative serving must
+emit exactly the tokens non-speculative decode would -- the draft (binary8
+packed weights + binary8 KV, the narrowest transprecision point) can only
+change how many target steps the stream costs, never its content.  The
+tests pin that at three levels:
+
+* ``Model.verify_step`` logits and cache payloads == K sequential
+  ``decode_step`` calls, per base backend and policy;
+* the engine end-to-end, speculative vs non-speculative, across the four
+  paper formats and the base registry spellings (wrapped spellings run
+  genuinely sharded in ``test_system.py``'s 2-device subprocess);
+* adversarial drafts (different weights, so near-zero acceptance) and
+  mid-speculation eviction under pool pressure still match the oracle.
+
+The allocator side (two page namespaces per slot, rollback truncation,
+atomic eviction) gets a seeded-random interleaving test here that runs
+everywhere; the hypothesis-driven version lives in test_properties.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import BINARY8, PAPER_FORMATS
+from repro.core.policy import get_policy
+from repro.engine import (Engine, EngineStats, Request, SpeculativeDecoder,
+                          synchronous_generate)
+from repro.kernels import dispatch
+from repro.kernels import paged_cache as pc
+from repro.models import qparams
+from repro.models.registry import build
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    model, cfg = build("llama3-8b", reduced=True)
+    pol = get_policy("binary32", decode_impl="paged")
+    params = model.init_params(jax.random.PRNGKey(0), pol)
+    return model, cfg, pol, params
+
+
+def _prompts(cfg, n, length, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, min(cfg.vocab, 97), length).tolist()
+            for _ in range(n)]
+
+
+def _draft_policy():
+    return get_policy("transprecision", decode_impl="paged").with_overrides(
+        embed_w=BINARY8, attn_w=BINARY8, ffn_w=BINARY8)
+
+
+def _draft(model, cfg, k=4, seed=0):
+    """Binary8 packed draft; seed 0 shares the target's weights (high
+    acceptance), any other seed is an adversarial mismatched draft."""
+    dpol = _draft_policy()
+    dparams = qparams.encode_params(
+        model.init_params(jax.random.PRNGKey(seed), dpol), dpol)
+    return SpeculativeDecoder(model, cfg, dpol, dparams, k=k)
+
+
+# ------------------------------------------------------------ paged_cache
+def test_append_block_matches_sequential_append_decode():
+    """K-token block append (the verify write path) lands bit-identical
+    payloads and seq_lens to K single-token appends, including a frozen
+    (unmapped, -1 row) slot whose writes must drop."""
+    rng = np.random.default_rng(0)
+    B, K, n_kv, dh, page, pps = 2, 3, 2, 4, 8, 4
+    cache = pc.init_paged_cache(B, B * pps, page, pps, n_kv, dh,
+                                jnp.float32)
+    tables = np.full((B, pps), -1, np.int32)
+    tables[0] = [0, 1, 2, 3]  # slot 1 stays unmapped (frozen mid-prefill)
+    cache = pc.set_block_tables(cache, jnp.asarray(tables))
+    cache = cache._replace(seq_lens=jnp.asarray([7, 0], jnp.int32))
+    k = jnp.asarray(rng.standard_normal((B, K, n_kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, K, n_kv, dh)), jnp.float32)
+
+    blk = pc.append_block(cache, k, v)
+    seq = cache
+    for i in range(K):
+        seq = pc.append_decode(seq, k[:, i:i + 1], v[:, i:i + 1])
+    np.testing.assert_array_equal(np.asarray(blk.k_pool),
+                                  np.asarray(seq.k_pool))
+    np.testing.assert_array_equal(np.asarray(blk.v_pool),
+                                  np.asarray(seq.v_pool))
+    np.testing.assert_array_equal(np.asarray(blk.seq_lens),
+                                  np.asarray(seq.seq_lens))
+    assert np.asarray(blk.seq_lens).tolist() == [10, 0]
+
+
+def test_pool_truncate_frees_exactly_past_pages():
+    pool = pc.PagePool(num_pages=8, page_size=8, n_slots=2, pages_per_seq=4)
+    assert pool.allocate(0, 20)             # 3 pages
+    owned = list(pool.owned[0])
+    assert pool.truncate(0, 9) == 1         # 9 tokens -> 2 pages
+    assert pool.owned[0] == owned[:2]
+    assert pool.lens[0] == 9
+    assert owned[2] in pool.free
+    assert pool.truncate(0, 8) == 1         # page boundary -> 1 page
+    assert pool.owned[0] == owned[:1]
+    assert pool.truncate(0, 0) == 0         # floor: one page stays mapped
+    assert pool.tables[0].tolist() == [owned[0], -1, -1, -1]
+
+
+def test_pool_namespace_interleavings_seeded():
+    """Seeded-random version of the hypothesis property in
+    test_properties.py (which needs the hypothesis package): arbitrary
+    allocate/grow/truncate/free interleavings across two namespaces never
+    double-map a page, tables mirror ownership per namespace, can_admit
+    accounts for all needs at once, and free_slot drains both namespaces."""
+    rng = np.random.default_rng(0)
+    pool = pc.PagePool(num_pages=6, page_size=8, n_slots=3, pages_per_seq=3)
+    for _ in range(400):
+        op = rng.choice(["alloc", "grow", "truncate", "free"])
+        slot = int(rng.integers(0, 3))
+        ns = str(rng.choice(["", "draft"]))
+        toks = int(rng.integers(0, 40))
+        if op == "alloc" and slot not in pool.ns_owned(ns):
+            pool.allocate(slot, toks, ns=ns)
+        elif op == "grow" and slot in pool.ns_owned(ns):
+            pool.ensure_capacity(slot, toks, ns=ns)
+        elif op == "truncate" and slot in pool.ns_owned(ns):
+            n = min(toks, int(pool.ns_lens(ns)[slot]))
+            before = list(pool.ns_owned(ns)[slot])
+            keep = min(pool.pages_for(max(n, 1)), len(before))
+            assert pool.truncate(slot, n, ns=ns) == len(before) - keep
+            assert pool.ns_owned(ns)[slot] == before[:keep]
+        elif op == "free":
+            expect = sum(len(pool.ns_owned(t).get(slot, ()))
+                         for t in pool.namespaces)
+            assert pool.free_slot(slot) == expect
+        owned = [p for t in pool.namespaces
+                 for pages in pool.ns_owned(t).values() for p in pages]
+        assert len(owned) == len(set(owned))
+        assert not set(owned) & set(pool.free)
+        assert sorted(owned + pool.free) == list(range(6))
+        for t in pool.namespaces:
+            for s in range(3):
+                mapped = [p for p in pool.ns_tables(t)[s].tolist()
+                          if p >= 0]
+                assert mapped == pool.ns_owned(t).get(s, [])
+        free = len(pool.free)
+        for a, b in ((1, 1), (8, 9), (17, 1)):
+            needs = [pool.pages_for(a), pool.pages_for(b)]
+            assert pool.can_admit(a, b) == (sum(needs) <= free
+                                            and max(needs) <= 3)
+
+
+# ----------------------------------------------------------- verify_step
+def _paged_setup(model, cfg, pol, params, prompts, K):
+    """Prefill ``prompts`` into a fresh paged cache set (one slot each,
+    room for K more tokens), mirroring the engine's layout."""
+    slots, page = len(prompts), 8
+    cap = max(len(p) for p in prompts) + K + 1
+    pps = -(-cap // page)
+    pool = pc.PagePool(slots * pps, page, slots, pps)
+    n_layers = len(cfg.attn_pattern)
+    states = [pc.init_paged_cache(slots, slots * pps, page, pps, cfg.n_kv,
+                                  cfg.head_dim, pol.dtype("kv_cache"))
+              for _ in range(n_layers)]
+    for si, p in enumerate(prompts):
+        assert pool.allocate(si, len(p) + K)
+    for li in range(n_layers):
+        states[li] = pc.set_block_tables(states[li],
+                                         jnp.asarray(pool.tables))
+    for si, p in enumerate(prompts):
+        t = jnp.asarray([p], jnp.int32)
+        _, states, _ = model.prefill_chunk(params, t, states,
+                                           [None] * n_layers, pol,
+                                           slot=si, q_offset=0)
+    return states
+
+
+@pytest.mark.parametrize("impl", dispatch.BASE_IMPLS)
+@pytest.mark.parametrize("policy_name", ["binary32", "transprecision"])
+def test_verify_step_bitidentical_to_sequential_decode(policy_name, impl):
+    """The verify entry point IS K decode steps: logits for every position
+    and the resulting cache payloads must match the sequential chain bit
+    for bit -- this identity is why greedy acceptance is exact."""
+    model, cfg = build("llama3-8b", reduced=True)
+    pol = get_policy(policy_name, decode_impl=impl)
+    params = model.init_params(jax.random.PRNGKey(0), pol)
+    K = 3
+    prompts = [_prompts(cfg, 1, 7)[0], _prompts(cfg, 1, 12, seed=1)[0]]
+    v = jnp.asarray(np.random.default_rng(2).integers(
+        0, min(cfg.vocab, 97), (len(prompts), K)), jnp.int32)
+
+    sv = _paged_setup(model, cfg, pol, params, prompts, K)
+    seq_logits = []
+    for i in range(K):
+        lg, sv = model.decode_step(params, v[:, i:i + 1], sv, pol)
+        seq_logits.append(lg[:, 0])
+    seq_logits = jnp.stack(seq_logits, axis=1)
+
+    bv = _paged_setup(model, cfg, pol, params, prompts, K)
+    blk_logits, bv = model.verify_step(params, v, bv, pol)
+
+    np.testing.assert_array_equal(np.asarray(blk_logits),
+                                  np.asarray(seq_logits))
+    for a, b in zip(bv, sv):
+        np.testing.assert_array_equal(np.asarray(a.k_pool),
+                                      np.asarray(b.k_pool))
+        np.testing.assert_array_equal(np.asarray(a.v_pool),
+                                      np.asarray(b.v_pool))
+        np.testing.assert_array_equal(np.asarray(a.seq_lens),
+                                      np.asarray(b.seq_lens))
+
+
+def test_verify_step_rejects_recurrent_archs():
+    model, cfg = build("rwkv6-1.6b", reduced=True)
+    pol = get_policy("binary32")
+    params = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), pol))
+    states = jax.eval_shape(lambda: model.init_state(1, 32, pol))
+    with pytest.raises(ValueError) as ei:
+        model.verify_step(params, jnp.zeros((1, 3), jnp.int32), states, pol)
+    assert "roll back" in str(ei.value)
+
+
+# ------------------------------------------------------- engine exactness
+def _run_engine(model, cfg, pol, params, prompts, max_new, *, spec=None,
+                **kw):
+    reqs = [Request(i, list(p), max_new) for i, p in enumerate(prompts)]
+    eng = Engine(model, cfg, pol, params, slots=2, capacity=64, page_size=8,
+                 speculative=spec, stats=EngineStats(), **kw)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    return [r.generated for r in reqs], eng.summary
+
+
+@pytest.mark.parametrize("fmt", PAPER_FORMATS, ids=lambda f: f.name)
+def test_speculative_tokens_bitidentical_all_formats(fmt):
+    """Speculative == non-speculative greedy tokens under every paper
+    kv_cache format (the target's numerics change with the format; the
+    exactness argument must not care)."""
+    model, cfg = build("llama3-8b", reduced=True)
+    pol = get_policy("binary32", kv_fmt=fmt, decode_impl="paged")
+    params = model.init_params(jax.random.PRNGKey(0), pol)
+    prompts = _prompts(cfg, 3, 16)
+    want, _ = _run_engine(model, cfg, pol, params, prompts, 10)
+    got, s = _run_engine(model, cfg, pol, params, prompts, 10,
+                         spec=_draft(model, cfg))
+    assert got == want
+    assert s["accept_rate"] is not None and s["accept_rate"] > 0
+    assert s["steps_per_token"] < 1.0
+
+
+@pytest.mark.parametrize("impl", dispatch.BASE_IMPLS)
+def test_speculative_tokens_bitidentical_base_impls(served_model, impl):
+    """... and under every base registry spelling of the target's decode
+    attention (wrapped spellings run sharded in test_system.py)."""
+    model, cfg, _, params = served_model
+    pol = get_policy("binary32", decode_impl=impl)
+    prompts = _prompts(cfg, 3, 16)
+    want, _ = _run_engine(model, cfg, pol, params, prompts, 8)
+    got, s = _run_engine(model, cfg, pol, params, prompts, 8,
+                         spec=_draft(model, cfg))
+    assert got == want
+    assert s["accept_rate"] > 0
+
+
+def test_mid_speculation_eviction_matches_oracle(served_model):
+    """A tight pool forces eviction while speculation is appending to both
+    namespaces: the evicted sequence's draft + target pages come back
+    together, it requeues, and the final tokens still match both the
+    non-speculative engine and the synchronous oracle."""
+    model, cfg, pol, params = served_model
+    p0 = _prompts(cfg, 1, 7)[0]
+    p1 = _prompts(cfg, 1, 40, seed=1)[0]
+    oracle = [synchronous_generate(model, cfg, pol, params, [p0],
+                                   max_new=12, capacity=96)[0],
+              synchronous_generate(model, cfg, pol, params, [p1],
+                                   max_new=4, capacity=96)[0]]
+
+    def run(spec, pool_pages):
+        reqs = [Request(0, list(p0), 12), Request(1, list(p1), 4)]
+        eng = Engine(model, cfg, pol, params, slots=2, capacity=96,
+                     page_size=8, pool_pages=pool_pages, speculative=spec,
+                     stats=EngineStats())
+        eng.run(reqs)
+        return [r.generated for r in reqs], sum(r.evictions for r in reqs)
+
+    want, _ = run(None, 24)
+    assert want == oracle
+    got, evictions = run(_draft(model, cfg), 15)
+    assert evictions >= 1        # the speculation round hit pool pressure
+    assert got == oracle
+
+
+def test_adversarial_draft_still_exact(served_model):
+    """A draft with unrelated weights proposes mostly-wrong tokens: every
+    round rolls back, and the emitted stream must still be exactly the
+    non-speculative one (acceptance sampling can only cost speed)."""
+    model, cfg, pol, params = served_model
+    prompts = _prompts(cfg, 2, 12)
+    want, _ = _run_engine(model, cfg, pol, params, prompts, 8)
+    got, s = _run_engine(model, cfg, pol, params, prompts, 8,
+                         spec=_draft(model, cfg, seed=1))
+    assert got == want
+    assert s["accept_rate"] is not None  # rounds ran (rate may be ~0)
+
+
+def test_speculative_rejects_vocab_mismatch(served_model):
+    model, cfg, pol, params = served_model
+    import dataclasses
+    bad_cfg = dataclasses.replace(cfg, vocab=cfg.vocab + 1)
+    spec = SpeculativeDecoder(model, bad_cfg, _draft_policy(), params, k=2)
+    with pytest.raises(ValueError) as ei:
+        Engine(model, cfg, pol, params, slots=1, capacity=32, page_size=8,
+               speculative=spec)
+    assert "vocab" in str(ei.value)
+
+
+# ---------------------------------------------------- transfer regression
+def test_engine_loop_single_host_transfer_per_step(served_model,
+                                                   monkeypatch):
+    """The decode loop must sync device->host exactly once per batched
+    step (plus once per prefill completion) through the explicit
+    ``scheduler._host`` hook -- the per-sequence ``int(nxt[si])`` pulls
+    were one implicit transfer per slot per step.  The transfer guard
+    turns any remaining implicit transfer into a hard error; the spy
+    counts the explicit ones."""
+    from repro.engine import scheduler
+
+    model, cfg, pol, params = served_model
+    prompts = _prompts(cfg, 3, 16)
+
+    for spec in (None, _draft(model, cfg)):
+        calls = {"n": 0}
+        real = scheduler._host
+
+        def spy(tree):
+            calls["n"] += 1
+            return real(tree)
+
+        monkeypatch.setattr(scheduler, "_host", spy)
+        reqs = [Request(i, list(p), 6) for i, p in enumerate(prompts)]
+        eng = Engine(model, cfg, pol, params, slots=2, capacity=64,
+                     page_size=8, speculative=spec, stats=EngineStats())
+        with jax.transfer_guard_device_to_host("disallow"):
+            eng.run(reqs)
+        monkeypatch.setattr(scheduler, "_host", real)
+        assert all(r.done for r in reqs)
+        # one _host per batched target step + one per prefill completion
+        assert calls["n"] == eng.summary["target_steps"] + len(reqs), \
+            ("speculative" if spec else "baseline", calls["n"],
+             eng.summary["target_steps"], len(reqs))

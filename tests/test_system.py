@@ -294,6 +294,43 @@ print("ENGINE_DETERMINISM_2DEV_OK")
 """
 
 
+_SERVE_SPEC_2DEV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+from repro import compat
+from repro.kernels import dispatch
+from repro.launch.serve import main
+
+mesh = compat.make_mesh((2,), ("model",))
+args = ["--arch", "llama3-8b", "--reduced", "--requests", "2",
+        "--slots", "2", "--max-new", "4", "--prompt-len", "8",
+        "--capacity", "32", "--policy", "binary32", "--page-size", "8"]
+with compat.use_mesh(mesh):
+    # non-speculative tokens are registry-invariant (pinned by the sweep
+    # above), so one baseline serves as the oracle for every spelling
+    base = main(args + ["--decode-impl", "xla"])
+    want = [r.generated for r in base]
+    wrapped = [i for i in dispatch.legal_impls()
+               if len(dispatch.canonicalize_impl(i)) > 1]
+    assert len(wrapped) >= 8, wrapped
+    for impl in wrapped:
+        got = main(args + ["--decode-impl", impl, "--speculate-k", "3"])
+        toks = [r.generated for r in got]
+        assert all(r.done for r in got), impl
+        assert toks == want, ("speculative divergence", impl, toks, want)
+print("SERVE_SPEC_2DEV_OK")
+"""
+
+
+def test_serve_speculative_tokens_identical_across_wrappers_2dev():
+    """Speculative serving under every wrapper spelling on a real 2-device
+    mesh (verify + draft rounds run over the sharded pool) emits exactly
+    the non-speculative greedy tokens -- the base spellings are pinned
+    in-process by tests/test_speculative.py, so together the whole
+    registry is covered."""
+    run_child(_SERVE_SPEC_2DEV, "SERVE_SPEC_2DEV_OK", timeout=570)
+
+
 def test_engine_deterministic_vs_synchronous_2dev_subprocess():
     """The engine's whole pipeline -- chunked page-granular prefill,
     interleaved scheduling, page-streaming transport, sharded wrappers --
