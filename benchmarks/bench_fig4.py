@@ -15,8 +15,9 @@ def report(cache) -> dict:
             key = f"eps{eps:g}|V2"
             if key not in entry:
                 continue
-            sizes = entry[key]["sizes"]
-            fmts = entry[key]["formats"]
+            art = entry[key]["artifact"]
+            sizes = art["provenance"]["sizes"]
+            fmts = art["formats"]
             byf = {f: 0 for f in FMT_ORDER}
             for v, f in fmts.items():
                 byf[f] = byf.get(f, 0) + sizes.get(v, 1)

@@ -10,7 +10,7 @@ def report(cache) -> list:
             key = f"eps{0.1:g}|{ts}"
             if key not in entry:
                 continue
-            for v, fmt in entry[key]["formats"].items():
+            for v, fmt in entry[key]["artifact"]["formats"].items():
                 counts[fmt] += 1
         rows.append((ts, counts["binary8"], counts["binary16"],
                      counts["binary16alt"], counts["binary32"]))

@@ -1,0 +1,108 @@
+"""Precision-autotuning bench: Table-1-style rows for the serve-time
+tuner across the model-zoo families AND the paper's own apps through the
+classic ``core/tuning.py`` tuner.
+
+Every row records the tuned binding's shape (format histogram), its byte
+footprint against the all-binary32 baseline, and the measured error --
+the trajectory file ``BENCH_tuning.json`` pins that the tuning flow keeps
+finding sub-f32 bindings on every model family as the stack evolves.
+
+LLM rows (``bench='tuning_llm'``) run :class:`repro.tuning.ServeTuner` on
+the reduced config of one arch per family (dense, MoE, RWKV, recurrent,
+enc-dec); app rows (``bench='tuning_app'``) run the apps tuner at the
+paper's loosest precision requirement.  ``collect(smoke=True)`` shrinks
+calibration and search budgets for CI.
+"""
+from __future__ import annotations
+
+# one arch per model family: dense, MoE, RWKV, recurrent-hybrid, enc-dec
+FAMILY_ARCHS = ("llama3-8b", "granite-moe-1b-a400m", "rwkv6-1.6b",
+                "recurrentgemma-2b", "whisper-tiny")
+SMOKE_APPS = ("KNN", "SVM")
+
+
+def _llm_entry(arch: str, result) -> dict:
+    total = result.weight_bytes + result.kv_bytes_per_token
+    total32 = result.weight_bytes_f32 + result.kv_bytes_per_token_f32
+    return {
+        "bench": "tuning_llm", "impl": "serve_tuner", "shape": arch,
+        "eps": result.eps,
+        "final_kl": result.final_kl,
+        "n_evals": result.n_evals,
+        "fmt_hist": result.fmt_histogram(),
+        "weight_bytes": result.weight_bytes,
+        "kv_bytes_per_token": result.kv_bytes_per_token,
+        "bytes": total,
+        "bytes_f32": total32,
+        "bytes_vs_f32": total / max(total32, 1),
+        "energy_pj_per_token": result.energy_pj_per_token,
+        "energy_vs_f32": (result.energy_pj_per_token
+                          / max(result.energy_f32_pj_per_token, 1e-9)),
+        "calibration": result.calibration,
+    }
+
+
+def _app_entry(result) -> dict:
+    b, b32 = result.bytes_tuned(), result.bytes_f32()
+    return {
+        "bench": "tuning_app", "impl": "apps_tuner", "shape": result.app,
+        "eps": result.eps,
+        "final_kl": result.final_error,  # same column: measured error
+        "n_evals": result.n_evals,
+        "fmt_hist": result.vars_by_format(),
+        "bytes": b,
+        "bytes_f32": b32,
+        "bytes_vs_f32": b / max(b32, 1),
+    }
+
+
+def collect(smoke: bool = False, eps_llm: float = 0.1,
+            eps_app: float = 0.1) -> list:
+    from repro.apps.conv import Conv
+    from repro.apps.dwt import Dwt
+    from repro.apps.jacobi import Jacobi
+    from repro.apps.knn import Knn
+    from repro.apps.pca import Pca
+    from repro.apps.svm import Svm
+    from repro.core.tuning import tune
+    from repro.models.registry import build
+    from repro.tuning import ServeTuner, synthetic_calibration
+
+    entries = []
+    for arch in FAMILY_ARCHS:
+        model, cfg = build(arch, reduced=True)
+        sets = synthetic_calibration(
+            cfg,
+            n_sets=1 if smoke else 2,
+            prompts_per_set=2 if smoke else 4,
+            prompt_len=8 if smoke else 16)
+        tuner = ServeTuner(model, cfg, sets, eps=eps_llm,
+                           decode_steps=2 if smoke else 4,
+                           kv_groups=1 if smoke else 2,
+                           max_rounds=1 if smoke else 2)
+        entries.append(_llm_entry(arch, tuner.run()))
+        print(f"[bench_tuning] {arch}: {entries[-1]['fmt_hist']} "
+              f"kl={entries[-1]['final_kl']:.3g} "
+              f"bytes={entries[-1]['bytes_vs_f32']:.2f}x f32")
+
+    apps = [Jacobi(), Knn(), Pca(), Dwt(), Svm(), Conv()]
+    if smoke:
+        apps = [a for a in apps if a.name in SMOKE_APPS]
+    for app in apps:
+        res = tune(app, eps_app, n_input_sets=1 if smoke else 2,
+                   type_system="V2")
+        entries.append(_app_entry(res))
+        print(f"[bench_tuning] {app.name}: {entries[-1]['fmt_hist']} "
+              f"err={entries[-1]['final_kl']:.3g} "
+              f"bytes={entries[-1]['bytes_vs_f32']:.2f}x f32")
+    return entries
+
+
+def report(entries: list):
+    rows = []
+    for e in entries:
+        hist = " ".join(f"{k}:{v}" for k, v in sorted(e["fmt_hist"].items()))
+        rows.append((f"{e['bench']}_{e['shape']}", 0.0,
+                     f"bytes_vs_f32={e['bytes_vs_f32']:.3f};"
+                     f"err={e['final_kl']:.3g};hist={hist}"))
+    return rows

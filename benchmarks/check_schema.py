@@ -26,7 +26,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if ROOT not in sys.path:
     sys.path.insert(0, ROOT)
 
-FILES = ("BENCH_attention.json", "BENCH_kernels.json", "BENCH_serve.json")
+FILES = ("BENCH_attention.json", "BENCH_kernels.json", "BENCH_serve.json",
+         "BENCH_tuning.json")
 
 
 def _load(path: str) -> dict:
@@ -171,6 +172,37 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                         f"{name} ({label}): speculative rows without a "
                         f"positive accept_rate / steps_per_token < 1.0 / "
                         f"draft_fmt / speculate_k: {bad}")
+        if name == "BENCH_tuning.json":
+            # the autotuning rows are the paper's headline claim at serve
+            # scale: one row per model family and at least one app row,
+            # each carrying the format histogram and the bytes-vs-f32
+            # column (a tuned binding that stops shrinking below f32, or
+            # a family dropping out of the sweep, is a regression)
+            from benchmarks.bench_tuning import FAMILY_ARCHS
+            for label, doc in (("committed", committed), ("smoke", smoke)):
+                llm = [e for e in doc.get("entries", ())
+                       if e.get("bench") == "tuning_llm"]
+                missing = set(FAMILY_ARCHS) - {e.get("shape") for e in llm}
+                if missing:
+                    problems.append(
+                        f"{name} ({label}): model families missing from "
+                        f"the tuning sweep: {sorted(missing)}")
+                if not any(e.get("bench") == "tuning_app"
+                           for e in doc.get("entries", ())):
+                    problems.append(
+                        f"{name} ({label}): apps-tuner rows "
+                        f"(bench='tuning_app') missing from the sweep")
+                bad = [e.get("shape", "?") for e in doc.get("entries", ())
+                       if e.get("bench", "").startswith("tuning")
+                       and (not e.get("fmt_hist")
+                            or "final_kl" not in e
+                            or not e.get("bytes_vs_f32")
+                            or e.get("bytes_vs_f32") >= 1.0)]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): tuning rows without a format "
+                        f"histogram / final_kl / sub-f32 bytes_vs_f32: "
+                        f"{bad}")
     return problems
 
 

@@ -78,13 +78,11 @@ def compute(force: bool = False, quick: bool = False) -> Dict:
                 ctx = TPContext(res.formats)
                 app.run(ctx, inputs)
                 rep = energy.cost(ctx.stats)
+                # the binding itself ships as a versioned policy artifact
+                # (same schema the serve-time tuner emits; formats /
+                # precisions / sizes / final_error live in there)
                 entry[f"eps{eps:g}|{ts}"] = {
-                    "formats": {k: v.name for k, v in res.formats.items()},
-                    "precisions": res.precisions,
-                    "sizes": res.sizes,
-                    "needs_wide": res.needs_wide,
-                    "final_error": res.final_error,
-                    "n_evals": res.n_evals,
+                    "artifact": res.to_artifact(),
                     "stats": _stats_payload(ctx.stats),
                     "cost": _cost_payload(rep),
                     "relative": energy.relative(rep, base_cost),

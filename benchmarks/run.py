@@ -44,7 +44,8 @@ def run_smoke(args) -> None:
     Smoke entries are NOT the perf trajectory: without an explicit
     --out-dir they land in results/bench_smoke/, never clobbering the
     committed full-shape BENCH_*.json at the repo root."""
-    from benchmarks import bench_attention, bench_kernels, bench_serve
+    from benchmarks import (bench_attention, bench_kernels, bench_serve,
+                            bench_tuning)
 
     from repro.kernels import dispatch
 
@@ -53,9 +54,11 @@ def run_smoke(args) -> None:
     kern = bench_kernels.collect(256, 128, use_pallas=True,
                                  gemv_d=128, gemv_ff=256)
     serve = bench_serve.collect(smoke=True)
+    tuning = bench_tuning.collect(smoke=True)
     write_bench_json("attention", attn, args.timestamp, out_dir)
     write_bench_json("kernels", kern, args.timestamp, out_dir)
     write_bench_json("serve", serve, args.timestamp, out_dir)
+    write_bench_json("tuning", tuning, args.timestamp, out_dir)
     # hard fail unless EVERY legal registry spelling ran: the smoke is the
     # one place the full decode_impl/matmul_impl surface executes outside
     # pytest, so a spelling missing here means a backend landed without
@@ -74,6 +77,18 @@ def run_smoke(args) -> None:
     # the trajectory (the transient-prefill-memory win lives here)
     serve_impls = {e["impl"] for e in serve}
     assert {"paged", "flash_shmap+paged"} <= serve_impls, serve_impls
+    # the tuning bench must keep one row per model family + app rows, each
+    # with a strictly-sub-f32 byte footprint (the paper's thesis applied
+    # at serve scale -- losing a family means the tuner stopped finding
+    # narrow bindings there)
+    tuned_models = {e["shape"] for e in tuning
+                    if e["bench"] == "tuning_llm"}
+    missing_models = set(bench_tuning.FAMILY_ARCHS) - tuned_models
+    assert not missing_models, \
+        f"tuning bench lost model families: {missing_models}"
+    assert any(e["bench"] == "tuning_app" for e in tuning), tuning
+    fat = [e["shape"] for e in tuning if e["bytes_vs_f32"] >= 1.0]
+    assert not fat, f"tuned bindings not below f32 bytes: {fat}"
     print("[bench] smoke ok")
 
 
@@ -104,7 +119,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_attention, bench_fig4, bench_fig5,
                             bench_fig6, bench_fig7, bench_kernels, bench_llm,
-                            bench_serve, bench_table1, paper_results)
+                            bench_serve, bench_table1, bench_tuning,
+                            paper_results)
 
     cache = paper_results.compute(quick=args.quick)
 
@@ -119,10 +135,12 @@ def main(argv=None) -> None:
     attn_entries = bench_attention.collect(
         time_interpret=args.time_interpret)
     serve_entries = bench_serve.collect()
+    tuning_entries = bench_tuning.collect(smoke=args.quick)
     out_dir = args.out_dir or ROOT
     write_bench_json("attention", attn_entries, args.timestamp, out_dir)
     write_bench_json("kernels", kern_entries, args.timestamp, out_dir)
     write_bench_json("serve", serve_entries, args.timestamp, out_dir)
+    write_bench_json("tuning", tuning_entries, args.timestamp, out_dir)
 
     print("\n== CSV ==")
     print("name,us_per_call,derived")
@@ -136,6 +154,8 @@ def main(argv=None) -> None:
     for name, us, derived in bench_attention.report(entries=attn_entries):
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_serve.report(entries=serve_entries):
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in bench_tuning.report(entries=tuning_entries):
         print(f"{name},{us:.1f},{derived}")
     for name, us, derived in bench_llm.report():
         print(f"{name},{us:.1f},{derived}")

@@ -88,6 +88,18 @@ def cost(stats: OpStats) -> CostReport:
         breakdown={"fp": e_fp, "mem": e_mem, "other": e_other})
 
 
+def stream_energy_pj(n_bytes: int) -> float:
+    """Energy to stream ``n_bytes`` through the memory port.
+
+    Accesses move packed 32-bit words (the paper's vectorized-memory
+    premise), so narrow containers save energy exactly in proportion to
+    their byte footprint.  The serve-time tuner prices each candidate
+    binding with this: one decode step streams the weight store plus the
+    KV working set once.
+    """
+    return -(-int(n_bytes) // 4) * E_MEM_WORD
+
+
 def relative(tuned: CostReport, baseline: CostReport) -> Dict[str, float]:
     return {
         "cycles": tuned.cycles / baseline.cycles,

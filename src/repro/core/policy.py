@@ -4,6 +4,24 @@ A :class:`PrecisionPolicy` assigns an FP format to every tensor *role* in a
 model (weights, activations, KV cache, gradients, optimizer state, ...),
 mirroring the paper's per-variable format bindings after precision tuning.
 
+Role addressing is hierarchical: a binding may target a role globally
+(``"kv_cache"``) or at one decoder layer (``"layers.3.kv_cache"``), and
+:meth:`PrecisionPolicy.fmt` resolves by longest match::
+
+    "layers.3.kv_cache"  >  "kv_cache"  >  default_fmt
+
+Flat policies (the only spelling before the tuned-artifact redesign) keep
+working unchanged -- a mapping with no ``layers.*`` key resolves exactly as
+before.  Model code never threads a ``layer=`` argument through attention /
+FFN internals: the per-layer loops in ``models/transformer.py`` call
+:meth:`PrecisionPolicy.at_layer` once per layer and hand the flat resolved
+view down, so every downstream ``policy.fmt(role)`` lookup stays flat.
+
+Policies serialize to a versioned JSON **artifact**
+(:meth:`to_artifact` / :meth:`from_artifact`) -- the exchange format the
+serve-time tuner (``repro.tuning``) emits and ``serve.py --policy
+path.json`` loads.
+
 Two execution modes:
 
 ``native``
@@ -30,6 +48,9 @@ Roles used by the model substrate:
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import re
 from typing import Mapping, Optional
 
 import jax.numpy as jnp
@@ -45,6 +66,17 @@ DEFAULT_ROLES = (
     "router_probs", "kv_cache", "logits", "grad_comm", "optim_m", "optim_v",
     "master",
 )
+
+# hierarchical role keys: "layers.<decoder layer index>.<role>"
+_LAYERED_KEY = re.compile(r"^layers\.(\d+)\.(\w+)$")
+
+# the policy-artifact JSON exchange format (emitted by repro.tuning,
+# loaded by serve.py / dryrun.py via --policy PATH)
+ARTIFACT_SCHEMA = "repro.policy"
+ARTIFACT_VERSION = 1
+_ARTIFACT_REQUIRED = ("schema", "version", "mode", "default_fmt", "formats")
+_ARTIFACT_KEYS = frozenset(_ARTIFACT_REQUIRED) | {
+    "decode_impl", "matmul_impl", "provenance"}
 
 
 # Every legal attention-backend spelling (None = defer to the model config).
@@ -88,6 +120,15 @@ class PrecisionPolicy:
         validate_impl(self.decode_impl, what="PrecisionPolicy.decode_impl")
         validate_matmul_impl(self.matmul_impl,
                              what="PrecisionPolicy.matmul_impl")
+        for key in self.formats:
+            if "." not in key:
+                continue
+            m = _LAYERED_KEY.match(key)
+            if m is None or m.group(2) not in DEFAULT_ROLES:
+                raise ValueError(
+                    f"bad hierarchical role key {key!r}: expected "
+                    f"'layers.<index>.<role>' with a role from "
+                    f"{DEFAULT_ROLES}")
         if self.mode == "native":
             for role, fmt in self.formats.items():
                 if get_format(fmt).native_dtype is None:
@@ -96,19 +137,40 @@ class PrecisionPolicy:
                         f"mode='emulated'")
 
     # -- queries -------------------------------------------------------------
-    def fmt(self, role: str) -> FpFormat:
+    def fmt(self, role: str, layer: Optional[int] = None) -> FpFormat:
+        """Format for ``role``, longest-match resolution:
+        ``layers.{layer}.{role}`` > ``{role}`` > ``default_fmt``."""
+        if layer is not None:
+            f = self.formats.get(f"layers.{layer}.{role}")
+            if f is not None:
+                return get_format(f)
         return get_format(self.formats.get(role, self.default_fmt))
 
-    def dtype(self, role: str):
+    def dtype(self, role: str, layer: Optional[int] = None):
         """Storage dtype for ``role`` in native mode (f32 in emulated)."""
         if self.mode == "native":
-            return self.fmt(role).native_dtype
+            return self.fmt(role, layer).native_dtype
         return jnp.float32
 
+    def at_layer(self, layer: int) -> "PrecisionPolicy":
+        """The flat view of this policy at decoder layer ``layer``: every
+        ``layers.{layer}.{role}`` binding collapses onto its role, all other
+        ``layers.*`` bindings drop out.  Model code calls this once per
+        layer loop (trace time only) so attention/FFN internals keep their
+        flat ``policy.fmt(role)`` lookups.  Identity when the policy has no
+        hierarchical keys -- the pre-redesign fast path."""
+        if not any("." in k for k in self.formats):
+            return self
+        prefix = f"layers.{layer}."
+        f = {k: v for k, v in self.formats.items() if "." not in k}
+        f.update({k[len(prefix):]: v for k, v in self.formats.items()
+                  if k.startswith(prefix)})
+        return dataclasses.replace(self, formats=f)
+
     # -- tensor transforms ----------------------------------------------------
-    def store(self, x, role: str):
+    def store(self, x, role: str, layer: Optional[int] = None):
         """Bring ``x`` into the storage representation for ``role``."""
-        fmt = self.fmt(role)
+        fmt = self.fmt(role, layer)
         if self.mode == "native":
             return x.astype(fmt.native_dtype)
         return quantize(x, fmt)
@@ -131,11 +193,86 @@ class PrecisionPolicy:
 
     def describe(self) -> str:
         rows = [f"  {r:<14} -> {self.fmt(r).name}" for r in DEFAULT_ROLES]
+        layered = sorted((k for k in self.formats if "." in k),
+                         key=lambda k: (int(k.split(".")[1]), k))
+        rows += [f"  {k:<14} -> {get_format(self.formats[k]).name}"
+                 for k in layered]
         rows.append(f"  {'decode_impl':<14} -> "
                     f"{self.decode_impl or '(model default)'}")
         rows.append(f"  {'matmul_impl':<14} -> "
                     f"{self.matmul_impl or '(model default)'}")
         return f"PrecisionPolicy(mode={self.mode})\n" + "\n".join(rows)
+
+    # -- serialization ---------------------------------------------------------
+    def to_artifact(self, provenance: Optional[dict] = None) -> dict:
+        """The versioned JSON-serializable policy artifact.
+
+        ``provenance`` is carried verbatim (the tuner records eps, the
+        calibration digest, measured error and the byte/energy estimate
+        there); :meth:`from_artifact` ignores it when rebuilding the
+        policy, so provenance can grow fields without a version bump.
+        """
+        return {
+            "schema": ARTIFACT_SCHEMA,
+            "version": ARTIFACT_VERSION,
+            "mode": self.mode,
+            "default_fmt": self.default_fmt.name,
+            "formats": {k: get_format(v).name
+                        for k, v in sorted(self.formats.items())},
+            "decode_impl": self.decode_impl,
+            "matmul_impl": self.matmul_impl,
+            "provenance": dict(provenance or {}),
+        }
+
+    @classmethod
+    def from_artifact(cls, artifact) -> "PrecisionPolicy":
+        """Rebuild a policy from :meth:`to_artifact` output (a dict or a
+        path to a JSON file).  Strict by design: a non-artifact document,
+        an unknown version (skew between the tuner that wrote it and this
+        build), unknown top-level keys, or an unparsable format name all
+        raise ``ValueError`` -- a tuned policy must never load as
+        something silently different from what was tuned."""
+        doc = artifact
+        if isinstance(artifact, (str, os.PathLike)):
+            with open(artifact) as f:
+                try:
+                    doc = json.load(f)
+                except json.JSONDecodeError as e:
+                    raise ValueError(
+                        f"policy artifact {artifact}: not valid JSON "
+                        f"({e})") from e
+        if not isinstance(doc, dict):
+            raise ValueError(
+                f"policy artifact must be a JSON object, got "
+                f"{type(doc).__name__}")
+        if doc.get("schema") != ARTIFACT_SCHEMA:
+            raise ValueError(
+                f"not a policy artifact: schema={doc.get('schema')!r} "
+                f"(expected {ARTIFACT_SCHEMA!r})")
+        if doc.get("version") != ARTIFACT_VERSION:
+            raise ValueError(
+                f"policy artifact version skew: artifact has version "
+                f"{doc.get('version')!r}, this build reads "
+                f"{ARTIFACT_VERSION} -- re-run the tuner")
+        missing = [k for k in _ARTIFACT_REQUIRED if k not in doc]
+        if missing:
+            raise ValueError(f"policy artifact missing keys: {missing}")
+        unknown = set(doc) - _ARTIFACT_KEYS
+        if unknown:
+            raise ValueError(
+                f"policy artifact has unknown keys: {sorted(unknown)}")
+        formats = doc["formats"]
+        if not isinstance(formats, dict):
+            raise ValueError("policy artifact 'formats' must be a mapping")
+        try:
+            fmts = {k: get_format(v) for k, v in formats.items()}
+            default = get_format(doc["default_fmt"])
+        except KeyError as e:
+            raise ValueError(f"policy artifact names an unknown format: "
+                             f"{e}") from e
+        return cls(formats=fmts, mode=doc["mode"], default_fmt=default,
+                   decode_impl=doc.get("decode_impl"),
+                   matmul_impl=doc.get("matmul_impl"))
 
 
 def binary32_policy(mode: str = "native",

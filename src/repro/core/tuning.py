@@ -58,6 +58,43 @@ class TuneResult:
             out[f.name] = out.get(f.name, 0) + 1
         return out
 
+    def bytes_tuned(self) -> int:
+        """Storage bytes of every tuned variable at container width."""
+        return sum(self.sizes.get(v, 1) * (f.bits // 8)
+                   for v, f in self.formats.items())
+
+    def bytes_f32(self) -> int:
+        """The same variables in the all-binary32 baseline."""
+        return sum(self.sizes.get(v, 1) * 4 for v in self.formats)
+
+    def to_artifact(self) -> dict:
+        """The tuned binding as a versioned policy artifact -- the same
+        exchange format the serve-time tuner (``repro.tuning``) emits, so
+        ``launch/report.py`` and the benches read apps and serving
+        bindings through one loader (``PrecisionPolicy.from_artifact``).
+        App variables become flat policy keys; emulated mode, because the
+        apps run through the FlexFloat sanitizer, not native dtypes."""
+        # local import: policy.py imports this module's sibling formats,
+        # and the artifact type lives on the policy side
+        from .policy import PrecisionPolicy
+        policy = PrecisionPolicy(
+            formats=dict(self.formats), mode="emulated")
+        return policy.to_artifact(provenance={
+            "tuner": "repro.core.tuning.Tuner",
+            "app": self.app,
+            "eps": self.eps,
+            "type_system": self.type_system,
+            "precisions": dict(self.precisions),
+            "needs_wide": dict(self.needs_wide),
+            "sizes": dict(self.sizes),
+            "final_error": self.final_error,
+            "n_evals": self.n_evals,
+            "fmt_histogram": self.vars_by_format(),
+            "elements_by_format": self.elements_by_format(),
+            "bytes": self.bytes_tuned(),
+            "bytes_f32": self.bytes_f32(),
+        })
+
 
 def _fits_5bit_exponent(lo: float, hi: float) -> bool:
     # overflow is catastrophic (saturation/Inf); underflow into denormals is

@@ -100,8 +100,9 @@ class Engine:
                  pool_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  transport=None, stats: Optional[EngineStats] = None,
-                 speculative=None):
+                 speculative=None, calibration_tap=None):
         self.model, self.cfg, self.policy = model, cfg, policy
+        self.calibration_tap = calibration_tap
         self.params = params
         self.slots = slots
         self.capacity = capacity
@@ -135,9 +136,11 @@ class Engine:
 
         states = model.init_state(slots, page, policy)
         for li in self.attn_layers:
+            # each attention layer owns its own pool, so the KV format may
+            # vary by layer depth (tuned policies bind layers.{li}.kv_cache)
             states[li] = paged_cache.init_paged_cache(
                 slots, self.num_pages, page, self.pages_per_seq, cfg.n_kv,
-                cfg.head_dim, policy.dtype("kv_cache"))
+                cfg.head_dim, policy.dtype("kv_cache", layer=li))
         self.states = states
 
         self.transport = transport if transport is not None \
@@ -148,9 +151,10 @@ class Engine:
                                             self.transport, self.stats,
                                             chunk_tokens=chunk_tokens)
         self.decode_worker = DecodeWorker(model, policy)
-        self.kv_bytes_per_token = (
-            len(self.attn_layers) * cfg.n_kv * cfg.head_dim * 2
-            * np.dtype(policy.dtype("kv_cache")).itemsize)
+        self.kv_bytes_per_token = sum(
+            cfg.n_kv * cfg.head_dim * 2
+            * np.dtype(policy.dtype("kv_cache", layer=li)).itemsize
+            for li in self.attn_layers)
         self.spec = speculative
         if self.spec is not None:
             self.spec.setup(self)
@@ -263,6 +267,10 @@ class Engine:
                     admissions += 1
                     admitted_at[si] = admissions
                     self.stats.note_admitted(r.rid)
+                    if self.calibration_tap is not None:
+                        # live-traffic tap: admitted prompts feed the serve-
+                        # time precision tuner's calibration reservoir
+                        self.calibration_tap.observe(r.prompt)
                     task = PrefillTask(r, si, need)
                     task.pstates = self._init_pstates()
                     self.transport.begin(self, task)

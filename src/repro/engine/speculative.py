@@ -99,13 +99,12 @@ class SpeculativeDecoder:
                 f"{engine.capacity} exceeds the draft's sliding window "
                 f"{self.cfg.window}")
         self.n_layers = len(self.cfg.attn_pattern)
-        kv_dtype = self.policy.dtype("kv_cache")
         self.states = [
             paged_cache.init_paged_cache(
                 engine.slots, engine.num_pages, engine.page,
                 engine.pages_per_seq, self.cfg.n_kv, self.cfg.head_dim,
-                kv_dtype)
-            for _ in range(self.n_layers)]
+                self.policy.dtype("kv_cache", layer=li))
+            for li in range(self.n_layers)]
 
         k = self.k
         dmodel, dpolicy = self.model, self.policy

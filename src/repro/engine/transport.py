@@ -98,7 +98,7 @@ class StreamedTransport:
         for li in engine.attn_layers:
             src = paged_cache.init_paged_cache(
                 1, engine.pages_per_seq, engine.page, engine.pages_per_seq,
-                cfg.n_kv, cfg.head_dim, policy.dtype("kv_cache"))
+                cfg.n_kv, cfg.head_dim, policy.dtype("kv_cache", layer=li))
             src = paged_cache.set_block_tables(src, ident)
             self.src_states[li] = (jax.device_put(src, self.prefill_device)
                                    if self._cross else src)

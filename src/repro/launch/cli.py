@@ -15,13 +15,30 @@ from __future__ import annotations
 from repro.kernels import dispatch, paged_cache
 
 
-def add_backend_args(ap, *, include_pool: bool = True):
+def add_backend_args(ap, *, include_pool: bool = True,
+                     include_policy: bool = True):
     """Add the backend flags to ``ap`` (argparse validates via choices).
 
     include_pool: also add the page-pool sizing flags (serving loops);
     dry-run compiles cells against contiguous state stand-ins and skips
     them.
+    include_policy: also add the shared ``--policy`` spec (registry name
+    or tuned-artifact path); the tuning CLI itself omits it.
+
+    ``--policy`` accepts an artifact *path* next to the per-knob flags,
+    but an artifact pins its knobs: conflicting ``--decode-impl`` /
+    ``--matmul-impl`` / ``--kv-fmt`` overrides are rejected loudly at
+    resolve time (``repro.tuning.artifact.load_policy``), never silently
+    merged.
     """
+    if include_policy:
+        ap.add_argument("--policy", default="transprecision",
+                        help="precision policy: a registry name "
+                             "(binary32 / transprecision) or a path to a "
+                             "tuned policy artifact JSON written by "
+                             "python -m repro.tuning (loaded via "
+                             "PrecisionPolicy.from_artifact; per-layer "
+                             "kv_cache bindings included)")
     ap.add_argument("--decode-impl", default=None,
                     choices=list(dispatch.legal_impls()),
                     help="attention backend (default: fused path on TPU, "

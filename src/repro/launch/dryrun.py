@@ -23,7 +23,8 @@ import numpy as np   # noqa: E402
 from repro import compat, configs              # noqa: E402
 from repro.configs.shapes import (ALL_SHAPES, SHAPES, runnable,  # noqa: E402
                                   skip_reason)
-from repro.core.policy import get_policy       # noqa: E402
+from repro.tuning.artifact import (is_artifact_spec,  # noqa: E402
+                                   load_policy)
 from repro.launch import hlo_analysis          # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.sharding import (batch_spec, scalar_sharding,  # noqa: E402
@@ -112,8 +113,9 @@ def input_specs(arch: str, shape_name: str, mesh, policy,
         pps = -(-spec.seq_len // page)
         states = jax.eval_shape(lambda: [
             _pc.init_paged_cache(B, B * pps, page, pps, cfg.n_kv,
-                                 cfg.head_dim, policy.dtype("kv_cache"))
-            for _ in cfg.attn_pattern])
+                                 cfg.head_dim,
+                                 policy.dtype("kv_cache", layer=li))
+            for li, _ in enumerate(cfg.attn_pattern)])
         s_sh = tree_state_shardings(states, mesh, B)
         states = jax.tree_util.tree_map(
             lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
@@ -202,11 +204,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # shape-pinned overrides (e.g. decode_impl for the *_flash variants)
     cfg_overrides = {**spec.cfg_overrides(), **(cfg_overrides or {})}
 
-    if kv_fmt is not None:
-        from repro.core.formats import get_format as _gf
-        policy = get_policy(policy_name, kv_fmt=_gf(kv_fmt))
-    else:
-        policy = get_policy(policy_name)
+    # registry name or tuned-artifact path, same resolver as serve.py
+    # (an artifact pins its formats, so kv_fmt conflicts raise here)
+    policy = load_policy(policy_name, kv_fmt=kv_fmt)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     t0 = time.time()
@@ -304,8 +304,6 @@ def main():
     ap = argparse.ArgumentParser(description="multi-pod dry-run")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--policy", default="transprecision",
-                    choices=["transprecision", "binary32"])
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
@@ -338,6 +336,14 @@ def main():
         overrides["decode_impl"] = args.decode_impl
     if args.matmul_impl is not None:
         overrides["matmul_impl"] = args.matmul_impl
+    if is_artifact_spec(args.policy):
+        # fail fast (before the sweep) on per-knob overrides that
+        # conflict with what the artifact pins
+        load_policy(args.policy, decode_impl=args.decode_impl,
+                    matmul_impl=args.matmul_impl, kv_fmt=args.kv_fmt)
+        policy_tag = os.path.splitext(os.path.basename(args.policy))[0]
+    else:
+        policy_tag = args.policy
 
     archs = configs.ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
@@ -350,7 +356,7 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 tag = (f"{arch}__{shape}__{'multi' if mp else 'single'}"
-                       f"__{args.policy}"
+                       f"__{policy_tag}"
                        + (f"__{args.tag}" if args.tag else ""))
                 fn = os.path.join(args.out, tag + ".json")
                 if args.skip_existing and os.path.exists(fn):

@@ -1,11 +1,16 @@
 """Regenerate the EXPERIMENTS.md roofline/dry-run tables from the JSON
-results.  ``python -m repro.launch.report [results/dryrun]``"""
+results, plus the tuned-policy summary (apps tuning cache and any
+committed serve artifacts under results/tuned/).
+``python -m repro.launch.report [results/dryrun]``"""
 from __future__ import annotations
 
 import glob
 import json
 import os
 import sys
+
+TUNING_CACHE = "results/paper/tuning_cache.json"
+TUNED_DIR = "results/tuned"
 
 
 def load(dirname, mesh, policy="transprecision", tag=None):
@@ -73,6 +78,50 @@ def dryrun_table(cells) -> str:
     return hdr + "\n".join(rows)
 
 
+def _fmt_hist(policy) -> str:
+    hist = {}
+    for f in policy.formats.values():
+        hist[f.name] = hist.get(f.name, 0) + 1
+    return " ".join(f"{k}:{v}" for k, v in sorted(hist.items()))
+
+
+def tuning_table() -> str:
+    """Tuned bindings (apps cache + serve artifacts), read through the
+    same loader ``serve.py --policy`` uses: every row below round-trips
+    ``PrecisionPolicy.from_artifact``, so a binding that prints here is a
+    binding that serves."""
+    from repro.core.policy import PrecisionPolicy
+
+    hdr = ("| binding | mode | formats | error | vs f32 |\n"
+           "|---|---|---|---|---|\n")
+    rows = []
+    if os.path.exists(TUNING_CACHE):
+        with open(TUNING_CACHE) as f:
+            cache = json.load(f)
+        for app, entry in sorted(cache.get("apps", {}).items()):
+            for key, v in sorted(entry.items()):
+                if not (isinstance(v, dict) and "artifact" in v):
+                    continue
+                policy = PrecisionPolicy.from_artifact(v["artifact"])
+                prov = v["artifact"]["provenance"]
+                rows.append(
+                    f"| {app} {key} | {policy.mode} | "
+                    f"{_fmt_hist(policy)} | "
+                    f"{prov['final_error']:.2e} | "
+                    f"{prov['bytes'] / max(prov['bytes_f32'], 1):.2f}x |")
+    for fn in sorted(glob.glob(os.path.join(TUNED_DIR, "*.json"))):
+        from repro.tuning.artifact import load_policy
+        policy = load_policy(fn)
+        with open(fn) as f:
+            prov = json.load(f).get("provenance", {})
+        rows.append(
+            f"| {os.path.basename(fn)} | {policy.mode} | "
+            f"{_fmt_hist(policy)} | "
+            f"{prov.get('final_kl', float('nan')):.2e} | "
+            f"{prov.get('bytes_vs_f32', float('nan')):.2f}x |")
+    return hdr + "\n".join(rows) if rows else ""
+
+
 def main():
     dirname = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
     for mesh in ("single", "multi"):
@@ -84,6 +133,10 @@ def main():
         print(roofline_table(cells))
         print()
         print(dryrun_table(cells))
+    tuned = tuning_table()
+    if tuned:
+        print("\n### tuned precision bindings\n")
+        print(tuned)
 
 
 if __name__ == "__main__":

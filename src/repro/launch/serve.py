@@ -32,6 +32,7 @@ out of one block-table page pool:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -39,6 +40,7 @@ import numpy as np
 from repro import configs
 from repro.core.formats import BINARY8
 from repro.core.policy import get_policy
+from repro.tuning.artifact import load_policy
 from repro.engine import (ColocatedTransport, Engine, EngineStats, Request,
                           SpeculativeDecoder, StreamedTransport)
 from repro.kernels import dispatch
@@ -79,7 +81,6 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
-    ap.add_argument("--policy", default="transprecision")
     add_backend_args(ap, include_pool=True)
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="tokens prefilled per engine step (default: one "
@@ -97,10 +98,16 @@ def main(argv=None):
 
     # the policy-level override wins inside attention.decode_impl(), so no
     # config rewrite / model rebuild is needed; with no explicit flag,
-    # serving prefers the fused path wherever a TPU backend is present
-    impl = args.decode_impl or dispatch.default_serving_impl()
-    policy = get_policy(args.policy, decode_impl=impl,
-                        matmul_impl=args.matmul_impl)
+    # serving prefers the fused path wherever a TPU backend is present.
+    # --policy accepts a registry name or a tuned-artifact path; an
+    # artifact pins its knobs, so only the *explicit* flags participate in
+    # conflict checking and the serving default fills in afterwards
+    policy = load_policy(args.policy, decode_impl=args.decode_impl,
+                         matmul_impl=args.matmul_impl)
+    if policy.decode_impl is None:
+        policy = dataclasses.replace(
+            policy, decode_impl=dispatch.default_serving_impl())
+    impl = policy.decode_impl
     model, cfg = build(args.arch, reduced=args.reduced)
     effective_impl = impl or cfg.decode_impl
     if args.disaggregate and len(dispatch.canonicalize_impl(
@@ -111,7 +118,7 @@ def main(argv=None):
             f"sharded across the mesh -- use a base spelling "
             f"(xla / flash_pallas / paged)")
     params = model.init_params(jax.random.PRNGKey(0), policy)
-    if (args.matmul_impl or cfg.matmul_impl) == "qmm_pallas":
+    if (policy.matmul_impl or cfg.matmul_impl) == "qmm_pallas":
         # the packed parameter store is built ONCE at load time; every
         # decode step then reads container-width weight bytes
         packed = qparams.encode_params(params, policy)
@@ -145,10 +152,14 @@ def main(argv=None):
     st = engine.pool.stats()
     total_tokens = sum(len(r.generated) for r in reqs)
     dt = max(s["elapsed_s"], 1e-9)
+    kv_fmts = sorted({policy.fmt("kv_cache", layer=li).name
+                      for li in range(len(cfg.attn_pattern))})
+    kv_desc = kv_fmts[0] if len(kv_fmts) == 1 \
+        else "per-layer[" + ",".join(kv_fmts) + "]"
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens, "
           f"{engine.decode_steps} batched steps, "
           f"{total_tokens/dt:.1f} tok/s "
-          f"(kv format: {policy.fmt('kv_cache').name}, "
+          f"(kv format: {kv_desc}, "
           f"decode: {effective_impl}, "
           f"matmul: {policy.matmul_impl or cfg.matmul_impl}, "
           f"page_size: {engine.page}, pool: {st['peak_pages_used']}/"

@@ -332,12 +332,25 @@ def _ffn_apply_fused(p, x, policy, cfg):
 # embedding + LM head (chunked cross-entropy)
 # ---------------------------------------------------------------------------
 
+def residual_add(x, y):
+    """Promotion-safe residual add.  8-bit float activations refuse
+    implicit promotion, so a mixed-width residual stream (e.g. a scaled
+    f32 embedding plus a narrow attention branch) adds through f32
+    explicitly -- the same result promotion produced for >=16-bit
+    pairs."""
+    if x.dtype == y.dtype:
+        return x + y
+    return x.astype(jnp.float32) + y.astype(jnp.float32)
+
+
 def embed_lookup(table, tokens, policy, scale=False):
     e = jnp.take(table, tokens, axis=0)
     e = e.astype(policy.dtype("act") if policy.mode == "native"
                  else jnp.float32)
     if scale:
-        e = e * np.sqrt(table.shape[1]).astype(np.float32)
+        # explicit f32: same result promotion gave for >=16-bit acts, and
+        # 8-bit floats refuse implicit promotion entirely
+        e = e.astype(jnp.float32) * np.sqrt(table.shape[1]).astype(np.float32)
     return act_cast(e, policy) if policy.mode == "emulated" else e
 
 

@@ -77,6 +77,20 @@ def param_role(path) -> Optional[str]:
     return ROLE_BY_NAME.get(name) if name is not None else None
 
 
+def param_layer(path) -> Optional[int]:
+    """Decoder layer index of a param leaf (its position under
+    ``params["layers"]``), or None for non-layer leaves (embed / head /
+    final_norm / encoder) -- the index hierarchical policy keys
+    (``layers.{li}.attn_w``) resolve against."""
+    entries = list(path)
+    for i, p in enumerate(entries[:-1]):
+        if hasattr(p, "key") and str(p.key) == "layers":
+            nxt = entries[i + 1]
+            if hasattr(nxt, "idx"):
+                return int(nxt.idx)
+    return None
+
+
 def encode_params(params, policy: PrecisionPolicy, *,
                   roles: tuple = PACK_ROLES):
     """Pack every matmul-weight leaf into its policy-role (e, m) container.
@@ -93,7 +107,7 @@ def encode_params(params, policy: PrecisionPolicy, *,
         if role is None or role not in roles:
             return leaf
         return QTensor.quantize(jnp.asarray(leaf, jnp.float32),
-                                policy.fmt(role))
+                                policy.fmt(role, layer=param_layer(path)))
     return jax.tree_util.tree_map_with_path(enc, params)
 
 

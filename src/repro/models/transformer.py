@@ -21,7 +21,8 @@ from . import rglru as rglru_mod
 from . import rwkv6 as rwkv_mod
 from .base import ModelConfig
 from .layers import (apply_norm, dense_init, embed_lookup, ffn_apply,
-                     ffn_init, lm_head_loss, lm_logits, norm_init)
+                     ffn_init, lm_head_loss, lm_logits, norm_init,
+                     residual_add)
 
 
 class Model:
@@ -43,6 +44,10 @@ class Model:
         wdt = policy.dtype("attn_w")
         fdt = policy.dtype("ffn_w")
         edt = policy.dtype("embed_w")
+        # decoder layers honor per-layer bindings ("layers.{li}.attn_w" etc.)
+        # so a tuned policy's storage dtypes land at init time, matching what
+        # quantizing a binary32 master checkpoint would produce (both are
+        # f32 -> narrow RNE casts of the same values)
         keys = jax.random.split(rng, cfg.n_layers + cfg.encoder_layers + 3)
         params: Dict[str, Any] = {
             "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), scale=1.0,
@@ -54,30 +59,34 @@ class Model:
             params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab),
                                         dtype=edt)
         for li, kind in enumerate(cfg.attn_pattern):
+            lp = policy.at_layer(li)
+            lwdt = lp.dtype("attn_w")
+            lfdt = lp.dtype("ffn_w")
             k = keys[2 + li]
             ks = jax.random.split(k, 4)
             layer: Dict[str, Any] = {"norm1": norm_init(cfg.d_model,
                                                          cfg.norm)}
             if kind == "attn":
-                layer["mix"] = attn.attn_init(ks[0], cfg, wdt)
+                layer["mix"] = attn.attn_init(ks[0], cfg, lwdt)
             elif kind == "rwkv":
-                layer["mix"] = rwkv_mod.rwkv_init(ks[0], cfg, wdt)
+                layer["mix"] = rwkv_mod.rwkv_init(ks[0], cfg, lwdt)
             elif kind == "rglru":
-                layer["mix"] = rglru_mod.rglru_init(ks[0], cfg, fdt)
+                layer["mix"] = rglru_mod.rglru_init(ks[0], cfg, lfdt)
             else:
                 raise ValueError(kind)
             if kind != "rwkv":  # rwkv channel-mix lives inside its params
                 layer["norm2"] = norm_init(cfg.d_model, cfg.norm)
                 if cfg.moe_experts:
-                    layer["ffn"] = moe_mod.moe_init(ks[1], cfg, fdt)
+                    layer["ffn"] = moe_mod.moe_init(ks[1], cfg, lfdt)
                 else:
                     layer["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff,
-                                            cfg.gated_ffn, cfg.use_bias, fdt)
+                                            cfg.gated_ffn, cfg.use_bias,
+                                            lfdt)
             else:
                 layer["norm2"] = norm_init(cfg.d_model, cfg.norm)
             if cfg.encoder_layers:  # decoder cross-attention
                 layer["norm_x"] = norm_init(cfg.d_model, cfg.norm)
-                layer["xattn"] = attn.attn_init(ks[2], cfg, wdt)
+                layer["xattn"] = attn.attn_init(ks[2], cfg, lwdt)
             params["layers"].append(layer)
 
         if cfg.encoder_layers:
@@ -102,9 +111,9 @@ class Model:
         for layer in params["encoder"]:
             h = apply_norm(x, layer["norm1"], policy, cfg.norm)
             a, _ = attn.mha(layer["mix"], h, cfg, policy, causal=False)
-            x = x + a
+            x = residual_add(x, a)
             h = apply_norm(x, layer["norm2"], policy, cfg.norm)
-            x = x + ffn_apply(layer["ffn"], h, policy, cfg)
+            x = residual_add(x, ffn_apply(layer["ffn"], h, policy, cfg))
         return x
 
     def _layer(self, layer, kind, x, policy, *, prefix_len=0, state=None,
@@ -124,12 +133,12 @@ class Model:
         else:
             a, new_state = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
                                                  state=state)
-        x = x + a
+        x = residual_add(x, a)
         if enc_out is not None:
             h = apply_norm(x, layer["norm_x"], policy, cfg.norm)
             a, _ = attn.mha(layer["xattn"], h, cfg, policy,
                             kv_source=enc_out)
-            x = x + a
+            x = residual_add(x, a)
         h = apply_norm(x, layer["norm2"], policy, cfg.norm)
         if kind == "rwkv":
             f, new_state = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
@@ -138,7 +147,7 @@ class Model:
             f, aux = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
         else:
             f = ffn_apply(layer["ffn"], h, policy, cfg)
-        return x + f, new_state, aux
+        return residual_add(x, f), new_state, aux
 
     def _backbone(self, params, x, policy, *, prefix_len=0, states=None,
                   enc_out=None, chunk=None, positions=None, training=False):
@@ -149,9 +158,10 @@ class Model:
         for li, layer in enumerate(params["layers"]):
             st = states[li] if states is not None else None
             kind = cfg.attn_pattern[li]
+            lp = policy.at_layer(li)
 
-            def run(xx, stt, layer=layer, kind=kind):
-                return self._layer(layer, kind, xx, policy,
+            def run(xx, stt, layer=layer, kind=kind, lp=lp):
+                return self._layer(layer, kind, xx, lp,
                                    prefix_len=prefix_len, state=stt,
                                    enc_out=enc_out, chunk=chunk,
                                    positions=positions)
@@ -203,16 +213,17 @@ class Model:
     def init_state(self, batch_size, capacity, policy):
         cfg = self.cfg
         states = []
-        for kind in cfg.attn_pattern:
+        for li, kind in enumerate(cfg.attn_pattern):
+            lp = policy.at_layer(li)
             if kind == "attn":
                 states.append(attn.init_cache(cfg, batch_size, capacity,
-                                              policy, layer_kinds=("attn",))[0])
+                                              lp, layer_kinds=("attn",))[0])
             elif kind == "rwkv":
                 states.append(rwkv_mod.rwkv_init_state(cfg, batch_size,
-                                                       policy))
+                                                       lp))
             else:
                 states.append(rglru_mod.rglru_init_state(cfg, batch_size,
-                                                         policy))
+                                                         lp))
         return states
 
     def prefill(self, params, batch, policy: PrecisionPolicy,
@@ -239,37 +250,39 @@ class Model:
         # run backbone while also building decode states
         states = []
         aux = jnp.zeros((), jnp.float32)
-        for kind, layer in zip(cfg.attn_pattern, params["layers"]):
-            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+        for li, (kind, layer) in enumerate(zip(cfg.attn_pattern,
+                                               params["layers"])):
+            lp = policy.at_layer(li)
+            h = apply_norm(x, layer["norm1"], lp, cfg.norm)
             if kind == "attn":
-                a, st = attn.prefill_to_cache(layer["mix"], h, cfg, policy,
+                a, st = attn.prefill_to_cache(layer["mix"], h, cfg, lp,
                                               capacity,
                                               prefix_len=prefix_len,
                                               chunk=chunk)
             elif kind == "rwkv":
-                st0 = rwkv_mod.rwkv_init_state(cfg, B, policy)
-                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, policy,
+                st0 = rwkv_mod.rwkv_init_state(cfg, B, lp)
+                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, lp,
                                           state=st0)
             else:
-                st0 = rglru_mod.rglru_init_state(cfg, B, policy)
-                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
+                st0 = rglru_mod.rglru_init_state(cfg, B, lp)
+                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, lp,
                                               state=st0)
-            x = x + a
+            x = residual_add(x, a)
             if enc_out is not None:
-                hx = apply_norm(x, layer["norm_x"], policy, cfg.norm)
-                a, _ = attn.mha(layer["xattn"], hx, cfg, policy,
+                hx = apply_norm(x, layer["norm_x"], lp, cfg.norm)
+                a, _ = attn.mha(layer["xattn"], hx, cfg, lp,
                                 kv_source=enc_out)
-                x = x + a
-            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+                x = residual_add(x, a)
+            h = apply_norm(x, layer["norm2"], lp, cfg.norm)
             if kind == "rwkv":
-                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
+                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, lp,
                                              state=st)
             elif cfg.moe_experts:
-                f, a2 = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+                f, a2 = moe_mod.moe_apply(layer["ffn"], h, cfg, lp)
                 aux = aux + a2
             else:
-                f = ffn_apply(layer["ffn"], h, policy, cfg)
-            x = x + f
+                f = ffn_apply(layer["ffn"], h, lp, cfg)
+            x = residual_add(x, f)
             states.append(st)
         x = apply_norm(x, params["final_norm"], policy, cfg.norm)
         logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
@@ -304,31 +317,32 @@ class Model:
         new_pstates = list(pstates)
         for li, (kind, layer) in enumerate(zip(cfg.attn_pattern,
                                                params["layers"])):
-            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
+            lp = policy.at_layer(li)
+            h = apply_norm(x, layer["norm1"], lp, cfg.norm)
             if kind == "attn":
                 a, st = attn.prefill_paged_chunk(
-                    layer["mix"], h, cfg, policy, states[li], slot,
+                    layer["mix"], h, cfg, lp, states[li], slot,
                     q_offset, chunk=chunk)
                 new_states[li] = st
             elif kind == "rwkv":
-                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, policy,
+                a, st = rwkv_mod.time_mix(layer["mix"], h, cfg, lp,
                                           state=pstates[li])
                 new_pstates[li] = st
             else:
-                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, policy,
+                a, st = rglru_mod.rglru_block(layer["mix"], h, cfg, lp,
                                               state=pstates[li])
                 new_pstates[li] = st
-            x = x + a
-            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            x = residual_add(x, a)
+            h = apply_norm(x, layer["norm2"], lp, cfg.norm)
             if kind == "rwkv":
-                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, policy,
+                f, st = rwkv_mod.channel_mix(layer["mix"], h, cfg, lp,
                                              state=new_pstates[li])
                 new_pstates[li] = st
             elif cfg.moe_experts:
-                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, lp)
             else:
-                f = ffn_apply(layer["ffn"], h, policy, cfg)
-            x = x + f
+                f = ffn_apply(layer["ffn"], h, lp, cfg)
+            x = residual_add(x, f)
         x = apply_norm(x, params["final_norm"], policy, cfg.norm)
         logits = lm_logits(x[:, -1:, :], self._head_w(params), policy)
         return logits, new_states, new_pstates
@@ -369,17 +383,18 @@ class Model:
                          scale=cfg.embed_scale)
         new_states = list(states)
         for li, layer in enumerate(params["layers"]):
-            h = apply_norm(x, layer["norm1"], policy, cfg.norm)
-            a, st = attn.verify_paged(layer["mix"], h, cfg, policy,
+            lp = policy.at_layer(li)
+            h = apply_norm(x, layer["norm1"], lp, cfg.norm)
+            a, st = attn.verify_paged(layer["mix"], h, cfg, lp,
                                       states[li])
             new_states[li] = st
-            x = x + a
-            h = apply_norm(x, layer["norm2"], policy, cfg.norm)
+            x = residual_add(x, a)
+            h = apply_norm(x, layer["norm2"], lp, cfg.norm)
             if cfg.moe_experts:
-                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, policy)
+                f, _ = moe_mod.moe_apply(layer["ffn"], h, cfg, lp)
             else:
-                f = ffn_apply(layer["ffn"], h, policy, cfg)
-            x = x + f
+                f = ffn_apply(layer["ffn"], h, lp, cfg)
+            x = residual_add(x, f)
         x = apply_norm(x, params["final_norm"], policy, cfg.norm)
         logits = lm_logits(x, self._head_w(params), policy)
         return logits, new_states

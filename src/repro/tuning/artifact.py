@@ -1,0 +1,80 @@
+"""Policy-artifact helpers shared by every consumer of ``--policy``.
+
+``launch/serve.py``, ``launch/dryrun.py`` and ``launch/report.py`` all
+resolve a policy *spec* -- either a registry name (``binary32`` /
+``transprecision``) or a path to a tuned artifact JSON -- through
+:func:`load_policy`, so a tuned binding loads identically everywhere the
+hand-constructed ones do.
+
+Override semantics are strict by design: a named policy accepts the
+per-knob flags (they parameterize the constructor, as before), but an
+artifact *pins* its knobs -- passing a conflicting ``--decode-impl`` /
+``--matmul-impl`` / ``--kv-fmt`` next to ``--policy path.json`` raises
+instead of silently serving something that was never tuned.  Knobs the
+artifact leaves unset (``null``) may still be filled in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+from repro.core.formats import get_format
+from repro.core.policy import POLICIES, PrecisionPolicy, get_policy
+
+
+def is_artifact_spec(spec) -> bool:
+    """True when a ``--policy`` value names an artifact file, not a
+    registry policy."""
+    if not isinstance(spec, (str, os.PathLike)):
+        return False
+    s = os.fspath(spec)
+    return s not in POLICIES and (s.endswith(".json") or os.sep in s
+                                  or os.path.exists(s))
+
+
+def load_policy(spec, *, decode_impl: Optional[str] = None,
+                matmul_impl: Optional[str] = None,
+                kv_fmt=None) -> PrecisionPolicy:
+    """Resolve a ``--policy`` spec (registry name or artifact path)."""
+    if not is_artifact_spec(spec):
+        if spec not in POLICIES:
+            raise ValueError(
+                f"--policy {spec!r}: neither a named policy "
+                f"({sorted(POLICIES)}) nor a policy-artifact path")
+        kw = {}
+        if kv_fmt is not None:
+            kw["kv_fmt"] = get_format(kv_fmt)
+        return get_policy(spec, decode_impl=decode_impl,
+                          matmul_impl=matmul_impl, **kw)
+
+    policy = PrecisionPolicy.from_artifact(spec)
+    if kv_fmt is not None:
+        raise ValueError(
+            f"--kv-fmt conflicts with --policy {spec}: the artifact pins "
+            f"every format binding (including per-layer kv_cache); re-run "
+            f"the tuner instead of overriding")
+    for knob, flag in (("decode_impl", decode_impl),
+                       ("matmul_impl", matmul_impl)):
+        pinned = getattr(policy, knob)
+        if flag is not None and pinned is not None and flag != pinned:
+            raise ValueError(
+                f"--{knob.replace('_', '-')}={flag} conflicts with "
+                f"--policy {spec}: the artifact pins {knob}={pinned!r} "
+                f"(tuned bindings are only valid on the backend they were "
+                f"verified on)")
+        if flag is not None and pinned is None:
+            policy = dataclasses.replace(policy, **{knob: flag})
+    return policy
+
+
+def save_artifact(artifact: dict, path) -> None:
+    """Write an artifact dict as canonical JSON (round-trip checked)."""
+    PrecisionPolicy.from_artifact(artifact)  # refuse to write garbage
+    d = os.path.dirname(os.fspath(path))
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=True)
+        f.write("\n")

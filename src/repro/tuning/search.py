@@ -1,0 +1,349 @@
+"""Serve-time precision search: the paper's tuning flow at LLM scale.
+
+``core/tuning.py::Tuner`` binds per-variable (e, m) formats for the
+paper's embedded kernels by coordinate descent under a relative-RMS-error
+constraint.  :class:`ServeTuner` is the same three-phase structure lifted
+to a serving model:
+
+  * **variables** are policy bindings instead of scalars: the global
+    weight/activation roles (``embed_w`` / ``attn_w`` / ``ffn_w`` /
+    ``act`` / ``attn_probs``) plus the KV cache *per depth group* --
+    hierarchical ``layers.{li}.kv_cache`` keys, so shallow layers may keep
+    a wider cache format than deep ones;
+  * **the search ladder** is the paper's V2 type system restricted to the
+    native points (binary8 -> binary16alt -> binary16 -> binary32): the
+    candidate policies run in native mode, so the binding the search
+    measures is bit-identical to the binding serving executes -- no
+    emulation gap to re-verify;
+  * **the constraint** is distributional, not bitwise: mean KL divergence
+    of the candidate's next-token distribution from the binary32
+    reference, measured at the prefill boundary and over ``decode_steps``
+    teacher-forced decode positions (decode positions are what make the
+    KV-cache formats observable at all -- prefill logits never read the
+    cache);
+  * **phase 1** tunes each calibration set independently (binary search
+    down the ladder per variable, coordinate-descent rounds); **phase 2**
+    joins by widest-per-variable; **verification** re-checks the joined
+    binding on every set and greedily escalates the single most helpful
+    variable until the budget holds -- exactly the apps tuner's shape.
+
+Every accepted candidate is priced by the platform's memory-energy model
+(``core/energy.py``): the result records weight bytes, KV bytes/token and
+the streamed decode energy against the all-binary32 baseline, so the
+artifact carries the byte/energy win next to the measured error.
+
+Reference == baseline by construction: the all-binary32 native candidate
+*is* the reference run, so the search starts from KL = 0 and every
+narrowing is measured against the exact serving numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy
+from repro.core.formats import (BINARY8, BINARY16, BINARY16ALT, BINARY32,
+                                FpFormat)
+from repro.core.policy import PrecisionPolicy
+from .calibrate import CalibrationSet, digest_of
+
+# the native points of the paper's V2 type system, narrowest first -- the
+# escalation chain binary8 -> binary16alt -> binary16 -> binary32 matches
+# core/tuning.py::_ESCALATION["V2"]
+LADDER: Tuple[FpFormat, ...] = (BINARY8, BINARY16ALT, BINARY16, BINARY32)
+_WIDEST = len(LADDER) - 1
+
+# roles the search binds globally; everything else (router/norm/logits/
+# softmax accumulators) stays binary32 -- the paper's "range-critical
+# variables at binary32" rule applied a priori
+WEIGHT_ROLES = ("embed_w", "attn_w", "ffn_w")
+ACT_ROLES = ("act", "attn_probs")
+_PROTECTED = {"router_w": BINARY32, "norm_w": BINARY32,
+              "router_probs": BINARY32, "logits": BINARY32}
+
+
+@dataclasses.dataclass
+class ServeTuneResult:
+    """Outcome of one ServeTuner run (everything the artifact records)."""
+    arch: str
+    eps: float                       # KL budget
+    formats: Dict[str, FpFormat]     # searched policy keys -> final format
+    final_kl: float
+    n_evals: int
+    calibration: str                 # joint digest of the input sets
+    decode_steps: int
+    weight_bytes: int
+    weight_bytes_f32: int
+    kv_bytes_per_token: int
+    kv_bytes_per_token_f32: int
+    energy_pj_per_token: float
+    energy_f32_pj_per_token: float
+    context_tokens: int              # KV footprint the energy is priced at
+    decode_impl: Optional[str] = None
+    matmul_impl: Optional[str] = None
+
+    def fmt_histogram(self) -> Dict[str, int]:
+        """Searched variables per final format (Table-1-style column)."""
+        out: Dict[str, int] = {}
+        for f in self.formats.values():
+            out[f.name] = out.get(f.name, 0) + 1
+        return out
+
+    def to_policy(self) -> PrecisionPolicy:
+        return PrecisionPolicy(
+            formats={**_PROTECTED, **self.formats}, mode="native",
+            default_fmt=BINARY32, decode_impl=self.decode_impl,
+            matmul_impl=self.matmul_impl)
+
+    def to_artifact(self) -> dict:
+        total = self.weight_bytes + self.kv_bytes_per_token
+        total_f32 = self.weight_bytes_f32 + self.kv_bytes_per_token_f32
+        return self.to_policy().to_artifact(provenance={
+            "tuner": "repro.tuning.search.ServeTuner",
+            "arch": self.arch,
+            "eps": self.eps,
+            "final_kl": self.final_kl,
+            "n_evals": self.n_evals,
+            "calibration": self.calibration,
+            "decode_steps": self.decode_steps,
+            "fmt_histogram": self.fmt_histogram(),
+            "weight_bytes": self.weight_bytes,
+            "weight_bytes_f32": self.weight_bytes_f32,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "kv_bytes_per_token_f32": self.kv_bytes_per_token_f32,
+            "bytes_vs_f32": total / max(total_f32, 1),
+            "energy_pj_per_token": self.energy_pj_per_token,
+            "energy_f32_pj_per_token": self.energy_f32_pj_per_token,
+            "context_tokens": self.context_tokens,
+        })
+
+
+def kv_layer_groups(cfg, kv_groups: int) -> List[List[int]]:
+    """Contiguous depth groups of decoder layers for per-group KV binding.
+
+    Every decoder layer stores *some* per-token state under the
+    ``kv_cache`` role (attention KV proper, rwkv / rglru recurrent state),
+    so grouping runs over all of ``attn_pattern``.
+    """
+    n = len(cfg.attn_pattern)
+    g = max(1, min(kv_groups, n))
+    bounds = [round(i * n / g) for i in range(g + 1)]
+    return [list(range(bounds[i], bounds[i + 1]))
+            for i in range(g) if bounds[i] < bounds[i + 1]]
+
+
+class ServeTuner:
+    """Phase-1 / phase-2 / verify precision search over a serving model."""
+
+    def __init__(self, model, cfg, sets: Sequence[CalibrationSet], *,
+                 eps: float = 0.05, decode_steps: int = 4,
+                 kv_groups: int = 2, max_rounds: int = 2,
+                 decode_impl: Optional[str] = None,
+                 matmul_impl: Optional[str] = None):
+        if not sets:
+            raise ValueError("ServeTuner needs at least one calibration set")
+        self.model, self.cfg = model, cfg
+        self.sets = list(sets)
+        self.eps = eps
+        self.decode_steps = max(1, decode_steps)
+        self.max_rounds = max_rounds
+        self.decode_impl, self.matmul_impl = decode_impl, matmul_impl
+        self.n_evals = 0
+
+        # searched variables: name -> the policy keys the binding writes
+        self.variables: Dict[str, Tuple[str, ...]] = {
+            r: (r,) for r in WEIGHT_ROLES}
+        if any(k == "attn" for k in cfg.attn_pattern) or cfg.encoder_layers:
+            self.variables["attn_probs"] = ("attn_probs",)
+        self.variables["act"] = ("act",)
+        for group in kv_layer_groups(cfg, kv_groups):
+            name = (f"kv_cache[{group[0]}:{group[-1] + 1}]"
+                    if len(group) > 1 else f"kv_cache[{group[0]}]")
+            self.variables[name] = tuple(
+                f"layers.{li}.kv_cache" for li in group)
+
+        self._capacity = (max(len(p) for s in self.sets for p in s.prompts)
+                          + self.decode_steps)
+        self._params_memo: Dict[Tuple[str, ...], object] = {}
+        self._refs = [self._reference(s) for s in self.sets]
+
+    # -- policy / params construction -----------------------------------------
+    def _policy(self, assign: Dict[str, int]) -> PrecisionPolicy:
+        formats = dict(_PROTECTED)
+        for var, idx in assign.items():
+            for key in self.variables[var]:
+                formats[key] = LADDER[idx]
+        return PrecisionPolicy(formats=formats, mode="native",
+                               default_fmt=BINARY32,
+                               decode_impl=self.decode_impl,
+                               matmul_impl=self.matmul_impl)
+
+    def _params(self, policy: PrecisionPolicy):
+        # weights depend only on the weight-role formats: same PRNG stream,
+        # f32 master draws RNE-cast to the role dtype -- exactly what
+        # launch/serve.py stores, and memoizable across the many candidates
+        # that only move activation / KV formats
+        key = tuple(policy.fmt(r).name for r in WEIGHT_ROLES)
+        if key not in self._params_memo:
+            self._params_memo[key] = self.model.init_params(
+                jax.random.PRNGKey(0), policy)
+        return self._params_memo[key]
+
+    # -- evaluation ------------------------------------------------------------
+    def _batch(self, prompt):
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray([list(prompt)], jnp.int32)}
+        if cfg.prefix_len:
+            batch["prefix_embeds"] = jnp.zeros(
+                (1, cfg.prefix_len, cfg.d_model), jnp.float32)
+        if cfg.encoder_layers:
+            batch["encoder_embeds"] = jnp.zeros(
+                (1, cfg.encoder_len, cfg.d_model), jnp.float32)
+        return batch
+
+    def _decode_extra(self):
+        if self.cfg.encoder_layers:
+            return {"encoder_embeds": jnp.zeros(
+                (1, self.cfg.encoder_len, self.cfg.d_model), jnp.float32)}
+        return {}
+
+    def _jits(self, policy: PrecisionPolicy):
+        """(params, jitted prefill, jitted decode) for one candidate --
+        built once per eval so the per-prompt loop never recompiles."""
+        return (self._params(policy),
+                jax.jit(lambda p, b: self.model.prefill(
+                    p, b, policy, self._capacity)),
+                jax.jit(lambda p, t, s, **kw: self.model.decode_step(
+                    p, t, s, policy, **kw)))
+
+    def _run(self, jits, prompt, forced: Optional[List[int]] = None):
+        """Teacher-forced forward: log-probs at the prefill boundary and
+        ``decode_steps - 1`` decode positions; returns (logp (T, V),
+        greedy tokens)."""
+        params, prefill, decode = jits
+        extra = self._decode_extra()
+        logits, states = prefill(params, self._batch(prompt))
+        logp = [np.asarray(jax.nn.log_softmax(
+            logits[0, -1].astype(jnp.float32)))]
+        toks = [int(np.argmax(logp[0]))]
+        for step in range(self.decode_steps - 1):
+            t = forced[step] if forced is not None else toks[-1]
+            logits, states = decode(
+                params, jnp.asarray([[t]], jnp.int32), states, **extra)
+            logp.append(np.asarray(jax.nn.log_softmax(
+                logits[0, -1].astype(jnp.float32))))
+            toks.append(int(np.argmax(logp[-1])))
+        return np.stack(logp), toks
+
+    def _reference(self, cal: CalibrationSet):
+        """binary32 run per prompt: (ref log-probs, greedy teacher tokens)."""
+        jits = self._jits(self._policy({v: _WIDEST
+                                        for v in self.variables}))
+        return [self._run(jits, p) for p in cal.prompts]
+
+    def _error(self, assign: Dict[str, int], set_idx: int) -> float:
+        """Mean KL(ref || candidate) over prompts and positions."""
+        jits = self._jits(self._policy(assign))
+        self.n_evals += 1
+        kls = []
+        for prompt, (ref_logp, ref_toks) in zip(
+                self.sets[set_idx].prompts, self._refs[set_idx]):
+            cand_logp, _ = self._run(jits, prompt, forced=ref_toks)
+            p = np.exp(ref_logp)
+            kls.append(float(np.mean(
+                np.sum(p * (ref_logp - cand_logp), axis=-1))))
+        return float(np.mean(kls))
+
+    # -- phase 1: per-set coordinate descent ----------------------------------
+    def _tune_one_set(self, set_idx: int) -> Dict[str, int]:
+        assign = {v: _WIDEST for v in self.variables}
+        for _round in range(self.max_rounds):
+            changed = False
+            for v in self.variables:
+                lo, hi, best = 0, assign[v] - 1, assign[v]
+                while lo <= hi:
+                    mid = (lo + hi) // 2
+                    trial = dict(assign)
+                    trial[v] = mid
+                    if self._error(trial, set_idx) <= self.eps:
+                        best, hi = mid, mid - 1
+                    else:
+                        lo = mid + 1
+                if best != assign[v]:
+                    assign[v] = best
+                    changed = True
+            if not changed:
+                break
+        return assign
+
+    # -- pricing ---------------------------------------------------------------
+    def _bytes(self, policy: PrecisionPolicy) -> Tuple[int, int]:
+        """(weight bytes, KV bytes per cached token) under ``policy``."""
+        shapes = jax.eval_shape(
+            lambda: self.model.init_params(jax.random.PRNGKey(0), policy))
+        wb = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                 for s in jax.tree.leaves(shapes))
+        cfg = self.cfg
+        kvb = sum(cfg.n_kv * cfg.head_dim * 2
+                  * np.dtype(policy.dtype("kv_cache", layer=li)).itemsize
+                  for li, k in enumerate(cfg.attn_pattern) if k == "attn")
+        return wb, kvb
+
+    # -- full pipeline ---------------------------------------------------------
+    def run(self) -> ServeTuneResult:
+        per_set = [self._tune_one_set(i) for i in range(len(self.sets))]
+        # phase 2: widest-per-variable join across calibration sets
+        assign = {v: max(ps[v] for ps in per_set) for v in self.variables}
+
+        def worst_error(a):
+            return max(self._error(a, i) for i in range(len(self.sets)))
+
+        # verification + greedy escalation (same loop as core Tuner.run)
+        err = worst_error(assign)
+        guard = 0
+        while err > self.eps and guard < 4 * len(assign):
+            guard += 1
+            best_v, best_err = None, err
+            for v in self.variables:
+                if assign[v] == _WIDEST:
+                    continue
+                trial = dict(assign)
+                trial[v] += 1
+                e = worst_error(trial)
+                if e < best_err:
+                    best_v, best_err = v, e
+            if best_v is None:  # no single step helps: widen everything once
+                assign = {v: min(i + 1, _WIDEST)
+                          for v, i in assign.items()}
+                err = worst_error(assign)
+                continue
+            assign[best_v] += 1
+            err = best_err
+
+        formats = {key: LADDER[idx] for var, idx in assign.items()
+                   for key in self.variables[var]}
+        tuned = self._policy(assign)
+        base = self._policy({v: _WIDEST for v in self.variables})
+        wb, kvb = self._bytes(tuned)
+        wb32, kvb32 = self._bytes(base)
+        ctx = self._capacity
+        return ServeTuneResult(
+            arch=self.cfg.arch, eps=self.eps, formats=formats,
+            final_kl=err, n_evals=self.n_evals,
+            calibration=digest_of(self.sets),
+            decode_steps=self.decode_steps,
+            weight_bytes=wb, weight_bytes_f32=wb32,
+            kv_bytes_per_token=kvb, kv_bytes_per_token_f32=kvb32,
+            energy_pj_per_token=energy.stream_energy_pj(wb + kvb * ctx),
+            energy_f32_pj_per_token=energy.stream_energy_pj(
+                wb32 + kvb32 * ctx),
+            context_tokens=ctx,
+            decode_impl=self.decode_impl, matmul_impl=self.matmul_impl)
+
+
+def tune_serving(model, cfg, sets, **kw) -> ServeTuneResult:
+    return ServeTuner(model, cfg, sets, **kw).run()

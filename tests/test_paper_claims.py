@@ -95,9 +95,9 @@ def test_c7_format_migration(cache):
     for app in ("KNN", "CONV", "SVM"):
         counts = []
         for e in (0.1, 0.001):
-            ent = cache["apps"][app][f"eps{e:g}|V2"]
-            b8 = sum(ent["sizes"].get(v, 1)
-                     for v, f in ent["formats"].items() if f == "binary8")
+            art = cache["apps"][app][f"eps{e:g}|V2"]["artifact"]
+            b8 = sum(art["provenance"]["sizes"].get(v, 1)
+                     for v, f in art["formats"].items() if f == "binary8")
             counts.append(b8)
         assert counts[0] >= counts[1], (app, counts)
 
@@ -114,5 +114,5 @@ def test_tuning_meets_constraint(cache):
         for k, v in ent.items():
             if k.startswith("eps") and "manual" not in k:
                 eps = float(k.split("|")[0][3:])
-                assert v["final_error"] <= eps * 1.05, (a, k,
-                                                        v["final_error"])
+                err = v["artifact"]["provenance"]["final_error"]
+                assert err <= eps * 1.05, (a, k, err)
