@@ -15,10 +15,19 @@ aggregates:
   workload (a tiled 8-token motif -- the regime speculation targets):
   rows carry ``accept_rate``, ``steps_per_token``, ``draft_fmt`` and
   ``speculate_k`` so the steps-not-bytes win stays a diffable number too.
+* ``bench="engine_serve_chaos"`` -- the speculative streamed-transport
+  workload run clean and then under ``CHAOS_PLAN`` (one page corruption,
+  one dropped chunk, one draft divergence, one NaN-logits step -- see
+  docs/resilience.md): rows carry ``clean_tokens_per_s`` next to the
+  faulted ``tokens_per_s`` (the recovery tax), the recovery counters
+  (``retries`` / ``crc_mismatches`` / ``quarantines``), and
+  ``token_parity`` (1 iff the faulted tokens are bit-identical to the
+  clean run -- recoverable faults may cost steps, never tokens).
 """
 import numpy as np
 
 SPECULATE_K = 4
+CHAOS_PLAN = "page_corrupt@1,chunk_drop@2,draft_div@3,nan_logits@4,seed=7"
 
 
 def _repetitive_prompts(vocab, n, length, motif=8, seed=0):
@@ -38,7 +47,7 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
     import jax
 
     from repro.core.policy import get_policy
-    from repro.engine import Engine, Request
+    from repro.engine import Engine, FaultPlan, Request, StreamedTransport
     from repro.launch.serve import build_draft
     from repro.models.registry import build
 
@@ -92,6 +101,49 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
                     "speculate_k": spec.k,
                 })
             entries.append(row)
+        if impl == "paged":
+            # chaos row: same speculative workload over StreamedTransport,
+            # run clean and then under the seeded fault plan; recoverable
+            # faults may tax throughput but never change tokens
+            # pool sized for target + draft namespaces per slot, plus one
+            # slot's worth of headroom: the plan's nan_logits fault
+            # quarantines a slot's pages permanently, and the row should
+            # measure the recovery tax, not incidental memory pressure
+            chaos_pool = (2 * slots + 2) * (-(-capacity // page_size))
+
+            def chaos_run(plan):
+                eng = Engine(model, cfg, policy, params, slots=slots,
+                             capacity=capacity, page_size=page_size,
+                             pool_pages=chaos_pool,
+                             transport=StreamedTransport(),
+                             speculative=draft, fault_plan=plan)
+                reqs = [Request(i, list(p), max_new)
+                        for i, p in enumerate(rep_prompts)]
+                eng.run(reqs)
+                return [r.generated for r in reqs], eng.summary
+            clean_toks, clean = chaos_run(None)
+            fault_toks, s = chaos_run(FaultPlan.parse(CHAOS_PLAN))
+            entries.append({
+                "bench": "engine_serve_chaos",
+                "impl": impl,
+                "fmt": policy.fmt("kv_cache").name,
+                "shape": shape,
+                "ttft_mean_s": s["ttft_mean_s"],
+                "tokens_per_s": s["tokens_per_s"],
+                "clean_tokens_per_s": clean["tokens_per_s"],
+                "peak_prefill_tokens": s["peak_prefill_transient_tokens"],
+                "peak_prefill_bytes": s["peak_prefill_transient_bytes"],
+                "page_size": page_size,
+                "decode_tokens": s["decode_tokens"],
+                "evictions": s["evictions"],
+                "faults_injected": s["faults_injected"],
+                "retries": s["retries"],
+                "crc_mismatches": s["crc_mismatches"],
+                "quarantines": s["quarantines"],
+                "token_parity": int(fault_toks == clean_toks),
+                "draft_fmt": draft.policy.fmt("attn_w").name,
+                "speculate_k": draft.k,
+            })
     return entries
 
 
@@ -105,6 +157,11 @@ def report(entries=None) -> list:
         if "accept_rate" in e:
             derived += (f";accept_rate={e['accept_rate']}"
                         f";steps_per_token={e['steps_per_token']}")
+        if "token_parity" in e:
+            derived += (f";token_parity={e['token_parity']}"
+                        f";faults={e['faults_injected']}"
+                        f";retries={e['retries']}"
+                        f";clean_tok_s={e['clean_tokens_per_s']:.1f}")
         out.append((
             f"{e['bench']}_{e['impl']}_{e['fmt']}_{e['shape']}",
             float(e["ttft_mean_s"] or 0.0) * 1e6,

@@ -172,6 +172,28 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                         f"{name} ({label}): speculative rows without a "
                         f"positive accept_rate / steps_per_token < 1.0 / "
                         f"draft_fmt / speculate_k: {bad}")
+                # the chaos rows are the robustness half of the serving
+                # story: every row must show faults actually fired and
+                # recovered from (retries > 0) with the faulted token
+                # stream bit-identical to the clean run (token_parity)
+                chaos = [e for e in rows
+                         if e.get("bench") == "engine_serve_chaos"]
+                if not chaos:
+                    problems.append(
+                        f"{name} ({label}): chaos rows "
+                        f"(bench='engine_serve_chaos') missing from the "
+                        f"sweep")
+                bad = [e.get("impl", "?") + "/" + e.get("shape", "?")
+                       for e in chaos
+                       if not e.get("faults_injected")
+                       or not e.get("retries")
+                       or not e.get("clean_tokens_per_s")
+                       or e.get("token_parity") != 1]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): chaos rows without fired "
+                        f"faults / retries / clean_tokens_per_s / "
+                        f"token_parity == 1: {bad}")
         if name == "BENCH_tuning.json":
             # the autotuning rows are the paper's headline claim at serve
             # scale: one row per model family and at least one app row,

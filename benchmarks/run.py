@@ -77,6 +77,12 @@ def run_smoke(args) -> None:
     # the trajectory (the transient-prefill-memory win lives here)
     serve_impls = {e["impl"] for e in serve}
     assert {"paged", "flash_shmap+paged"} <= serve_impls, serve_impls
+    # the chaos row must show injected faults recovered without changing
+    # a single token (docs/resilience.md's headline invariant)
+    chaos = [e for e in serve if e["bench"] == "engine_serve_chaos"]
+    assert chaos and all(e["token_parity"] == 1
+                         and e["faults_injected"] > 0
+                         for e in chaos), chaos
     # the tuning bench must keep one row per model family + app rows, each
     # with a strictly-sub-f32 byte footprint (the paper's thesis applied
     # at serve scale -- losing a family means the tuner stopped finding

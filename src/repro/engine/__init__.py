@@ -11,16 +11,27 @@ Layers (each separately testable):
   or whole-prompt) and decode steps.
 * :mod:`repro.engine.transport` -- how finished packed-KV pages reach the
   decode pool: zero-copy colocated, or streamed page-by-page between
-  devices (disaggregated prefill).
+  devices (disaggregated prefill, CRC-checksummed handoff).
 * :mod:`repro.engine.stats` -- per-step JSONL observability (queue depth,
-  pool occupancy, TTFT, tokens/s, peak transient prefill bytes).
+  pool occupancy, TTFT, tokens/s, peak transient prefill bytes, fault and
+  recovery counters).
 * :mod:`repro.engine.reference` -- the synchronous single-request oracle
   the engine's greedy tokens are pinned against.
 * :mod:`repro.engine.speculative` -- the binary8 packed draft model that
   proposes k tokens per step; the target verifies them in one batched
   forward and greedy acceptance keeps tokens bit-identical.
+* :mod:`repro.engine.faults` -- deterministic seeded fault schedules
+  (:class:`FaultPlan`) the chaos tests drive through the engine.
+* :mod:`repro.engine.resilience` -- the recovery machinery: classified
+  :class:`EngineError` results, retry/backoff, per-page checksums, and
+  the speculative :class:`CircuitBreaker`.
 """
+from .faults import Fault, FaultInjector, FaultPlan, SimulatedFault
 from .reference import synchronous_generate
+from .resilience import (CircuitBreaker, DeadLetterRequest,
+                         DeadlineExceeded, EngineError, RetryPolicy,
+                         StepFailure, TransportError, WatchdogTimeout,
+                         exit_code_for, format_error)
 from .scheduler import Engine, Request
 from .speculative import SpeculativeDecoder
 from .stats import EngineStats
@@ -28,7 +39,11 @@ from .transport import ColocatedTransport, StreamedTransport
 from .worker import DecodeWorker, PrefillTask, PrefillWorker
 
 __all__ = [
-    "ColocatedTransport", "DecodeWorker", "Engine", "EngineStats",
-    "PrefillTask", "PrefillWorker", "Request", "SpeculativeDecoder",
-    "StreamedTransport", "synchronous_generate",
+    "CircuitBreaker", "ColocatedTransport", "DeadLetterRequest",
+    "DeadlineExceeded", "DecodeWorker", "Engine", "EngineError",
+    "EngineStats", "Fault", "FaultInjector", "FaultPlan", "PrefillTask",
+    "PrefillWorker", "Request", "RetryPolicy", "SimulatedFault",
+    "SpeculativeDecoder", "StepFailure", "StreamedTransport",
+    "TransportError", "WatchdogTimeout", "exit_code_for", "format_error",
+    "synchronous_generate",
 ]

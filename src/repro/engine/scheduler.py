@@ -9,30 +9,55 @@ serves through one code path.
 
 Each engine step does, in order:
 
-1. **Admission** -- when no prompt is in flight and a slot is free, pop
+1. **Deadlines** -- requests (queued or slotted) past their per-request
+   step deadline fail with a classified
+   :class:`~repro.engine.resilience.DeadlineExceeded` result (slot
+   released, never a hang).
+2. **Admission** -- when no prompt is in flight and a slot is free, pop
    the queue head if ``PagePool.can_admit`` says its KV (plus one decode
    token) fits, and reserve its pages up front.
-2. **One prefill chunk** -- the in-flight prompt advances by one chunk
+3. **One prefill chunk** -- the in-flight prompt advances by one chunk
    (default: one page of tokens) via :class:`~repro.engine.worker.
    PrefillWorker`; finished pages move through the
    :mod:`~repro.engine.transport` into the decode pool.  Because only a
    chunk runs per step, a long prompt never stalls the decode batch below.
-3. **Growth / eviction** -- every decoding slot needs a mapped page for
+4. **Growth / eviction** -- every decoding slot needs a mapped page for
    its next token; when the pool runs dry the most recently admitted
    sequence (decoding *or* mid-prefill) is evicted back to the queue head
    and its pages reused immediately (LIFO: the oldest admitted sequence
-   always finishes, so the loop makes progress).
-4. **One batched decode step** -- the mid-prefill slot's block-table row
-   is masked to -1 on the device, so its in-progress KV is invisible:
-   ``append_decode`` drops the write and its length does not advance; the
-   garbage logits for that row are discarded host-side.
+   always finishes, so the loop makes progress).  A request evicted more
+   than ``max_requeues`` times fails as a
+   :class:`~repro.engine.resilience.DeadLetterRequest`.
+5. **One batched decode step** (or speculation round) -- the mid-prefill
+   slot's block-table row is masked to -1 on the device, so its
+   in-progress KV is invisible: ``append_decode`` drops the write and its
+   length does not advance; the garbage logits for that row are discarded
+   host-side.
+
+**Self-healing** (see docs/resilience.md for the full recovery matrix):
+batched steps run through a retry wrapper (transient exceptions re-run the
+pure jitted step bit-identically); every step's logits carry an in-jit
+NaN/Inf guard whose verdict rides the existing single host transfer -- a
+non-finite slot has its pages quarantined (:meth:`~repro.kernels.
+paged_cache.PagePool.quarantine_slot`, pages never recycled) and the
+request replays through :func:`~repro.engine.reference.
+synchronous_generate`, the oracle the engine is already pinned
+bit-identical to; a :class:`~repro.engine.resilience.CircuitBreaker`
+drops persistent draft-model divergence back to plain batched decode
+(draft KV kept warm by a shadow step) and re-probes after a cooldown; and
+an optional wall-clock watchdog turns a wedged step into a classified
+:class:`~repro.engine.resilience.WatchdogTimeout`.  Deterministic fault
+schedules (:class:`~repro.engine.faults.FaultPlan`) exercise every one of
+these paths: under a plan of recoverable faults the greedy tokens are
+bit-identical to the fault-free run.
 
 Per-step observability flows through :class:`~repro.engine.stats.
 EngineStats` (queue depth, pool occupancy / fragmentation, TTFT, decode
-tokens/s) as JSON lines.
+tokens/s, fault/recovery counters) as JSON lines.
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional
 
 import jax
@@ -41,6 +66,9 @@ import numpy as np
 
 from repro.kernels import paged_cache
 
+from . import resilience
+from .faults import FaultInjector, FaultPlan, SimulatedFault
+from .reference import synchronous_generate
 from .stats import EngineStats
 from .transport import ColocatedTransport
 from .worker import DecodeWorker, PrefillTask, PrefillWorker
@@ -49,25 +77,32 @@ from .worker import DecodeWorker, PrefillTask, PrefillWorker
 def _host(tree):
     """The engine loop's single device->host synchronization point.
 
-    Everything the host needs from a step -- the argmax'd next-token ids,
-    or a speculation round's (targets, emit counts, accept counts) --
-    crosses in ONE explicit ``jax.device_get`` per step, instead of one
-    implicit transfer per sequence (the old ``int(nxt[si])`` loop pulled
-    the whole logits row once per slot).  Tests monkeypatch this to count
-    transfers and run the loop under
-    ``jax.transfer_guard_device_to_host("disallow")`` to prove no implicit
-    transfer remains."""
+    Everything the host needs from a step -- the argmax'd next-token ids
+    plus the NaN/Inf guard verdicts, or a speculation round's (targets,
+    emit counts, accept counts, guard verdicts) -- crosses in ONE explicit
+    ``jax.device_get`` per step, instead of one implicit transfer per
+    sequence (the old ``int(nxt[si])`` loop pulled the whole logits row
+    once per slot).  Tests monkeypatch this to count transfers and run the
+    loop under ``jax.transfer_guard_device_to_host("disallow")`` to prove
+    no implicit transfer remains."""
     return jax.device_get(tree)
 
 
 class Request:
-    def __init__(self, rid: int, prompt: List[int], max_new: int):
+    def __init__(self, rid: int, prompt: List[int], max_new: int,
+                 deadline_steps: Optional[int] = None):
         self.rid = rid
         self.prompt = prompt
         self.max_new = max_new
+        self.deadline_steps = deadline_steps  # overrides the engine default
         self.generated: List[int] = []
         self.done = False
         self.evictions = 0
+        self.error: Optional[Exception] = None  # classified EngineError
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
     def reset(self):
         """Requeued after eviction: generation restarts from the prompt."""
@@ -92,6 +127,25 @@ class Engine:
     one page (the transient staging buffer is then one page per attention
     layer); ``0`` forces whole-prompt prefill (the old serve.py behavior,
     and the only mode for prefix-LM archs).
+
+    Resilience knobs (all optional; docs/resilience.md):
+
+    fault_plan: a :class:`~repro.engine.faults.FaultPlan` to inject
+        deterministically during the run (None = no faults; the injector
+        hooks are no-ops).
+    deadline_steps: default per-request deadline in *engine steps* from
+        run start (deterministic, unlike wall clock); a request's own
+        ``deadline_steps`` overrides it.  Expired requests fail with a
+        classified ``DeadlineExceeded`` result.
+    max_requeues: evictions a request survives before failing as a
+        ``DeadLetterRequest`` (None = requeue forever, the old behavior).
+    retry_policy: backoff schedule for step retries and transport
+        refetches.
+    breaker: speculative :class:`~repro.engine.resilience.CircuitBreaker`
+        (defaults to one with stock thresholds when speculation is on).
+    watchdog_s / watchdog_limit: wall-clock budget per engine step; after
+        ``watchdog_limit`` consecutive over-budget steps the run raises a
+        classified ``WatchdogTimeout`` (None = watchdog off).
     """
 
     def __init__(self, model, cfg, policy, params, *, slots: int,
@@ -100,7 +154,14 @@ class Engine:
                  pool_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  transport=None, stats: Optional[EngineStats] = None,
-                 speculative=None, calibration_tap=None):
+                 speculative=None, calibration_tap=None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 deadline_steps: Optional[int] = None,
+                 max_requeues: Optional[int] = None,
+                 retry_policy: Optional[resilience.RetryPolicy] = None,
+                 breaker: Optional[resilience.CircuitBreaker] = None,
+                 watchdog_s: Optional[float] = None,
+                 watchdog_limit: int = 3):
         self.model, self.cfg, self.policy = model, cfg, policy
         self.calibration_tap = calibration_tap
         self.params = params
@@ -134,6 +195,14 @@ class Engine:
         self.stats = stats if stats is not None else EngineStats()
         self.device = jax.devices()[0]
 
+        self.injector = FaultInjector(fault_plan, self.stats)
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else resilience.RetryPolicy())
+        self.deadline_steps = deadline_steps
+        self.max_requeues = max_requeues
+        self.watchdog_s = watchdog_s
+        self.watchdog_limit = int(watchdog_limit)
+
         states = model.init_state(slots, page, policy)
         for li in self.attn_layers:
             # each attention layer owns its own pool, so the KV format may
@@ -158,6 +227,10 @@ class Engine:
         self.spec = speculative
         if self.spec is not None:
             self.spec.setup(self)
+        self.breaker = breaker if breaker is not None else (
+            resilience.CircuitBreaker() if speculative is not None
+            else None)
+        self._zero_mask = jnp.zeros((slots,), jnp.bool_)
         self.summary: Optional[dict] = None
 
     # ------------------------------------------------------------------ utils
@@ -187,6 +260,13 @@ class Engine:
                for k, s in zip(self.cfg.attn_pattern, one)]
         return self.transport.to_prefill(one)
 
+    def _fault_mask(self, kind: str, decoding: List[int]):
+        """Injected per-slot poison mask for the jitted step (the cached
+        all-False mask when nothing is armed, so the common case costs
+        nothing and compiles once)."""
+        mask = self.injector.slot_mask(kind, decoding, self.slots)
+        return self._zero_mask if mask is None else jnp.asarray(mask)
+
     # -------------------------------------------------------------------- run
     def run(self, reqs: List[Request]) -> List[Request]:
         n = self.slots
@@ -213,12 +293,27 @@ class Engine:
         completed = 0
         decode_steps = 0
         engine_step = 0
+        progressed = False     # non-step progress (failures) this iteration
+        new_tokens = 0
+        wd_over = 0            # consecutive over-budget steps (watchdog)
 
-        def evict(si: int) -> None:
+        def deadline_of(r: Request) -> Optional[int]:
+            return (r.deadline_steps if r.deadline_steps is not None
+                    else self.deadline_steps)
+
+        def fail_request(r: Request, err: Exception) -> None:
+            """Classified failure result: the request completes with
+            ``r.error`` set, never hangs the loop."""
+            nonlocal completed, progressed
+            r.error = err
+            completed += 1
+            progressed = True
+            self.stats.note_failure(getattr(type(err), "kind", "engine"))
+
+        def release_slot_state(si: int) -> None:
+            """Free ``si`` everywhere: pool pages (all namespaces), device
+            table rows, draft rows, and any in-flight prefill."""
             nonlocal task
-            r = slots[si]
-            r.reset()
-            queue.insert(0, r)
             self.pool.free_slot(si)  # frees BOTH namespaces atomically
             for li in self.attn_layers:
                 self.states[li] = paged_cache.release_slot(self.states[li],
@@ -229,7 +324,25 @@ class Engine:
                 self.transport.abort(self, task)
                 task = None
             slots[si] = None
+
+        def evict(si: int) -> None:
+            # an eviction IS step progress: the requeued request becomes
+            # admissible next iteration (it may have emptied the decode
+            # batch this one, so the stall guard must not fire)
+            nonlocal progressed
+            r = slots[si]
+            release_slot_state(si)
+            r.reset()
+            progressed = True
             self.stats.note_eviction()
+            if (self.max_requeues is not None
+                    and r.evictions > self.max_requeues):
+                fail_request(r, resilience.DeadLetterRequest(
+                    f"request {r.rid} evicted {r.evictions} times "
+                    f"(max_requeues={self.max_requeues}); failing instead "
+                    f"of thrashing the pool"))
+            else:
+                queue.insert(0, r)
 
         def newest_active() -> Optional[int]:
             active = [si for si in range(n) if slots[si] is not None]
@@ -240,16 +353,59 @@ class Engine:
             nonlocal completed
             slots[si].done = True
             completed += 1
-            self.pool.free_slot(si)
+            release_slot_state(si)
+
+        def quarantine_and_replay(si: int, why: str) -> int:
+            """The NaN/Inf guard tripped for ``si``: pull its pages out of
+            circulation (suspect memory is never recycled) and regenerate
+            the request through the synchronous oracle -- which the
+            engine's tokens are pinned bit-identical to, so recovery
+            preserves the determinism contract.  -> tokens emitted now."""
+            nonlocal completed, progressed
+            r = slots[si]
+            pages = self.pool.quarantine_slot(si)
             for li in self.attn_layers:
-                self.states[li] = paged_cache.release_slot(self.states[li],
-                                                           si)
+                self.states[li] = paged_cache.release_slot(
+                    self.states[li], si)
             if self.spec is not None:
                 self.spec.release_slot(si)
             slots[si] = None
+            self.stats.note_quarantine(pages)
+            prev = len(r.generated)
+            out = synchronous_generate(
+                self.model, self.cfg, self.policy, self.params,
+                [r.prompt], max_new=r.max_new,
+                capacity=max(self.capacity, len(r.prompt) + r.max_new))
+            r.generated = list(out[0])
+            r.done = True
+            completed += 1
+            progressed = True
+            self.stats.note_first_token(r.rid)
+            self.stats.note_decode_tokens(len(r.generated) - prev)
+            return len(r.generated) - prev
 
         while completed < len(reqs):
+            step = engine_step + 1      # 1-based, matches stats records
+            self.injector.begin_step(step)
+            t_step = time.perf_counter()
             new_tokens = 0
+            progressed = False
+            # ---- deadlines: expired requests fail classified, never hang --
+            for r in [q for q in queue]:
+                dl = deadline_of(r)
+                if dl is not None and engine_step >= dl:
+                    queue.remove(r)
+                    fail_request(r, resilience.DeadlineExceeded(
+                        f"request {r.rid} still queued after its "
+                        f"{dl}-step deadline"))
+            for si in range(n):
+                r = slots[si]
+                dl = deadline_of(r) if r is not None else None
+                if dl is not None and engine_step >= dl:
+                    release_slot_state(si)
+                    fail_request(r, resilience.DeadlineExceeded(
+                        f"request {r.rid} exceeded its {dl}-step deadline "
+                        f"({len(r.generated)}/{r.max_new} tokens)"))
             # ---- admission: at most one prompt in flight ------------------
             if task is None and queue:
                 si = next((i for i in range(n) if slots[i] is None), None)
@@ -279,11 +435,18 @@ class Engine:
             if task is not None:
                 ran_chunk = True
                 self._push_tables()
-                view, vslot = self.transport.prefill_view(self, task)
-                view = self.prefill_worker.step(task, view, vslot)
-                self.transport.absorb(self, task, view)
-                if task.done:
-                    self.transport.finish(self, task)
+                try:
+                    view, vslot = self.transport.prefill_view(self, task)
+                    view = self.prefill_worker.step(task, view, vslot)
+                    self.transport.absorb(self, task, view)
+                    if task.done:
+                        self.transport.finish(self, task)
+                except resilience.TransportError:
+                    # checksum refetch exhausted: the page handoff cannot
+                    # be trusted, so recompute the request from its prompt
+                    # (bounded by max_requeues like any other eviction)
+                    evict(task.slot)
+                if task is not None and task.done:
                     r, si = task.request, task.slot
                     for li, kind in enumerate(self.cfg.attn_pattern):
                         if kind != "attn":
@@ -291,27 +454,37 @@ class Engine:
                                 self.states[li],
                                 self.transport.to_decode(task.pstates[li]),
                                 si, n)
-                    nxt = int(_host(jnp.argmax(task.logits[0, -1])))
-                    r.generated.append(nxt)
-                    self.stats.note_first_token(r.rid)
-                    self.stats.note_decode_tokens(1)
-                    new_tokens += 1
-                    tokens = tokens.at[si, 0].set(nxt)
+                    am, fin = _host((jnp.argmax(task.logits[0, -1]),
+                                     jnp.isfinite(task.logits[0, -1])
+                                     .all()))
                     task = None
-                    if self.spec is not None:
-                        # the target prompt just landed; write the draft's
-                        # KV for it into the draft-namespace pages (tables
-                        # were pushed at the top of this prefill section)
-                        self.spec.prefill_prompt(si, r.prompt)
+                    if not bool(fin):
+                        new_tokens += quarantine_and_replay(
+                            si, "prefill logits")
+                    else:
+                        nxt = int(am)
+                        r.generated.append(nxt)
+                        self.stats.note_first_token(r.rid)
+                        self.stats.note_decode_tokens(1)
+                        new_tokens += 1
+                        tokens = tokens.at[si, 0].set(nxt)
+                        if self.spec is not None:
+                            # the target prompt just landed; write the
+                            # draft's KV for it into the draft-namespace
+                            # pages (tables were pushed at the top of this
+                            # prefill section)
+                            self.spec.prefill_prompt(si, r.prompt)
             # ---- growth: every decoding slot needs a mapped page for its
             # next token; evict LIFO when the pool runs dry ------------------
+            use_spec = (self.spec is not None
+                        and self.breaker.allows(step))
             for si in range(n):
                 if slots[si] is None or (task is not None
                                          and task.slot == si):
                     continue
                 while slots[si] is not None:
                     L = int(self.pool.lens[si])
-                    if self.spec is not None:
+                    if use_spec:
                         # grow by this round's worst case in BOTH
                         # namespaces: k appends, clamped to what the
                         # request can still emit
@@ -320,9 +493,17 @@ class Engine:
                         ok = (self.pool.ensure_capacity(si, L + gi)
                               and self.pool.ensure_capacity(
                                   si, L + gi, ns=self.spec.NS))
+                    elif self.spec is not None:
+                        # degraded (breaker-open) step: one token, but the
+                        # draft shadow append needs its page too
+                        ok = (self.pool.ensure_capacity(si, L + 1)
+                              and self.pool.ensure_capacity(
+                                  si, L + 1, ns=self.spec.NS))
                     else:
                         ok = self.pool.ensure_capacity(si, L + 1)
-                    if ok:
+                    if ok and self.injector.pool_exhausted():
+                        ok = False  # injected exhaustion: walk the normal
+                    if ok:          # eviction/requeue path below
                         break
                     victim = newest_active()
                     evict(victim)
@@ -332,17 +513,32 @@ class Engine:
             decoding = [si for si in range(n)
                         if slots[si] is not None
                         and not (task is not None and task.slot == si)]
-            if decoding and self.spec is not None:
+            if decoding and use_spec:
                 # ---- one speculation round: k draft steps + 1 verify -----
                 self._push_tables(
                     mask_slot=task.slot if task is not None else None)
-                tgt_d, m_d, acc_d, pending, self.states = self.spec.round(
-                    self.params, tokens, self.states)
+                nan_mask = self._fault_mask("nan_logits", decoding)
+                div_mask = self._fault_mask("draft_div", decoding)
+
+                def _spec_call():
+                    self.injector.maybe_raise()
+                    return self.spec.round(self.params, tokens,
+                                           self.states, nan_mask=nan_mask,
+                                           div_mask=div_mask)
+
+                (tgt_d, m_d, acc_d, pending, bad_d,
+                 self.states) = resilience.with_retries(
+                    _spec_call, self.retry_policy, self.stats,
+                    retriable=(SimulatedFault,), what="speculation round")
                 decode_steps += 1
                 self.stats.note_target_step()
-                tgt, m, acc = _host((tgt_d, m_d, acc_d))
+                tgt, m, acc, bad = _host((tgt_d, m_d, acc_d, bad_d))
                 proposed = accepted = 0
                 for si in decoding:
+                    if bool(bad[si]):
+                        new_tokens += quarantine_and_replay(
+                            si, "verify logits")
+                        continue
                     r = slots[si]
                     L = int(self.pool.lens[si])
                     gi = min(self.spec.k, r.max_new - len(r.generated))
@@ -361,38 +557,71 @@ class Engine:
                         finish_slot(si)
                 self.stats.note_spec_round(proposed=proposed,
                                            accepted=accepted)
+                self.breaker.record(step=step, proposed=proposed,
+                                    accepted=accepted, stats=self.stats)
                 tokens = pending
             elif decoding:
                 self._push_tables(
                     mask_slot=task.slot if task is not None else None)
-                logits, self.states = self.decode_worker.step(
-                    self.params, tokens, self.states)
+                nan_mask = self._fault_mask("nan_logits", decoding)
+
+                def _decode_call():
+                    self.injector.maybe_raise()
+                    return self.decode_worker.step(self.params, tokens,
+                                                   self.states, nan_mask)
+
+                nxt, bad_d, self.states = resilience.with_retries(
+                    _decode_call, self.retry_policy, self.stats,
+                    retriable=(SimulatedFault,), what="decode step")
                 decode_steps += 1
                 self.stats.note_target_step()
-                nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-                nxt_h = _host(nxt)
+                if self.spec is not None:
+                    # breaker open: plain decode, but keep the draft KV in
+                    # lockstep so the half-open probe can accept again
+                    self.spec.shadow_step(tokens)
+                    self.stats.note_degraded_step()
+                nxt_h, bad = _host((nxt, bad_d))
                 for si in decoding:
+                    if bool(bad[si]):
+                        new_tokens += quarantine_and_replay(
+                            si, "decode logits")
+                        continue
                     r = slots[si]
                     self.pool.note_decode_step(si)
+                    if self.spec is not None:
+                        self.pool.note_decode_step(si, ns=self.spec.NS)
                     r.generated.append(int(nxt_h[si]))
                     self.stats.note_decode_tokens(1)
                     new_tokens += 1
                     if len(r.generated) >= r.max_new:
                         finish_slot(si)
-                tokens = nxt.astype(jnp.int32)[:, None]
-            elif not ran_chunk:
-                # pre-run feasibility makes this unreachable; guard anyway
-                raise RuntimeError(
-                    "engine stalled: queue non-empty but no slot admissible "
-                    "and no sequence decoding")
+                tokens = nxt[:, None]
+            elif not ran_chunk and not progressed:
+                # pre-run feasibility makes this unreachable without page
+                # quarantine; with it, a loud classified error beats a hang
+                raise resilience.EngineError(
+                    "engine stalled: queue non-empty but no slot "
+                    "admissible and no sequence decoding (quarantined "
+                    f"pages: {len(self.pool.quarantined)})")
             engine_step += 1
             self.stats.step_record(
                 step=engine_step, queue_depth=len(queue),
                 prefilling=1 if ran_chunk else 0, decoding=len(decoding),
                 new_tokens=new_tokens, pool_stats=self.pool.stats())
+            if self.watchdog_s is not None:
+                if time.perf_counter() - t_step > self.watchdog_s:
+                    self.stats.note_watchdog_trip()
+                    wd_over += 1
+                    if wd_over >= self.watchdog_limit:
+                        raise resilience.WatchdogTimeout(
+                            f"{wd_over} consecutive engine steps over the "
+                            f"{self.watchdog_s}s watchdog budget")
+                else:
+                    wd_over = 0
 
         self.decode_steps = decode_steps
         self.summary = self.stats.summary(
-            kv_bytes_per_token=self.kv_bytes_per_token)
+            kv_bytes_per_token=self.kv_bytes_per_token,
+            faults_unfired=len(self.injector.pending))
         self.stats.close()
         return reqs

@@ -111,7 +111,10 @@ class SpeculativeDecoder:
         tmodel, tpolicy = engine.model, engine.policy
         target_attn = list(engine.attn_layers)
 
-        def _round(params, dparams, tokens, states, dstates):
+        vocab = self.cfg.vocab
+
+        def _round(params, dparams, tokens, states, dstates,
+                   nan_mask, div_mask):
             # -- propose: k greedy draft steps from the pending token ------
             t = tokens
             props = []
@@ -122,12 +125,22 @@ class SpeculativeDecoder:
                        .astype(jnp.int32)[:, None]
                 props.append(t[:, 0])
             props = jnp.stack(props, axis=1)                       # (n, k)
+            # injected draft divergence: shift a masked slot's proposals
+            # off the target argmax (+1 mod vocab is never a match); only
+            # acceptance can suffer -- greedy verification stays exact
+            props = jnp.where(div_mask[:, None], (props + 1) % vocab,
+                              props)
             # -- verify: the target consumes [pending, q_1 .. q_{k-1}] -----
             v = jnp.concatenate([tokens, props[:, :-1]], axis=1)   # (n, k)
             bases = {li: states[li].seq_lens for li in target_attn}
             dbases = [s.seq_lens for s in dstates]
             logits, states = tmodel.verify_step(params, v, states, tpolicy)
+            # injected NaN logits land here (same traced-mask trick as
+            # DecodeWorker); the finite guard is computed in-jit so the
+            # scheduler's single host transfer carries the verdict
+            logits = jnp.where(nan_mask[:, None, None], jnp.nan, logits)
             tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (n, k)
+            bad = ~jnp.isfinite(logits).all(axis=(1, 2))
             # -- accept: j leading matches, emit m = min(j + 1, k) ---------
             matches = (tgt == props).astype(jnp.int32)
             accepted = jnp.sum(jnp.cumprod(matches, axis=1), axis=1)
@@ -140,9 +153,14 @@ class SpeculativeDecoder:
             dstates = [paged_cache.truncate_seq_lens(s, b + m)
                        for s, b in zip(dstates, dbases)]
             pending = jnp.take_along_axis(tgt, (m - 1)[:, None], axis=1)
-            return tgt, m, accepted, pending, states, dstates
+            return tgt, m, accepted, pending, bad, states, dstates
 
         self._round = jax.jit(_round)
+        # degraded-mode draft warm-up: one plain draft decode step, KV
+        # append only (logits discarded) -- see shadow_step
+        self._shadow = jax.jit(
+            lambda dp, t, ds: dmodel.decode_step(dp, t, ds, dpolicy)[1])
+        self._zero_mask = jnp.zeros((engine.slots,), jnp.bool_)
         npl = self.n_layers
         self._prefill = jax.jit(
             lambda p, t, s, slot: dmodel.prefill_chunk(
@@ -171,10 +189,22 @@ class SpeculativeDecoder:
             self.states[li] = paged_cache.release_slot(self.states[li],
                                                        slot)
 
-    def round(self, params, tokens, states):
+    def shadow_step(self, tokens) -> None:
+        """While the circuit breaker holds speculation open, advance the
+        draft KV by the token the target just consumed (the scheduler
+        decodes plain): the draft cache stays in lockstep with the target,
+        so acceptance has a chance the moment the breaker re-probes."""
+        self.states = self._shadow(self.params, tokens, self.states)
+
+    def round(self, params, tokens, states, nan_mask=None, div_mask=None):
         """One speculation round.  Returns device-side
-        ``(tgt (n, k), m (n,), accepted (n,), pending (n, 1), states)``;
-        the draft caches are updated in place on ``self``."""
-        tgt, m, accepted, pending, states, self.states = self._round(
-            params, self.params, tokens, states, self.states)
-        return tgt, m, accepted, pending, states
+        ``(tgt (n, k), m (n,), accepted (n,), pending (n, 1), bad (n,),
+        states)``; the draft caches are updated in place on ``self``.
+        ``nan_mask`` / ``div_mask`` are the fault injector's per-slot
+        poison masks (None = no fault)."""
+        nan_mask = self._zero_mask if nan_mask is None else nan_mask
+        div_mask = self._zero_mask if div_mask is None else div_mask
+        tgt, m, accepted, pending, bad, states, self.states = self._round(
+            params, self.params, tokens, states, self.states,
+            nan_mask, div_mask)
+        return tgt, m, accepted, pending, bad, states

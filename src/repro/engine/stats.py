@@ -37,6 +37,20 @@ class EngineStats:
         # largest contiguous K/V staging buffer any prefill step built, in
         # tokens (chunked prefill: one chunk; whole-prompt: the prompt)
         self.peak_prefill_transient_tokens = 0
+        # resilience: fault-injection and recovery accounting (see
+        # docs/resilience.md) -- every injected fault must be explained by
+        # some combination of these counters
+        self.faults_injected = 0
+        self.faults_by_kind: Dict[str, int] = {}
+        self.retries = 0
+        self.crc_mismatches = 0
+        self.quarantines = 0
+        self.quarantined_pages = 0
+        self.degraded_steps = 0
+        self.breaker_trips = 0
+        self.watchdog_trips = 0
+        self.failures = 0
+        self.failures_by_kind: Dict[str, int] = {}
         self._t0 = time.perf_counter()
         self._fh = open(out_path, "w") if out_path else None
 
@@ -72,6 +86,41 @@ class EngineStats:
         self.spec_proposed += int(proposed)
         self.spec_accepted += int(accepted)
 
+    # -- resilience hooks ----------------------------------------------------
+    def note_fault(self, kind: str) -> None:
+        """One injected fault actually fired (FaultInjector.take)."""
+        self.faults_injected += 1
+        self.faults_by_kind[kind] = self.faults_by_kind.get(kind, 0) + 1
+
+    def note_retry(self) -> None:
+        """One recovery retry: a page refetch or a re-run batched step."""
+        self.retries += 1
+
+    def note_crc_mismatch(self) -> None:
+        """A streamed page chunk failed its CRC check at absorb."""
+        self.crc_mismatches += 1
+
+    def note_quarantine(self, pages: int) -> None:
+        """One sequence's pages were quarantined (NaN/Inf logit guard)."""
+        self.quarantines += 1
+        self.quarantined_pages += int(pages)
+
+    def note_degraded_step(self) -> None:
+        """One engine step decoded plain while the breaker held
+        speculation open."""
+        self.degraded_steps += 1
+
+    def note_breaker_trip(self) -> None:
+        self.breaker_trips += 1
+
+    def note_watchdog_trip(self) -> None:
+        self.watchdog_trips += 1
+
+    def note_failure(self, kind: str) -> None:
+        """A request finished with a classified EngineError result."""
+        self.failures += 1
+        self.failures_by_kind[kind] = self.failures_by_kind.get(kind, 0) + 1
+
     # -- per-step record ------------------------------------------------------
     def step_record(self, *, step: int, queue_depth: int, prefilling: int,
                     decoding: int, new_tokens: int,
@@ -91,7 +140,8 @@ class EngineStats:
         return rec
 
     # -- end of run -----------------------------------------------------------
-    def summary(self, *, kv_bytes_per_token: int = 0) -> dict:
+    def summary(self, *, kv_bytes_per_token: int = 0,
+                faults_unfired: int = 0) -> dict:
         dt = time.perf_counter() - self._t0
         ttft = sorted(self.ttft_s.values())
         s = {
@@ -118,6 +168,25 @@ class EngineStats:
                 self.peak_prefill_transient_tokens,
             "peak_prefill_transient_bytes":
                 self.peak_prefill_transient_tokens * int(kv_bytes_per_token),
+            # resilience accounting (docs/resilience.md): counters must
+            # explain every injected fault, and failures are classified
+            # results on the requests, never hangs
+            "faults_injected": self.faults_injected,
+            # scheduled faults whose trigger never came up (e.g. a
+            # draft_div plan on a non-speculative run) -- chaos CI pins
+            # this to 0 so a plan silently not exercising a path is loud
+            "faults_unfired": int(faults_unfired),
+            "faults_by_kind": dict(sorted(self.faults_by_kind.items())),
+            "retries": self.retries,
+            "crc_mismatches": self.crc_mismatches,
+            "quarantines": self.quarantines,
+            "quarantined_pages": self.quarantined_pages,
+            "degraded_steps": self.degraded_steps,
+            "breaker_trips": self.breaker_trips,
+            "watchdog_trips": self.watchdog_trips,
+            "deadline_misses": self.failures_by_kind.get("deadline", 0),
+            "dead_letters": self.failures_by_kind.get("dead_letter", 0),
+            "failures": self.failures,
         }
         self._emit(s)
         return s

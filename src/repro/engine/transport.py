@@ -28,6 +28,18 @@ Scheduler-facing contract (driven once per prefill chunk):
 ``finish`` (or ``abort`` on mid-flight eviction).  ``absorb`` may stream
 completed pages eagerly; ``finish`` flushes the ragged tail and publishes
 the slot's device-side sequence length.
+
+**Checksummed handoff.**  The streamed copy is the one place KV bytes
+transit between memories, so it carries the engine's corruption defense:
+a per-page CRC32 over the packed payload words is computed on the prefill
+side before each chunk of pages is copied, and recomputed from the decode
+pool right after.  A mismatch (bit flip in flight, dropped copy) refetches
+the chunk with capped exponential backoff; if the mismatch persists
+through every attempt the transport raises a classified
+:class:`~repro.engine.resilience.TransportError` and the scheduler
+recomputes the request from its prompt.  Injected transport faults
+(``chunk_drop`` / ``chunk_dup`` / ``page_corrupt``) land here too -- see
+:mod:`repro.engine.faults`.
 """
 from __future__ import annotations
 
@@ -36,6 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import paged_cache
+
+from .resilience import TransportError, page_checksums
 
 
 class ColocatedTransport:
@@ -139,6 +153,8 @@ class StreamedTransport:
     def _copy_pages(self, engine, task, lo: int, hi: int) -> None:
         if lo >= hi:
             return
+        injector = engine.injector
+        retry = engine.retry_policy
         src_ids = jnp.arange(lo, hi, dtype=jnp.int32)
         dst_ids = jnp.asarray(
             engine.pool.tables[task.slot, lo:hi].copy(), jnp.int32)
@@ -148,8 +164,38 @@ class StreamedTransport:
             if self._cross:  # the actual device-to-device page transfer
                 kpg = jax.device_put(kpg, engine.device)
                 vpg = jax.device_put(vpg, engine.device)
-            dst = engine.states[li]
-            engine.states[li] = dst._replace(
-                k_pool=dst.k_pool.at[dst_ids].set(kpg),
-                v_pool=dst.v_pool.at[dst_ids].set(vpg))
+            # prefill-side truth: CRC per page over the packed words,
+            # before anything can go wrong in the copy
+            want = page_checksums(kpg, vpg)
+            for attempt in range(retry.max_attempts):
+                fault = injector.take_transport()
+                kw, vw = kpg, vpg
+                if fault is not None and fault.kind == "page_corrupt":
+                    kw = jnp.asarray(injector.corrupt(kw))
+                if fault is None or fault.kind != "chunk_drop":
+                    dst = engine.states[li]
+                    new = dst._replace(
+                        k_pool=dst.k_pool.at[dst_ids].set(kw),
+                        v_pool=dst.v_pool.at[dst_ids].set(vw))
+                    if fault is not None and fault.kind == "chunk_dup":
+                        # duplicate delivery: the copy is idempotent, so
+                        # a replayed chunk must verify clean
+                        new = new._replace(
+                            k_pool=new.k_pool.at[dst_ids].set(kw),
+                            v_pool=new.v_pool.at[dst_ids].set(vw))
+                    engine.states[li] = new
+                # decode-side verification: recompute from the pool the
+                # decode step will actually read
+                got = page_checksums(engine.states[li].k_pool[dst_ids],
+                                     engine.states[li].v_pool[dst_ids])
+                if got == want:
+                    break
+                engine.stats.note_crc_mismatch()
+                engine.stats.note_retry()
+                retry.sleep(attempt)
+            else:
+                raise TransportError(
+                    f"slot {task.slot} pages {lo}:{hi} layer {li}: page "
+                    f"CRC mismatch persisted through "
+                    f"{retry.max_attempts} fetch attempts")
         task.streamed = hi

@@ -108,11 +108,27 @@ class PrefillWorker:
 
 
 class DecodeWorker:
-    """One jitted batched decode step over the shared page pool."""
+    """One jitted batched decode step over the shared page pool.
+
+    The step returns ``(next_tokens, bad, states)`` rather than raw
+    logits: the argmax AND the NaN/Inf guard (``bad[s]`` = slot ``s``'s
+    last-position logits contain a non-finite value) are computed inside
+    the jit, so the scheduler's single per-step host transfer carries the
+    guard verdict for free.  ``nan_mask`` is a traced ``(n_slots,)`` bool
+    argument the fault injector uses to poison one slot's logits -- all
+    False (the no-fault case) compiles to the same program.
+    """
 
     def __init__(self, model, policy):
-        self._step = jax.jit(
-            lambda p, t, s: model.decode_step(p, t, s, policy))
+        def _step(p, t, s, nan_mask):
+            logits, s = model.decode_step(p, t, s, policy)
+            logits = jnp.where(nan_mask[:, None, None], jnp.nan, logits)
+            last = logits[:, -1, :]
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            bad = ~jnp.isfinite(last).all(axis=-1)
+            return nxt, bad, s
 
-    def step(self, params, tokens, states):
-        return self._step(params, tokens, states)
+        self._step = jax.jit(_step)
+
+    def step(self, params, tokens, states, nan_mask):
+        return self._step(params, tokens, states, nan_mask)

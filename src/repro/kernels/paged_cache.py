@@ -51,6 +51,23 @@ import numpy as np
 DEFAULT_PAGE_SIZE = 64
 
 
+class PoolError(RuntimeError):
+    """Classified page-allocator misuse: freeing or releasing a slot that
+    owns nothing (double free), growing/truncating a slot that was never
+    allocated, or a slot index outside the table.
+
+    Raising (instead of the old silent no-op / bare KeyError) is what
+    makes the engine's quarantine path safe: once a slot's pages are
+    quarantined, any further ``free_slot`` on it fails loudly rather than
+    silently recycling suspect pages.  Lives in the kernels layer (the
+    allocator never imports the engine); the serve CLI maps it to its own
+    exit code like the ``repro.engine.resilience.EngineError`` family.
+    """
+
+    exit_code = 76
+    kind = "pool"
+
+
 def page_alignment(fmt=None) -> int:
     """Smallest legal page-size multiple for ``fmt``.
 
@@ -249,7 +266,13 @@ def release_slot(cache: PagedKVCache, slot: int) -> PagedKVCache:
     """Unmap a slot (free/evict).  Pool bytes are left stale on purpose --
     unmapped pages are masked by every reader, and the next
     :func:`write_prefill`/:func:`append_decode` through a fresh table
-    overwrites them (page reuse)."""
+    overwrites them (page reuse).  An out-of-range slot raises
+    :class:`PoolError` (an in-range device check would need a host
+    transfer per release; the host allocator's ``free_slot`` owns the
+    already-freed check)."""
+    if not 0 <= int(slot) < cache.n_slots:
+        raise PoolError(
+            f"release_slot: slot {slot} outside 0..{cache.n_slots - 1}")
     return cache._replace(
         block_tables=cache.block_tables.at[slot].set(-1),
         seq_lens=cache.seq_lens.at[slot].set(0))
@@ -335,6 +358,9 @@ class PagePool:
         self._ns: dict = {}             # tag -> {owned, lens, tables}
         self._ensure_ns("")
         self.peak_pages_used = 0
+        # pages pulled out of circulation by quarantine_slot: suspected-bad
+        # physical memory, never returned to the free list
+        self.quarantined: List[int] = []
 
     def _ensure_ns(self, ns: str) -> dict:
         if ns not in self._ns:
@@ -406,11 +432,27 @@ class PagePool:
                 and max(needs) <= self.pages_per_seq)
 
     # -- mutations -----------------------------------------------------------
+    def _check_slot(self, op: str, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise PoolError(
+                f"{op}: slot {slot} outside 0..{self.n_slots - 1}")
+
+    def _owned_pages(self, op: str, slot: int, space: dict,
+                     ns: str) -> List[int]:
+        pages = space["owned"].get(slot)
+        if pages is None:
+            raise PoolError(
+                f"{op}: slot {slot} owns no pages in namespace {ns!r}")
+        return pages
+
     def allocate(self, slot: int, n_tokens: int, *, ns: str = "") -> bool:
         """Map pages for a fresh ``n_tokens``-token sequence in ``slot``."""
+        self._check_slot("allocate", slot)
         space = self._ensure_ns(ns)
-        assert slot not in space["owned"], \
-            f"slot {slot} already allocated in namespace {ns!r}"
+        if slot in space["owned"]:
+            raise PoolError(
+                f"allocate: slot {slot} already allocated in namespace "
+                f"{ns!r}")
         if not self.can_admit(n_tokens):
             return False
         need = self.pages_for(max(n_tokens, 1))
@@ -426,8 +468,9 @@ class PagePool:
         """Grow ``slot``'s mapping to cover ``n_tokens`` total tokens.
         False when the pool is out of pages (caller evicts) or the block
         table is full (sequence hit ``pages_per_seq * page_size``)."""
+        self._check_slot("ensure_capacity", slot)
         space = self._ensure_ns(ns)
-        pages = space["owned"][slot]
+        pages = self._owned_pages("ensure_capacity", slot, space, ns)
         need = self.pages_for(n_tokens)
         if need > self.pages_per_seq:
             return False
@@ -448,8 +491,9 @@ class PagePool:
         length to ``n_tokens`` and return exactly the pages past the
         truncation point to the free list (LIFO, like ``free_slot``).
         -> #pages freed."""
+        self._check_slot("truncate", slot)
         space = self._ensure_ns(ns)
-        pages = space["owned"][slot]
+        pages = self._owned_pages("truncate", slot, space, ns)
         keep = self.pages_for(max(n_tokens, 1))
         excess = pages[keep:]
         del pages[keep:]
@@ -460,7 +504,15 @@ class PagePool:
 
     def free_slot(self, slot: int) -> int:
         """Return ``slot``'s pages -- across EVERY namespace, atomically --
-        to the free list; -> #pages freed."""
+        to the free list; -> #pages freed.  A slot that owns nothing in
+        any namespace (never allocated, already freed, or quarantined)
+        raises :class:`PoolError`: the old silent no-op let a double free
+        pass unnoticed, which the quarantine path cannot afford."""
+        self._check_slot("free_slot", slot)
+        if not any(slot in space["owned"] for space in self._ns.values()):
+            raise PoolError(
+                f"free_slot: slot {slot} owns no pages in any namespace "
+                f"(double free, or freed after quarantine?)")
         freed = 0
         for space in self._ns.values():
             pages = space["owned"].pop(slot, [])
@@ -470,12 +522,33 @@ class PagePool:
             freed += len(pages)
         return freed
 
+    def quarantine_slot(self, slot: int) -> int:
+        """Pull ``slot``'s pages -- across EVERY namespace -- OUT of
+        circulation: they move to ``self.quarantined`` instead of the free
+        list, so physical pages that held non-finite state are never
+        handed to another sequence; -> #pages quarantined.  A subsequent
+        ``free_slot`` on the same slot raises (no double release)."""
+        self._check_slot("quarantine_slot", slot)
+        if not any(slot in space["owned"] for space in self._ns.values()):
+            raise PoolError(
+                f"quarantine_slot: slot {slot} owns no pages in any "
+                f"namespace")
+        n = 0
+        for space in self._ns.values():
+            pages = space["owned"].pop(slot, [])
+            self.quarantined.extend(pages)
+            space["tables"][slot] = -1
+            space["lens"][slot] = 0
+            n += len(pages)
+        return n
+
     def stats(self) -> dict:
         return {
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "pages_used": self.pages_used,
             "peak_pages_used": self.peak_pages_used,
+            "quarantined_pages": len(self.quarantined),
             "occupancy": round(self.occupancy(), 4),
             "internal_fragmentation":
                 round(self.internal_fragmentation(), 4),

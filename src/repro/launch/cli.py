@@ -93,3 +93,36 @@ def add_speculative_args(ap):
                          "pool namespace, so even the same arch drafts "
                          "at container-width bytes)")
     return ap
+
+
+def add_resilience_args(ap):
+    """Fault-injection and recovery flags (serve.py and the chaos bench).
+
+    The recovery machinery is always on -- these flags only bound it
+    (deadlines, requeue caps, the watchdog) or exercise it
+    (``--fault-plan``).  See docs/resilience.md for the fault taxonomy and
+    the recovery matrix.
+    """
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault schedule: an inline spec "
+                         "'kind@step[/slot],...,seed=N' (kinds: "
+                         "chunk_drop chunk_dup page_corrupt nan_logits "
+                         "draft_div step_exception pool_exhaust) or a "
+                         "path to a JSON file "
+                         "{\"seed\": N, \"faults\": [{kind, step, slot}]}; "
+                         "under a plan of recoverable faults the served "
+                         "tokens are bit-identical to the fault-free run")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request deadline in engine steps from run "
+                         "start (deterministic, unlike wall clock); an "
+                         "expired request fails with a classified "
+                         "DeadlineExceeded result instead of hanging "
+                         "(default: no deadline)")
+    ap.add_argument("--max-requeues", type=int, default=None,
+                    help="evictions a request survives before failing as "
+                         "a DeadLetterRequest (default: requeue forever)")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="wall-clock budget per engine step; 3 "
+                         "consecutive over-budget steps raise a "
+                         "classified WatchdogTimeout (default: off)")
+    return ap

@@ -27,12 +27,20 @@ out of one block-table page pool:
     pages reused immediately -- the vLLM memory model on top of
     transprecision packed storage.  ``--page-size`` sets the granule,
     ``--pool-pages`` caps the pool (default: no memory pressure);
-  * ``--stats-out`` streams per-step scheduler/pool stats as JSON lines.
+  * ``--stats-out`` streams per-step scheduler/pool stats as JSON lines;
+  * the self-healing layer (docs/resilience.md) is always on:
+    ``--deadline-steps`` / ``--max-requeues`` / ``--watchdog-s`` bound it,
+    ``--fault-plan`` exercises it with a deterministic seeded fault
+    schedule, and a failed request surfaces as a classified
+    ``EngineError`` -- ``python -m repro.launch.serve`` exits with the
+    error's distinct code (70-76) plus one structured stderr line, never
+    a bare traceback.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 
 import jax
 import numpy as np
@@ -41,14 +49,16 @@ from repro import configs
 from repro.core.formats import BINARY8
 from repro.core.policy import get_policy
 from repro.tuning.artifact import load_policy
-from repro.engine import (ColocatedTransport, Engine, EngineStats, Request,
-                          SpeculativeDecoder, StreamedTransport)
+from repro.engine import (ColocatedTransport, Engine, EngineStats,
+                          FaultPlan, Request, SpeculativeDecoder,
+                          StreamedTransport, exit_code_for, format_error)
 from repro.kernels import dispatch
-from repro.launch.cli import add_backend_args, add_speculative_args
+from repro.launch.cli import (add_backend_args, add_resilience_args,
+                              add_speculative_args)
 from repro.models import qparams
 from repro.models.registry import build
 
-__all__ = ["Request", "build_draft", "main"]
+__all__ = ["Request", "build_draft", "cli_main", "main"]
 
 
 def build_draft(model, cfg, *, arch=None, reduced=False, k):
@@ -94,6 +104,7 @@ def main(argv=None):
     ap.add_argument("--stats-out", default=None,
                     help="write per-step engine stats as JSON lines here")
     add_speculative_args(ap)
+    add_resilience_args(ap)
     args = ap.parse_args(argv)
 
     # the policy-level override wins inside attention.decode_impl(), so no
@@ -138,6 +149,11 @@ def main(argv=None):
         print(f"[serve] speculative: draft={speculative.cfg.arch} "
               f"(binary8 packed weights, binary8 KV), k={args.speculate_k}")
 
+    fault_plan = None
+    if args.fault_plan:
+        fault_plan = FaultPlan.load(args.fault_plan)
+        print(f"[serve] fault plan: {fault_plan.describe()}")
+
     transport = StreamedTransport() if args.disaggregate \
         else ColocatedTransport()
     engine = Engine(model, cfg, policy, params,
@@ -145,7 +161,11 @@ def main(argv=None):
                     page_size=args.page_size, pool_pages=args.pool_pages,
                     prefill_chunk=args.prefill_chunk, transport=transport,
                     stats=EngineStats(args.stats_out),
-                    speculative=speculative)
+                    speculative=speculative,
+                    fault_plan=fault_plan,
+                    deadline_steps=args.deadline_steps,
+                    max_requeues=args.max_requeues,
+                    watchdog_s=args.watchdog_s)
     engine.run(reqs)
 
     s = engine.summary
@@ -173,8 +193,43 @@ def main(argv=None):
           f"ttft mean: {s['ttft_mean_s']}s, "
           f"peak prefill staging: {s['peak_prefill_transient_tokens']} "
           f"tokens)")
+    if fault_plan is not None or s["failures"] or s["faults_injected"]:
+        print(f"[serve] resilience: faults={s['faults_injected']} "
+              f"(unfired: {s['faults_unfired']}), "
+              f"retries={s['retries']}, "
+              f"crc_mismatches={s['crc_mismatches']}, "
+              f"quarantines={s['quarantines']}, "
+              f"degraded_steps={s['degraded_steps']}, "
+              f"breaker_trips={s['breaker_trips']}, "
+              f"deadline_misses={s['deadline_misses']}, "
+              f"dead_letters={s['dead_letters']}, "
+              f"failures={s['failures']}")
     return reqs
 
 
+def cli_main(argv=None) -> int:
+    """Process entry point: classified engine errors become distinct exit
+    codes (70-76) plus one structured stderr line instead of a bare
+    traceback.  In-process callers use :func:`main`, which raises."""
+    try:
+        reqs = main(argv)
+    except Exception as e:  # noqa: BLE001 -- classified errors only
+        code = exit_code_for(e)
+        if code is None:
+            raise  # a real bug deserves its traceback
+        print(format_error(e), file=sys.stderr)
+        return code
+    failed = [r for r in reqs if r.error is not None]
+    if failed:
+        # requests that failed with classified results (deadline misses,
+        # dead letters): the run completed, but the process should not
+        # exit 0 -- report the most severe class
+        worst = max(failed, key=lambda r: exit_code_for(r.error) or 0)
+        print(format_error(worst.error, requests=len(failed)),
+              file=sys.stderr)
+        return exit_code_for(worst.error) or 70
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(cli_main())

@@ -216,7 +216,11 @@ def test_page_pool_interleavings_never_double_map(ops, num_pages,
         elif op == "grow" and slot in pool.owned:
             pool.ensure_capacity(slot, toks)
         elif op == "free":
-            pool.free_slot(slot)
+            if slot in pool.owned:
+                pool.free_slot(slot)
+            else:  # empty slot: classified double-free, never a no-op
+                with pytest.raises(pc.PoolError):
+                    pool.free_slot(slot)
         owned = [p for pages in pool.owned.values() for p in pages]
         assert len(owned) == len(set(owned))          # never double-mapped
         assert not set(owned) & set(pool.free)        # disjoint from free
@@ -269,7 +273,11 @@ def test_page_pool_namespace_interleavings(ops, num_pages, pages_per_seq):
             owned_before = sum(
                 len(pool.ns_owned(t).get(slot, ()))
                 for t in pool.namespaces)
-            assert pool.free_slot(slot) == owned_before  # both ns at once
+            if owned_before:
+                assert pool.free_slot(slot) == owned_before  # both ns
+            else:  # empty slot: classified double-free, never a no-op
+                with pytest.raises(pc.PoolError):
+                    pool.free_slot(slot)
         owned = [p for t in pool.namespaces
                  for pages in pool.ns_owned(t).values() for p in pages]
         assert len(owned) == len(set(owned))          # never double-mapped

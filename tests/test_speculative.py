@@ -131,7 +131,11 @@ def test_pool_namespace_interleavings_seeded():
         elif op == "free":
             expect = sum(len(pool.ns_owned(t).get(slot, ()))
                          for t in pool.namespaces)
-            assert pool.free_slot(slot) == expect
+            if expect:
+                assert pool.free_slot(slot) == expect
+            else:  # empty slot: classified double-free, never a no-op
+                with pytest.raises(pc.PoolError):
+                    pool.free_slot(slot)
         owned = [p for t in pool.namespaces
                  for pages in pool.ns_owned(t).values() for p in pages]
         assert len(owned) == len(set(owned))
