@@ -23,7 +23,15 @@ aggregates:
   (``retries`` / ``crc_mismatches`` / ``quarantines``), and
   ``token_parity`` (1 iff the faulted tokens are bit-identical to the
   clean run -- recoverable faults may cost steps, never tokens).
+* ``bench="engine_serve_router"`` -- the asyncio front-end under a bursty
+  arrival trace (half the requests land back-to-back, then a gap), at 1
+  and 2 prefill workers: rows carry ``prefill_workers`` and
+  ``queue_wait_mean_s`` next to TTFT/tok/s, so the concurrency win on
+  time-to-first-token stays a diffable number (tokens themselves are
+  pinned bit-identical by tests/test_router.py, so only latency moves).
 """
+import asyncio
+
 import numpy as np
 
 SPECULATE_K = 4
@@ -144,6 +152,40 @@ def collect(requests=4, slots=2, prompt_len=32, max_new=8, page_size=8,
                 "draft_fmt": draft.policy.fmt("attn_w").name,
                 "speculate_k": draft.k,
             })
+            # router rows: the same prompt set arriving as a bursty trace
+            # through the asyncio front-end, at 1 vs 2 prefill workers --
+            # the second worker overlaps prefills, so queue wait (and
+            # with it TTFT) drops while tokens stay bit-identical
+            from repro.engine import ColocatedTransport, run_router
+            for n_workers in (1, 2):
+                eng = Engine(
+                    model, cfg, policy, params, slots=slots,
+                    capacity=capacity, page_size=page_size,
+                    transport=[ColocatedTransport()
+                               for _ in range(n_workers)],
+                    prefill_workers=n_workers)
+                reqs = [Request(i, list(p), max_new)
+                        for i, p in enumerate(prompts)]
+                asyncio.run(run_router(
+                    eng, reqs, burst=max(1, requests // 2), gap_s=0.02))
+                s = eng.summary
+                entries.append({
+                    "bench": "engine_serve_router",
+                    "impl": impl,
+                    "fmt": policy.fmt("kv_cache").name,
+                    "shape": shape,
+                    "prefill_workers": n_workers,
+                    "ttft_mean_s": s["ttft_mean_s"],
+                    "queue_wait_mean_s": s["queue_wait_mean_s"],
+                    "tokens_per_s": s["tokens_per_s"],
+                    "peak_prefill_tokens":
+                        s["peak_prefill_transient_tokens"],
+                    "peak_prefill_bytes":
+                        s["peak_prefill_transient_bytes"],
+                    "page_size": page_size,
+                    "decode_tokens": s["decode_tokens"],
+                    "evictions": s["evictions"],
+                })
     return entries
 
 
@@ -162,8 +204,13 @@ def report(entries=None) -> list:
                         f";faults={e['faults_injected']}"
                         f";retries={e['retries']}"
                         f";clean_tok_s={e['clean_tokens_per_s']:.1f}")
+        name = f"{e['bench']}_{e['impl']}_{e['fmt']}_{e['shape']}"
+        if "prefill_workers" in e:
+            name += f"_w{e['prefill_workers']}"
+            derived += (f";queue_wait_mean_s={e['queue_wait_mean_s']}"
+                        f";prefill_workers={e['prefill_workers']}")
         out.append((
-            f"{e['bench']}_{e['impl']}_{e['fmt']}_{e['shape']}",
+            name,
             float(e["ttft_mean_s"] or 0.0) * 1e6,
             derived,
         ))

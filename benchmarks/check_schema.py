@@ -194,6 +194,32 @@ def check(committed_dir: str, smoke_dir: str) -> list:
                         f"{name} ({label}): chaos rows without fired "
                         f"faults / retries / clean_tokens_per_s / "
                         f"token_parity == 1: {bad}")
+                # the router rows pin the async front-end's latency story:
+                # TTFT + queue wait at 1 and 2 prefill workers must both
+                # stay in the sweep (the 1-vs-2 delta IS the measurement)
+                router = [e for e in rows
+                          if e.get("bench") == "engine_serve_router"]
+                if not router:
+                    problems.append(
+                        f"{name} ({label}): router rows "
+                        f"(bench='engine_serve_router') missing from the "
+                        f"sweep")
+                workers = {e.get("prefill_workers") for e in router}
+                if router and not {1, 2} <= workers:
+                    problems.append(
+                        f"{name} ({label}): router worker coverage lost "
+                        f"-- need prefill_workers 1 and 2 rows, have "
+                        f"{sorted(workers)}")
+                bad = [e.get("impl", "?") + "/w" +
+                       str(e.get("prefill_workers", "?"))
+                       for e in router
+                       if not e.get("prefill_workers")
+                       or e.get("queue_wait_mean_s") is None]
+                if bad:
+                    problems.append(
+                        f"{name} ({label}): router rows without positive "
+                        f"prefill_workers / a queue_wait_mean_s "
+                        f"measurement: {bad}")
         if name == "BENCH_tuning.json":
             # the autotuning rows are the paper's headline claim at serve
             # scale: one row per model family and at least one app row,

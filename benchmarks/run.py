@@ -83,6 +83,12 @@ def run_smoke(args) -> None:
     assert chaos and all(e["token_parity"] == 1
                          and e["faults_injected"] > 0
                          for e in chaos), chaos
+    # the router rows must keep both worker counts in the trajectory (the
+    # 1-vs-2 TTFT delta is the async front-end's measurement) with the
+    # queue-wait split actually measured
+    router = [e for e in serve if e["bench"] == "engine_serve_router"]
+    assert {e["prefill_workers"] for e in router} >= {1, 2}, router
+    assert all(e["queue_wait_mean_s"] is not None for e in router), router
     # the tuning bench must keep one row per model family + app rows, each
     # with a strictly-sub-f32 byte footprint (the paper's thesis applied
     # at serve scale -- losing a family means the tuner stopped finding

@@ -25,6 +25,10 @@ Layers (each separately testable):
 * :mod:`repro.engine.resilience` -- the recovery machinery: classified
   :class:`EngineError` results, retry/backoff, per-page checksums, and
   the speculative :class:`CircuitBreaker`.
+* :mod:`repro.engine.router` -- the asyncio serving front-end: concurrent
+  ``await submit()`` with per-request futures/streams, multiple prefill
+  workers (one transport each) feeding the single decode engine, and
+  retry/shed/reject decisions keyed off the classified error kinds.
 """
 from .faults import Fault, FaultInjector, FaultPlan, SimulatedFault
 from .reference import synchronous_generate
@@ -32,6 +36,7 @@ from .resilience import (CircuitBreaker, DeadLetterRequest,
                          DeadlineExceeded, EngineError, RetryPolicy,
                          StepFailure, TransportError, WatchdogTimeout,
                          exit_code_for, format_error)
+from .router import Router, RouterTicket, run_router
 from .scheduler import Engine, Request
 from .speculative import SpeculativeDecoder
 from .stats import EngineStats
@@ -42,8 +47,9 @@ __all__ = [
     "CircuitBreaker", "ColocatedTransport", "DeadLetterRequest",
     "DeadlineExceeded", "DecodeWorker", "Engine", "EngineError",
     "EngineStats", "Fault", "FaultInjector", "FaultPlan", "PrefillTask",
-    "PrefillWorker", "Request", "RetryPolicy", "SimulatedFault",
-    "SpeculativeDecoder", "StepFailure", "StreamedTransport",
-    "TransportError", "WatchdogTimeout", "exit_code_for", "format_error",
+    "PrefillWorker", "Request", "RetryPolicy", "Router", "RouterTicket",
+    "SimulatedFault", "SpeculativeDecoder", "StepFailure",
+    "StreamedTransport", "TransportError", "WatchdogTimeout",
+    "exit_code_for", "format_error", "run_router",
     "synchronous_generate",
 ]

@@ -12,15 +12,22 @@ Each engine step does, in order:
 1. **Deadlines** -- requests (queued or slotted) past their per-request
    step deadline fail with a classified
    :class:`~repro.engine.resilience.DeadlineExceeded` result (slot
-   released, never a hang).
-2. **Admission** -- when no prompt is in flight and a slot is free, pop
+   released, never a hang).  Deadlines count engine steps since the
+   request was *enqueued* (for :meth:`Engine.run` that is run start; for
+   the async router it is submission time).
+2. **Admission** -- while a prefill worker is idle and a slot is free, pop
    the queue head if ``PagePool.can_admit`` says its KV (plus one decode
-   token) fits, and reserve its pages up front.
-3. **One prefill chunk** -- the in-flight prompt advances by one chunk
-   (default: one page of tokens) via :class:`~repro.engine.worker.
-   PrefillWorker`; finished pages move through the
-   :mod:`~repro.engine.transport` into the decode pool.  Because only a
-   chunk runs per step, a long prompt never stalls the decode batch below.
+   token) fits, and reserve its pages up front.  With ``prefill_workers
+   == 1`` (the default) this is the classic single-prompt-in-flight loop;
+   the router runs 2+ workers, each prefilling its own prompt through its
+   own transport.
+3. **One prefill chunk per in-flight prompt** -- every active
+   :class:`~repro.engine.worker.PrefillTask` advances by one chunk
+   (default: one page of tokens) via its worker's
+   :class:`~repro.engine.worker.PrefillWorker`; finished pages move
+   through that worker's :mod:`~repro.engine.transport` into the decode
+   pool.  Because only a chunk runs per step, a long prompt never stalls
+   the decode batch below.
 4. **Growth / eviction** -- every decoding slot needs a mapped page for
    its next token; when the pool runs dry the most recently admitted
    sequence (decoding *or* mid-prefill) is evicted back to the queue head
@@ -28,11 +35,18 @@ Each engine step does, in order:
    always finishes, so the loop makes progress).  A request evicted more
    than ``max_requeues`` times fails as a
    :class:`~repro.engine.resilience.DeadLetterRequest`.
-5. **One batched decode step** (or speculation round) -- the mid-prefill
-   slot's block-table row is masked to -1 on the device, so its
-   in-progress KV is invisible: ``append_decode`` drops the write and its
-   length does not advance; the garbage logits for that row are discarded
-   host-side.
+5. **One batched decode step** (or speculation round) -- every
+   mid-prefill slot's block-table row is masked to -1 on the device, so
+   its in-progress KV is invisible: ``append_decode`` drops the write and
+   its length does not advance; the garbage logits for those rows are
+   discarded host-side.
+
+**Serving mode.**  :meth:`Engine.run` drives a fixed request list to
+completion; the async router (:mod:`repro.engine.router`) instead feeds
+the same loop incrementally through :meth:`Engine.enqueue` /
+:meth:`Engine.step` / :meth:`Engine.finalize` -- ``step()`` returns the
+requests that reached a terminal state (done or classified failure) so
+the router can resolve their futures without polling.
 
 **Self-healing** (see docs/resilience.md for the full recovery matrix):
 batched steps run through a retry wrapper (transient exceptions re-run the
@@ -52,8 +66,11 @@ these paths: under a plan of recoverable faults the greedy tokens are
 bit-identical to the fault-free run.
 
 Per-step observability flows through :class:`~repro.engine.stats.
-EngineStats` (queue depth, pool occupancy / fragmentation, TTFT, decode
-tokens/s, fault/recovery counters) as JSON lines.
+EngineStats` (queue depth, pool occupancy / fragmentation, TTFT vs
+queue-wait, decode tokens/s, per-worker prefill utilization,
+fault/recovery counters) as JSON lines.  The summary line and the stream
+close run in a ``finally`` (:meth:`Engine.finalize`), so even a run that
+raises a classified error leaves a complete, closed JSONL stream behind.
 """
 from __future__ import annotations
 
@@ -99,15 +116,21 @@ class Request:
         self.done = False
         self.evictions = 0
         self.error: Optional[Exception] = None  # classified EngineError
+        self.enqueued_step = 0     # engine step at enqueue (deadline base)
 
     @property
     def failed(self) -> bool:
         return self.error is not None
 
     def reset(self):
-        """Requeued after eviction: generation restarts from the prompt."""
+        """Requeued after eviction: generation restarts from the prompt.
+
+        Also clears any stale classified error -- a request retried after
+        a transient failure must not read as ``failed`` once it requeues
+        (the terminal state is whatever THIS attempt produces)."""
         self.generated = []
         self.evictions += 1
+        self.error = None
 
 
 def _insert_slot(all_states, one_states, slot: int, n_slots: int):
@@ -128,15 +151,23 @@ class Engine:
     layer); ``0`` forces whole-prompt prefill (the old serve.py behavior,
     and the only mode for prefix-LM archs).
 
+    transport / prefill_workers: ``transport`` may be a single transport
+    (the classic one-prompt-in-flight engine) or a sequence of them -- one
+    per concurrent prefill worker.  ``prefill_workers`` defaults to the
+    number of transports; when both are given they must agree (every
+    worker owns exactly one transport, because a
+    :class:`~repro.engine.transport.StreamedTransport` carries a private
+    single-slot source pool that cannot serve two prompts at once).
+
     Resilience knobs (all optional; docs/resilience.md):
 
     fault_plan: a :class:`~repro.engine.faults.FaultPlan` to inject
         deterministically during the run (None = no faults; the injector
         hooks are no-ops).
     deadline_steps: default per-request deadline in *engine steps* from
-        run start (deterministic, unlike wall clock); a request's own
-        ``deadline_steps`` overrides it.  Expired requests fail with a
-        classified ``DeadlineExceeded`` result.
+        the request's enqueue (deterministic, unlike wall clock); a
+        request's own ``deadline_steps`` overrides it.  Expired requests
+        fail with a classified ``DeadlineExceeded`` result.
     max_requeues: evictions a request survives before failing as a
         ``DeadLetterRequest`` (None = requeue forever, the old behavior).
     retry_policy: backoff schedule for step retries and transport
@@ -153,7 +184,8 @@ class Engine:
                  page_size: int = paged_cache.DEFAULT_PAGE_SIZE,
                  pool_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 transport=None, stats: Optional[EngineStats] = None,
+                 transport=None, prefill_workers: Optional[int] = None,
+                 stats: Optional[EngineStats] = None,
                  speculative=None, calibration_tap=None,
                  fault_plan: Optional[FaultPlan] = None,
                  deadline_steps: Optional[int] = None,
@@ -212,13 +244,39 @@ class Engine:
                 cfg.head_dim, policy.dtype("kv_cache", layer=li))
         self.states = states
 
-        self.transport = transport if transport is not None \
-            else ColocatedTransport()
-        self.transport.setup(self)
+        if transport is None:
+            n_workers = 1 if prefill_workers is None else int(prefill_workers)
+            transports = [ColocatedTransport() for _ in range(n_workers)]
+        elif isinstance(transport, (list, tuple)):
+            transports = list(transport)
+            n_workers = (len(transports) if prefill_workers is None
+                         else int(prefill_workers))
+        else:
+            transports = [transport]
+            n_workers = 1 if prefill_workers is None else int(prefill_workers)
+        if n_workers < 1:
+            raise ValueError(f"prefill_workers must be >= 1, got {n_workers}")
+        if len(transports) != n_workers:
+            raise ValueError(
+                f"prefill_workers={n_workers} needs exactly that many "
+                f"transports (each worker owns one source pool), got "
+                f"{len(transports)} -- pass transport=[...] with one entry "
+                f"per worker")
+        if len(set(map(id, transports))) != len(transports):
+            raise ValueError(
+                "the same transport instance appears twice in the worker "
+                "list; each prefill worker needs its own transport")
+        self.transports = transports
+        self.transport = transports[0]  # back-compat single-worker alias
+        self.n_prefill_workers = n_workers
+        for tr in self.transports:
+            tr.setup(self)
         chunk_tokens = page if prefill_chunk is None else prefill_chunk
-        self.prefill_worker = PrefillWorker(model, cfg, policy,
-                                            self.transport, self.stats,
-                                            chunk_tokens=chunk_tokens)
+        self.prefill_workers = [
+            PrefillWorker(model, cfg, policy, tr, self.stats,
+                          chunk_tokens=chunk_tokens)
+            for tr in self.transports]
+        self.prefill_worker = self.prefill_workers[0]
         self.decode_worker = DecodeWorker(model, policy)
         self.kv_bytes_per_token = sum(
             cfg.n_kv * cfg.head_dim * 2
@@ -233,32 +291,51 @@ class Engine:
         self._zero_mask = jnp.zeros((slots,), jnp.bool_)
         self.summary: Optional[dict] = None
 
+        # serving-loop state: run() and the async router drive the same
+        # incremental step machine (enqueue -> step* -> finalize)
+        self._queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * slots
+        self._admitted_at = [0] * slots  # admission counter per slot
+        self._admissions = 0             # (LIFO eviction: newest first)
+        self._tasks: List[PrefillTask] = []  # in-flight prompts, <= workers
+        self._tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._terminal = 0        # requests that reached a terminal state
+        self._step_done: List[Request] = []  # terminal this step
+        self.decode_steps = 0
+        self._engine_step = 0
+        self._progressed = False  # non-step progress (failures) this step
+        self._new_tokens = 0
+        self._wd_over = 0         # consecutive over-budget steps (watchdog)
+        self._finalized = False
+
     # ------------------------------------------------------------------ utils
-    def _push_tables(self, mask_slot: Optional[int] = None) -> None:
-        """Mirror the host block tables onto the device; ``mask_slot``
-        hides a mid-prefill slot from the decode step (-1 rows drop
-        ``append_decode`` writes and keep its length frozen)."""
+    def _push_tables(self, mask_slots=()) -> None:
+        """Mirror the host block tables onto the device; ``mask_slots``
+        hides the mid-prefill slots from the decode step (-1 rows drop
+        ``append_decode`` writes and keep their lengths frozen)."""
         tables = self.pool.tables
-        if mask_slot is not None:
+        if mask_slots:
             tables = tables.copy()
-            tables[mask_slot] = -1
+            for si in mask_slots:
+                tables[si] = -1
         for li in self.attn_layers:
             self.states[li] = paged_cache.set_block_tables(self.states[li],
                                                            tables)
         if self.spec is not None:
             dtables = self.pool.ns_tables(self.spec.NS)
-            if mask_slot is not None:
+            if mask_slots:
                 dtables = dtables.copy()
-                dtables[mask_slot] = -1
+                for si in mask_slots:
+                    dtables[si] = -1
             self.spec.push_tables(dtables)
 
-    def _init_pstates(self):
+    def _init_pstates(self, transport):
         """B=1 recurrent-layer states for a fresh prompt (attn -> None:
         attention KV goes straight into the page pool)."""
         one = self.model.init_state(1, self.page, self.policy)
         one = [None if k == "attn" else s
                for k, s in zip(self.cfg.attn_pattern, one)]
-        return self.transport.to_prefill(one)
+        return transport.to_prefill(one)
 
     def _fault_mask(self, kind: str, decoding: List[int]):
         """Injected per-slot poison mask for the jitted step (the cached
@@ -267,361 +344,412 @@ class Engine:
         mask = self.injector.slot_mask(kind, decoding, self.slots)
         return self._zero_mask if mask is None else jnp.asarray(mask)
 
-    # -------------------------------------------------------------------- run
-    def run(self, reqs: List[Request]) -> List[Request]:
+    def _check_feasible(self, r: Request) -> None:
+        worst = self.pool.pages_for(len(r.prompt) + r.max_new)
+        total = worst * (2 if self.spec is not None else 1)
+        if worst > self.pages_per_seq or total > self.num_pages:
+            raise ValueError(
+                f"a single request needs {total} pages (prompt "
+                f"{len(r.prompt)} + max-new {r.max_new}, page size "
+                f"{self.page}"
+                + (", x2 for the draft namespace"
+                   if self.spec is not None else "")
+                + f") but the pool offers min({self.pages_per_seq} "
+                f"per-seq, {self.num_pages} total); raise "
+                f"--capacity/--pool-pages")
+
+    def _deadline_of(self, r: Request) -> Optional[int]:
+        return (r.deadline_steps if r.deadline_steps is not None
+                else self.deadline_steps)
+
+    def _task_for_slot(self, si: int) -> Optional[PrefillTask]:
+        for task in self._tasks:
+            if task.slot == si:
+                return task
+        return None
+
+    # ----------------------------------------------------- serving interface
+    def enqueue(self, r: Request) -> Request:
+        """Admit ``r`` into the serving queue (feasibility-checked: an
+        impossible request is rejected loudly here, at submission, not as
+        a mid-run stall).  The deadline clock starts now."""
+        self._check_feasible(r)
+        r.enqueued_step = self._engine_step
+        self.stats.note_enqueued(r.rid)
+        self._queue.append(r)
+        return r
+
+    def has_work(self) -> bool:
+        """True while any request is queued, prefilling, or decoding."""
+        return bool(self._queue or self._tasks
+                    or any(s is not None for s in self._slots))
+
+    def finalize(self) -> Optional[dict]:
+        """Emit the summary line and close the stats stream.  Idempotent;
+        run() calls it in a ``finally`` so the JSONL stream ends with a
+        summary (and a closed file handle) even when the loop raises a
+        classified error."""
+        if not self._finalized:
+            self._finalized = True
+            self.summary = self.stats.summary(
+                kv_bytes_per_token=self.kv_bytes_per_token,
+                faults_unfired=len(self.injector.pending))
+            self.stats.close()
+        return self.summary
+
+    # --------------------------------------------------------- step internals
+    def _fail_request(self, r: Request, err: Exception) -> None:
+        """Classified failure result: the request completes with
+        ``r.error`` set, never hangs the loop."""
+        r.error = err
+        self._terminal += 1
+        self._step_done.append(r)
+        self._progressed = True
+        self.stats.note_failure(getattr(type(err), "kind", "engine"))
+
+    def _release_slot_state(self, si: int) -> None:
+        """Free ``si`` everywhere: pool pages (all namespaces), device
+        table rows, draft rows, and any in-flight prefill."""
+        self.pool.free_slot(si)  # frees BOTH namespaces atomically
+        for li in self.attn_layers:
+            self.states[li] = paged_cache.release_slot(self.states[li], si)
+        if self.spec is not None:
+            self.spec.release_slot(si)
+        task = self._task_for_slot(si)
+        if task is not None:
+            self.transports[task.worker].abort(self, task)
+            self._tasks.remove(task)
+        self._slots[si] = None
+
+    def _evict(self, si: int) -> None:
+        # an eviction IS step progress: the requeued request becomes
+        # admissible next iteration (it may have emptied the decode
+        # batch this one, so the stall guard must not fire)
+        r = self._slots[si]
+        self._release_slot_state(si)
+        r.reset()
+        self._progressed = True
+        self.stats.note_eviction()
+        if (self.max_requeues is not None
+                and r.evictions > self.max_requeues):
+            self._fail_request(r, resilience.DeadLetterRequest(
+                f"request {r.rid} evicted {r.evictions} times "
+                f"(max_requeues={self.max_requeues}); failing instead "
+                f"of thrashing the pool"))
+        else:
+            self._queue.insert(0, r)
+
+    def _newest_active(self) -> Optional[int]:
+        active = [si for si in range(self.slots)
+                  if self._slots[si] is not None]
+        return max(active, key=lambda si: self._admitted_at[si]) \
+            if active else None
+
+    def _finish_slot(self, si: int) -> None:
+        r = self._slots[si]
+        r.done = True
+        self._terminal += 1
+        self._step_done.append(r)
+        self.stats.note_completed()
+        self._release_slot_state(si)
+
+    def _quarantine_and_replay(self, si: int, why: str) -> int:
+        """The NaN/Inf guard tripped for ``si``: pull its pages out of
+        circulation (suspect memory is never recycled) and regenerate
+        the request through the synchronous oracle -- which the
+        engine's tokens are pinned bit-identical to, so recovery
+        preserves the determinism contract.  -> tokens emitted now."""
+        r = self._slots[si]
+        pages = self.pool.quarantine_slot(si)
+        for li in self.attn_layers:
+            self.states[li] = paged_cache.release_slot(self.states[li], si)
+        if self.spec is not None:
+            self.spec.release_slot(si)
+        self._slots[si] = None
+        self.stats.note_quarantine(pages)
+        prev = len(r.generated)
+        out = synchronous_generate(
+            self.model, self.cfg, self.policy, self.params,
+            [r.prompt], max_new=r.max_new,
+            capacity=max(self.capacity, len(r.prompt) + r.max_new))
+        r.generated = list(out[0])
+        r.done = True
+        self._terminal += 1
+        self._step_done.append(r)
+        self._progressed = True
+        self.stats.note_completed()
+        self.stats.note_first_token(r.rid)
+        self.stats.note_decode_tokens(len(r.generated) - prev)
+        return len(r.generated) - prev
+
+    def _complete_prefill(self, task: PrefillTask) -> None:
+        """A prompt's last chunk just landed: insert its recurrent-layer
+        states, read its first token (one host transfer), and hand the
+        slot to the decode batch."""
+        r, si = task.request, task.slot
+        tr = self.transports[task.worker]
+        for li, kind in enumerate(self.cfg.attn_pattern):
+            if kind != "attn":
+                self.states[li] = _insert_slot(
+                    self.states[li], tr.to_decode(task.pstates[li]),
+                    si, self.slots)
+        am, fin = _host((jnp.argmax(task.logits[0, -1]),
+                         jnp.isfinite(task.logits[0, -1]).all()))
+        if not bool(fin):
+            self._new_tokens += self._quarantine_and_replay(
+                si, "prefill logits")
+            return
+        nxt = int(am)
+        r.generated.append(nxt)
+        self.stats.note_first_token(r.rid)
+        self.stats.note_decode_tokens(1)
+        self._new_tokens += 1
+        self._tokens = self._tokens.at[si, 0].set(nxt)
+        if self.spec is not None:
+            # the target prompt just landed; write the draft's KV for it
+            # into the draft-namespace pages (tables were pushed at the
+            # top of the prefill section)
+            self.spec.prefill_prompt(si, r.prompt)
+
+    # -------------------------------------------------------------------- step
+    def step(self) -> List[Request]:
+        """One engine iteration over the current queue/slots; returns the
+        requests that reached a terminal state (done or classified
+        failure) during this step."""
         n = self.slots
-        for r in reqs:
-            worst = self.pool.pages_for(len(r.prompt) + r.max_new)
-            total = worst * (2 if self.spec is not None else 1)
-            if worst > self.pages_per_seq or total > self.num_pages:
-                raise ValueError(
-                    f"a single request needs {total} pages (prompt "
-                    f"{len(r.prompt)} + max-new {r.max_new}, page size "
-                    f"{self.page}"
-                    + (", x2 for the draft namespace"
-                       if self.spec is not None else "")
-                    + f") but the pool offers min({self.pages_per_seq} "
-                    f"per-seq, {self.num_pages} total); raise "
-                    f"--capacity/--pool-pages")
-
-        queue = list(reqs)
-        slots: List[Optional[Request]] = [None] * n
-        admitted_at = [0] * n  # admission counter per slot (LIFO eviction:
-        admissions = 0         # newest goes first)
-        task: Optional[PrefillTask] = None
-        tokens = jnp.zeros((n, 1), jnp.int32)
-        completed = 0
-        decode_steps = 0
-        engine_step = 0
-        progressed = False     # non-step progress (failures) this iteration
-        new_tokens = 0
-        wd_over = 0            # consecutive over-budget steps (watchdog)
-
-        def deadline_of(r: Request) -> Optional[int]:
-            return (r.deadline_steps if r.deadline_steps is not None
-                    else self.deadline_steps)
-
-        def fail_request(r: Request, err: Exception) -> None:
-            """Classified failure result: the request completes with
-            ``r.error`` set, never hangs the loop."""
-            nonlocal completed, progressed
-            r.error = err
-            completed += 1
-            progressed = True
-            self.stats.note_failure(getattr(type(err), "kind", "engine"))
-
-        def release_slot_state(si: int) -> None:
-            """Free ``si`` everywhere: pool pages (all namespaces), device
-            table rows, draft rows, and any in-flight prefill."""
-            nonlocal task
-            self.pool.free_slot(si)  # frees BOTH namespaces atomically
-            for li in self.attn_layers:
-                self.states[li] = paged_cache.release_slot(self.states[li],
-                                                           si)
+        self._step_done = []
+        step = self._engine_step + 1    # 1-based, matches stats records
+        self.injector.begin_step(step)
+        t_step = time.perf_counter()
+        self._new_tokens = 0
+        self._progressed = False
+        # ---- deadlines: expired requests fail classified, never hang --
+        for r in [q for q in self._queue]:
+            dl = self._deadline_of(r)
+            if dl is not None and self._engine_step - r.enqueued_step >= dl:
+                self._queue.remove(r)
+                self._fail_request(r, resilience.DeadlineExceeded(
+                    f"request {r.rid} still queued after its "
+                    f"{dl}-step deadline"))
+        for si in range(n):
+            r = self._slots[si]
+            dl = self._deadline_of(r) if r is not None else None
+            if dl is not None and self._engine_step - r.enqueued_step >= dl:
+                self._release_slot_state(si)
+                self._fail_request(r, resilience.DeadlineExceeded(
+                    f"request {r.rid} exceeded its {dl}-step deadline "
+                    f"({len(r.generated)}/{r.max_new} tokens)"))
+        # ---- admission: one prompt in flight per idle prefill worker ----
+        while self._queue and len(self._tasks) < self.n_prefill_workers:
+            si = next((i for i in range(n) if self._slots[i] is None), None)
+            if si is None:
+                break
+            need = len(self._queue[0].prompt)
+            needs = ((need + 1, need) if self.spec is not None
+                     else (need + 1,))
+            if not self.pool.can_admit(*needs):
+                break
+            r = self._queue.pop(0)
+            ok = self.pool.allocate(si, need)
             if self.spec is not None:
-                self.spec.release_slot(si)
-            if task is not None and task.slot == si:
-                self.transport.abort(self, task)
-                task = None
-            slots[si] = None
-
-        def evict(si: int) -> None:
-            # an eviction IS step progress: the requeued request becomes
-            # admissible next iteration (it may have emptied the decode
-            # batch this one, so the stall guard must not fire)
-            nonlocal progressed
-            r = slots[si]
-            release_slot_state(si)
-            r.reset()
-            progressed = True
-            self.stats.note_eviction()
-            if (self.max_requeues is not None
-                    and r.evictions > self.max_requeues):
-                fail_request(r, resilience.DeadLetterRequest(
-                    f"request {r.rid} evicted {r.evictions} times "
-                    f"(max_requeues={self.max_requeues}); failing instead "
-                    f"of thrashing the pool"))
-            else:
-                queue.insert(0, r)
-
-        def newest_active() -> Optional[int]:
-            active = [si for si in range(n) if slots[si] is not None]
-            return max(active, key=lambda si: admitted_at[si]) \
-                if active else None
-
-        def finish_slot(si: int) -> None:
-            nonlocal completed
-            slots[si].done = True
-            completed += 1
-            release_slot_state(si)
-
-        def quarantine_and_replay(si: int, why: str) -> int:
-            """The NaN/Inf guard tripped for ``si``: pull its pages out of
-            circulation (suspect memory is never recycled) and regenerate
-            the request through the synchronous oracle -- which the
-            engine's tokens are pinned bit-identical to, so recovery
-            preserves the determinism contract.  -> tokens emitted now."""
-            nonlocal completed, progressed
-            r = slots[si]
-            pages = self.pool.quarantine_slot(si)
-            for li in self.attn_layers:
-                self.states[li] = paged_cache.release_slot(
-                    self.states[li], si)
-            if self.spec is not None:
-                self.spec.release_slot(si)
-            slots[si] = None
-            self.stats.note_quarantine(pages)
-            prev = len(r.generated)
-            out = synchronous_generate(
-                self.model, self.cfg, self.policy, self.params,
-                [r.prompt], max_new=r.max_new,
-                capacity=max(self.capacity, len(r.prompt) + r.max_new))
-            r.generated = list(out[0])
-            r.done = True
-            completed += 1
-            progressed = True
-            self.stats.note_first_token(r.rid)
-            self.stats.note_decode_tokens(len(r.generated) - prev)
-            return len(r.generated) - prev
-
-        while completed < len(reqs):
-            step = engine_step + 1      # 1-based, matches stats records
-            self.injector.begin_step(step)
-            t_step = time.perf_counter()
-            new_tokens = 0
-            progressed = False
-            # ---- deadlines: expired requests fail classified, never hang --
-            for r in [q for q in queue]:
-                dl = deadline_of(r)
-                if dl is not None and engine_step >= dl:
-                    queue.remove(r)
-                    fail_request(r, resilience.DeadlineExceeded(
-                        f"request {r.rid} still queued after its "
-                        f"{dl}-step deadline"))
-            for si in range(n):
-                r = slots[si]
-                dl = deadline_of(r) if r is not None else None
-                if dl is not None and engine_step >= dl:
-                    release_slot_state(si)
-                    fail_request(r, resilience.DeadlineExceeded(
-                        f"request {r.rid} exceeded its {dl}-step deadline "
-                        f"({len(r.generated)}/{r.max_new} tokens)"))
-            # ---- admission: at most one prompt in flight ------------------
-            if task is None and queue:
-                si = next((i for i in range(n) if slots[i] is None), None)
-                need = len(queue[0].prompt)
-                needs = ((need + 1, need) if self.spec is not None
-                         else (need + 1,))
-                if si is not None and self.pool.can_admit(*needs):
-                    r = queue.pop(0)
-                    ok = self.pool.allocate(si, need)
-                    if self.spec is not None:
-                        ok = ok and self.pool.allocate(si, need,
-                                                       ns=self.spec.NS)
-                    assert ok, (si, need)  # can_admit held above
-                    slots[si] = r
-                    admissions += 1
-                    admitted_at[si] = admissions
-                    self.stats.note_admitted(r.rid)
-                    if self.calibration_tap is not None:
-                        # live-traffic tap: admitted prompts feed the serve-
-                        # time precision tuner's calibration reservoir
-                        self.calibration_tap.observe(r.prompt)
-                    task = PrefillTask(r, si, need)
-                    task.pstates = self._init_pstates()
-                    self.transport.begin(self, task)
-            # ---- one prefill chunk (decode below still runs) --------------
-            ran_chunk = False
-            if task is not None:
-                ran_chunk = True
-                self._push_tables()
+                ok = ok and self.pool.allocate(si, need, ns=self.spec.NS)
+            assert ok, (si, need)  # can_admit held above
+            self._slots[si] = r
+            self._admissions += 1
+            self._admitted_at[si] = self._admissions
+            self.stats.note_admitted(r.rid)
+            if self.calibration_tap is not None:
+                # live-traffic tap: admitted prompts feed the serve-
+                # time precision tuner's calibration reservoir
+                self.calibration_tap.observe(r.prompt)
+            busy = {t.worker for t in self._tasks}
+            wi = next(w for w in range(self.n_prefill_workers)
+                      if w not in busy)
+            task = PrefillTask(r, si, need, worker=wi)
+            task.pstates = self._init_pstates(self.transports[wi])
+            self.transports[wi].begin(self, task)
+            self._tasks.append(task)
+        # ---- one prefill chunk per task (decode below still runs) -------
+        ran_chunks = 0
+        if self._tasks:
+            self._push_tables()
+            for task in list(self._tasks):
+                ran_chunks += 1
+                self.stats.note_prefill_chunk(task.worker)
+                tr = self.transports[task.worker]
                 try:
-                    view, vslot = self.transport.prefill_view(self, task)
-                    view = self.prefill_worker.step(task, view, vslot)
-                    self.transport.absorb(self, task, view)
+                    view, vslot = tr.prefill_view(self, task)
+                    view = self.prefill_workers[task.worker].step(
+                        task, view, vslot)
+                    tr.absorb(self, task, view)
                     if task.done:
-                        self.transport.finish(self, task)
+                        tr.finish(self, task)
                 except resilience.TransportError:
                     # checksum refetch exhausted: the page handoff cannot
                     # be trusted, so recompute the request from its prompt
                     # (bounded by max_requeues like any other eviction)
-                    evict(task.slot)
-                if task is not None and task.done:
-                    r, si = task.request, task.slot
-                    for li, kind in enumerate(self.cfg.attn_pattern):
-                        if kind != "attn":
-                            self.states[li] = _insert_slot(
-                                self.states[li],
-                                self.transport.to_decode(task.pstates[li]),
-                                si, n)
-                    am, fin = _host((jnp.argmax(task.logits[0, -1]),
-                                     jnp.isfinite(task.logits[0, -1])
-                                     .all()))
-                    task = None
-                    if not bool(fin):
-                        new_tokens += quarantine_and_replay(
-                            si, "prefill logits")
-                    else:
-                        nxt = int(am)
-                        r.generated.append(nxt)
-                        self.stats.note_first_token(r.rid)
-                        self.stats.note_decode_tokens(1)
-                        new_tokens += 1
-                        tokens = tokens.at[si, 0].set(nxt)
-                        if self.spec is not None:
-                            # the target prompt just landed; write the
-                            # draft's KV for it into the draft-namespace
-                            # pages (tables were pushed at the top of this
-                            # prefill section)
-                            self.spec.prefill_prompt(si, r.prompt)
-            # ---- growth: every decoding slot needs a mapped page for its
-            # next token; evict LIFO when the pool runs dry ------------------
-            use_spec = (self.spec is not None
-                        and self.breaker.allows(step))
-            for si in range(n):
-                if slots[si] is None or (task is not None
-                                         and task.slot == si):
+                    self._evict(task.slot)
                     continue
-                while slots[si] is not None:
-                    L = int(self.pool.lens[si])
-                    if use_spec:
-                        # grow by this round's worst case in BOTH
-                        # namespaces: k appends, clamped to what the
-                        # request can still emit
-                        gi = min(self.spec.k,
-                                 slots[si].max_new - len(slots[si].generated))
-                        ok = (self.pool.ensure_capacity(si, L + gi)
-                              and self.pool.ensure_capacity(
-                                  si, L + gi, ns=self.spec.NS))
-                    elif self.spec is not None:
-                        # degraded (breaker-open) step: one token, but the
-                        # draft shadow append needs its page too
-                        ok = (self.pool.ensure_capacity(si, L + 1)
-                              and self.pool.ensure_capacity(
-                                  si, L + 1, ns=self.spec.NS))
-                    else:
-                        ok = self.pool.ensure_capacity(si, L + 1)
-                    if ok and self.injector.pool_exhausted():
-                        ok = False  # injected exhaustion: walk the normal
-                    if ok:          # eviction/requeue path below
-                        break
-                    victim = newest_active()
-                    evict(victim)
-                    if victim == si:
-                        break
-            # ---- one batched decode step over the page pool ---------------
-            decoding = [si for si in range(n)
-                        if slots[si] is not None
-                        and not (task is not None and task.slot == si)]
-            if decoding and use_spec:
-                # ---- one speculation round: k draft steps + 1 verify -----
-                self._push_tables(
-                    mask_slot=task.slot if task is not None else None)
-                nan_mask = self._fault_mask("nan_logits", decoding)
-                div_mask = self._fault_mask("draft_div", decoding)
-
-                def _spec_call():
-                    self.injector.maybe_raise()
-                    return self.spec.round(self.params, tokens,
-                                           self.states, nan_mask=nan_mask,
-                                           div_mask=div_mask)
-
-                (tgt_d, m_d, acc_d, pending, bad_d,
-                 self.states) = resilience.with_retries(
-                    _spec_call, self.retry_policy, self.stats,
-                    retriable=(SimulatedFault,), what="speculation round")
-                decode_steps += 1
-                self.stats.note_target_step()
-                tgt, m, acc, bad = _host((tgt_d, m_d, acc_d, bad_d))
-                proposed = accepted = 0
-                for si in decoding:
-                    if bool(bad[si]):
-                        new_tokens += quarantine_and_replay(
-                            si, "verify logits")
-                        continue
-                    r = slots[si]
-                    L = int(self.pool.lens[si])
-                    gi = min(self.spec.k, r.max_new - len(r.generated))
-                    # positions >= gi had no mapped page (growth clamped
-                    # to gi); the device rollback took the same min, so
-                    # clamp the host-side view identically
-                    mi = min(int(m[si]), gi)
-                    r.generated.extend(int(t) for t in tgt[si, :mi])
-                    self.stats.note_decode_tokens(mi)
-                    new_tokens += mi
-                    proposed += gi
-                    accepted += min(int(acc[si]), gi)
-                    self.pool.truncate(si, L + mi)
-                    self.pool.truncate(si, L + mi, ns=self.spec.NS)
-                    if len(r.generated) >= r.max_new:
-                        finish_slot(si)
-                self.stats.note_spec_round(proposed=proposed,
-                                           accepted=accepted)
-                self.breaker.record(step=step, proposed=proposed,
-                                    accepted=accepted, stats=self.stats)
-                tokens = pending
-            elif decoding:
-                self._push_tables(
-                    mask_slot=task.slot if task is not None else None)
-                nan_mask = self._fault_mask("nan_logits", decoding)
-
-                def _decode_call():
-                    self.injector.maybe_raise()
-                    return self.decode_worker.step(self.params, tokens,
-                                                   self.states, nan_mask)
-
-                nxt, bad_d, self.states = resilience.with_retries(
-                    _decode_call, self.retry_policy, self.stats,
-                    retriable=(SimulatedFault,), what="decode step")
-                decode_steps += 1
-                self.stats.note_target_step()
-                if self.spec is not None:
-                    # breaker open: plain decode, but keep the draft KV in
-                    # lockstep so the half-open probe can accept again
-                    self.spec.shadow_step(tokens)
-                    self.stats.note_degraded_step()
-                nxt_h, bad = _host((nxt, bad_d))
-                for si in decoding:
-                    if bool(bad[si]):
-                        new_tokens += quarantine_and_replay(
-                            si, "decode logits")
-                        continue
-                    r = slots[si]
-                    self.pool.note_decode_step(si)
-                    if self.spec is not None:
-                        self.pool.note_decode_step(si, ns=self.spec.NS)
-                    r.generated.append(int(nxt_h[si]))
-                    self.stats.note_decode_tokens(1)
-                    new_tokens += 1
-                    if len(r.generated) >= r.max_new:
-                        finish_slot(si)
-                tokens = nxt[:, None]
-            elif not ran_chunk and not progressed:
-                # pre-run feasibility makes this unreachable without page
-                # quarantine; with it, a loud classified error beats a hang
-                raise resilience.EngineError(
-                    "engine stalled: queue non-empty but no slot "
-                    "admissible and no sequence decoding (quarantined "
-                    f"pages: {len(self.pool.quarantined)})")
-            engine_step += 1
-            self.stats.step_record(
-                step=engine_step, queue_depth=len(queue),
-                prefilling=1 if ran_chunk else 0, decoding=len(decoding),
-                new_tokens=new_tokens, pool_stats=self.pool.stats())
-            if self.watchdog_s is not None:
-                if time.perf_counter() - t_step > self.watchdog_s:
-                    self.stats.note_watchdog_trip()
-                    wd_over += 1
-                    if wd_over >= self.watchdog_limit:
-                        raise resilience.WatchdogTimeout(
-                            f"{wd_over} consecutive engine steps over the "
-                            f"{self.watchdog_s}s watchdog budget")
+                if task.done:
+                    self._tasks.remove(task)
+                    self._complete_prefill(task)
+        # ---- growth: every decoding slot needs a mapped page for its
+        # next token; evict LIFO when the pool runs dry ------------------
+        use_spec = (self.spec is not None
+                    and self.breaker.allows(step))
+        task_slots = {t.slot for t in self._tasks}
+        for si in range(n):
+            if self._slots[si] is None or si in task_slots:
+                continue
+            while self._slots[si] is not None:
+                L = int(self.pool.lens[si])
+                if use_spec:
+                    # grow by this round's worst case in BOTH
+                    # namespaces: k appends, clamped to what the
+                    # request can still emit
+                    gi = min(self.spec.k, self._slots[si].max_new
+                             - len(self._slots[si].generated))
+                    ok = (self.pool.ensure_capacity(si, L + gi)
+                          and self.pool.ensure_capacity(
+                              si, L + gi, ns=self.spec.NS))
+                elif self.spec is not None:
+                    # degraded (breaker-open) step: one token, but the
+                    # draft shadow append needs its page too
+                    ok = (self.pool.ensure_capacity(si, L + 1)
+                          and self.pool.ensure_capacity(
+                              si, L + 1, ns=self.spec.NS))
                 else:
-                    wd_over = 0
+                    ok = self.pool.ensure_capacity(si, L + 1)
+                if ok and self.injector.pool_exhausted():
+                    ok = False  # injected exhaustion: walk the normal
+                if ok:          # eviction/requeue path below
+                    break
+                victim = self._newest_active()
+                self._evict(victim)
+                task_slots = {t.slot for t in self._tasks}
+                if victim == si:
+                    break
+        # ---- one batched decode step over the page pool ---------------
+        decoding = [si for si in range(n)
+                    if self._slots[si] is not None and si not in task_slots]
+        if decoding and use_spec:
+            # ---- one speculation round: k draft steps + 1 verify -----
+            self._push_tables(mask_slots=task_slots)
+            nan_mask = self._fault_mask("nan_logits", decoding)
+            div_mask = self._fault_mask("draft_div", decoding)
 
-        self.decode_steps = decode_steps
-        self.summary = self.stats.summary(
-            kv_bytes_per_token=self.kv_bytes_per_token,
-            faults_unfired=len(self.injector.pending))
-        self.stats.close()
+            def _spec_call():
+                self.injector.maybe_raise()
+                return self.spec.round(self.params, self._tokens,
+                                       self.states, nan_mask=nan_mask,
+                                       div_mask=div_mask)
+
+            (tgt_d, m_d, acc_d, pending, bad_d,
+             self.states) = resilience.with_retries(
+                _spec_call, self.retry_policy, self.stats,
+                retriable=(SimulatedFault,), what="speculation round")
+            self.decode_steps += 1
+            self.stats.note_target_step()
+            tgt, m, acc, bad = _host((tgt_d, m_d, acc_d, bad_d))
+            proposed = accepted = 0
+            for si in decoding:
+                if bool(bad[si]):
+                    self._new_tokens += self._quarantine_and_replay(
+                        si, "verify logits")
+                    continue
+                r = self._slots[si]
+                L = int(self.pool.lens[si])
+                gi = min(self.spec.k, r.max_new - len(r.generated))
+                # positions >= gi had no mapped page (growth clamped
+                # to gi); the device rollback took the same min, so
+                # clamp the host-side view identically
+                mi = min(int(m[si]), gi)
+                r.generated.extend(int(t) for t in tgt[si, :mi])
+                self.stats.note_decode_tokens(mi)
+                self._new_tokens += mi
+                proposed += gi
+                accepted += min(int(acc[si]), gi)
+                self.pool.truncate(si, L + mi)
+                self.pool.truncate(si, L + mi, ns=self.spec.NS)
+                if len(r.generated) >= r.max_new:
+                    self._finish_slot(si)
+            self.stats.note_spec_round(proposed=proposed,
+                                       accepted=accepted)
+            self.breaker.record(step=step, proposed=proposed,
+                                accepted=accepted, stats=self.stats)
+            self._tokens = pending
+        elif decoding:
+            self._push_tables(mask_slots=task_slots)
+            nan_mask = self._fault_mask("nan_logits", decoding)
+
+            def _decode_call():
+                self.injector.maybe_raise()
+                return self.decode_worker.step(self.params, self._tokens,
+                                               self.states, nan_mask)
+
+            nxt, bad_d, self.states = resilience.with_retries(
+                _decode_call, self.retry_policy, self.stats,
+                retriable=(SimulatedFault,), what="decode step")
+            self.decode_steps += 1
+            self.stats.note_target_step()
+            if self.spec is not None:
+                # breaker open: plain decode, but keep the draft KV in
+                # lockstep so the half-open probe can accept again
+                self.spec.shadow_step(self._tokens)
+                self.stats.note_degraded_step()
+            nxt_h, bad = _host((nxt, bad_d))
+            for si in decoding:
+                if bool(bad[si]):
+                    self._new_tokens += self._quarantine_and_replay(
+                        si, "decode logits")
+                    continue
+                r = self._slots[si]
+                self.pool.note_decode_step(si)
+                if self.spec is not None:
+                    self.pool.note_decode_step(si, ns=self.spec.NS)
+                r.generated.append(int(nxt_h[si]))
+                self.stats.note_decode_tokens(1)
+                self._new_tokens += 1
+                if len(r.generated) >= r.max_new:
+                    self._finish_slot(si)
+            self._tokens = nxt[:, None]
+        elif self.has_work() and not ran_chunks and not self._progressed:
+            # pre-run feasibility makes this unreachable without page
+            # quarantine; with it, a loud classified error beats a hang
+            raise resilience.EngineError(
+                "engine stalled: queue non-empty but no slot "
+                "admissible and no sequence decoding (quarantined "
+                f"pages: {len(self.pool.quarantined)})")
+        self._engine_step += 1
+        self.stats.step_record(
+            step=self._engine_step, queue_depth=len(self._queue),
+            prefilling=ran_chunks, decoding=len(decoding),
+            new_tokens=self._new_tokens, pool_stats=self.pool.stats())
+        if self.watchdog_s is not None:
+            if time.perf_counter() - t_step > self.watchdog_s:
+                self.stats.note_watchdog_trip()
+                self._wd_over += 1
+                if self._wd_over >= self.watchdog_limit:
+                    raise resilience.WatchdogTimeout(
+                        f"{self._wd_over} consecutive engine steps over "
+                        f"the {self.watchdog_s}s watchdog budget")
+            else:
+                self._wd_over = 0
+        return self._step_done
+
+    # -------------------------------------------------------------------- run
+    def run(self, reqs: List[Request]) -> List[Request]:
+        """Drive a fixed request list to completion (the synchronous
+        entry point; the async router uses enqueue/step/finalize
+        directly)."""
+        for r in reqs:
+            self._check_feasible(r)  # all-or-nothing, before any enqueue
+        for r in reqs:
+            self.enqueue(r)
+        base = self._terminal
+        try:
+            while self._terminal - base < len(reqs):
+                self.step()
+        finally:
+            self.finalize()
         return reqs

@@ -8,10 +8,22 @@ per step (plus a final ``"kind": "summary"`` line) so the bench harness
 and external tooling consume the same stream the tests assert on.
 
 The summary carries the serving-level quality numbers the ROADMAP's
-disaggregation item asks for: time-to-first-token per request, decode
-tokens/s, eviction count, and the peak *transient* prefill staging size
-(in tokens and KV bytes) -- the quantity chunked page-granular prefill
-drives from O(prompt) down to O(page).
+disaggregation item asks for: time-to-first-token per request (measured
+from *enqueue*, with the queue-wait component reported separately so
+admission latency and prefill latency stay distinguishable), decode
+tokens/s, eviction count, per-prefill-worker utilization, and the peak
+*transient* prefill staging size (in tokens and KV bytes) -- the quantity
+chunked page-granular prefill drives from O(prompt) down to O(page).
+
+Request accounting is conservation-checked: every enqueued request ends
+as exactly one of ``completed`` or ``failures``, and the summary's
+``requests`` is their sum -- a request that fails *before* its first
+token (deadline or dead-letter mid-prefill) is counted, not silently
+dropped the way the old ``len(ttft_s)`` definition dropped it.
+
+``EngineStats`` is a context manager; the scheduler closes the JSONL
+stream in a ``finally`` so a run that raises a classified error still
+ends with a flushed summary line and a closed file handle.
 """
 from __future__ import annotations
 
@@ -25,9 +37,18 @@ class EngineStats:
         self.out_path = out_path
         self.records: List[dict] = []
         self.ttft_s: Dict[int, float] = {}      # rid -> s to first token
+        self.queue_wait_s: Dict[int, float] = {}  # rid -> s enqueue->admit
+        self._enqueued_t: Dict[int, float] = {}
         self._admitted_t: Dict[int, float] = {}
+        # request conservation: every enqueued request terminates as
+        # exactly one of completed / failures (summary pins the sum)
+        self.admitted = 0
+        self.completed = 0
         self.decode_tokens = 0
         self.evictions = 0
+        # chunks each prefill worker ran (worker index -> count): the
+        # per-worker utilization column of the router's scaling story
+        self.prefill_chunks: Dict[int, int] = {}
         # speculative decoding: batched target forward steps (decode steps
         # or verify rounds), draft proposals judged, proposals accepted
         self.target_steps = 0
@@ -55,14 +76,33 @@ class EngineStats:
         self._fh = open(out_path, "w") if out_path else None
 
     # -- event hooks (called by scheduler / workers) -------------------------
+    def note_enqueued(self, rid) -> None:
+        """The request entered the serving queue: the TTFT clock starts
+        here (a router submission waits in the queue before any slot
+        sees it, and that wait is part of what the user experiences)."""
+        self._enqueued_t.setdefault(rid, time.perf_counter())
+
     def note_admitted(self, rid) -> None:
         # first admission only: a re-admission after eviction keeps the
         # original clock, so TTFT stays end-to-end from the user's view
-        self._admitted_t.setdefault(rid, time.perf_counter())
+        if rid not in self._admitted_t:
+            now = time.perf_counter()
+            self.admitted += 1
+            self._admitted_t[rid] = now
+            self.queue_wait_s[rid] = now - self._enqueued_t.get(rid, now)
 
     def note_first_token(self, rid) -> None:
-        if rid not in self.ttft_s and rid in self._admitted_t:
-            self.ttft_s[rid] = time.perf_counter() - self._admitted_t[rid]
+        start = self._enqueued_t.get(rid, self._admitted_t.get(rid))
+        if rid not in self.ttft_s and start is not None:
+            self.ttft_s[rid] = time.perf_counter() - start
+
+    def note_completed(self) -> None:
+        """One request finished with its full token budget (no error)."""
+        self.completed += 1
+
+    def note_prefill_chunk(self, worker: int) -> None:
+        """Prefill worker ``worker`` ran one chunk this engine step."""
+        self.prefill_chunks[worker] = self.prefill_chunks.get(worker, 0) + 1
 
     def note_prefill_transient(self, n_tokens: int) -> None:
         self.peak_prefill_transient_tokens = max(
@@ -144,16 +184,34 @@ class EngineStats:
                 faults_unfired: int = 0) -> dict:
         dt = time.perf_counter() - self._t0
         ttft = sorted(self.ttft_s.values())
+        qwait = sorted(self.queue_wait_s.values())
+        steps = len(self.records)
         s = {
             "kind": "summary",
-            "requests": len(self.ttft_s),
-            "steps": len(self.records),
+            # conservation: every terminal request is completed XOR failed
+            # (len(ttft_s) would drop requests that failed pre-first-token)
+            "requests": self.completed + self.failures,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "steps": steps,
             "elapsed_s": round(dt, 6),
             "decode_tokens": self.decode_tokens,
             "tokens_per_s": round(self.decode_tokens / dt, 3) if dt > 0
             else 0.0,
             "ttft_mean_s": round(sum(ttft) / len(ttft), 6) if ttft else None,
             "ttft_max_s": round(ttft[-1], 6) if ttft else None,
+            # the queue-wait component of TTFT (enqueue -> first
+            # admission): under the router this is the backpressure /
+            # burst-absorption number, distinct from prefill latency
+            "queue_wait_mean_s": round(sum(qwait) / len(qwait), 6)
+            if qwait else None,
+            "queue_wait_max_s": round(qwait[-1], 6) if qwait else None,
+            "prefill_chunks_by_worker": {
+                str(w): c for w, c in sorted(self.prefill_chunks.items())},
+            "prefill_utilization_by_worker": {
+                str(w): round(c / steps, 4)
+                for w, c in sorted(self.prefill_chunks.items())}
+            if steps else {},
             "evictions": self.evictions,
             # steps-per-token < 1.0 means speculation is paying: fewer
             # batched target forwards than tokens emitted.  accept_rate is
@@ -195,6 +253,15 @@ class EngineStats:
         if self._fh is not None:
             self._fh.close()
             self._fh = None
+
+    # context-manager form: ``with EngineStats(path) as stats: ...``
+    # guarantees the JSONL handle closes even when the run raises
+    def __enter__(self) -> "EngineStats":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     def _emit(self, rec: dict) -> None:
         if self._fh is not None:

@@ -31,10 +31,13 @@ the slot's device-side sequence length.
 
 **Checksummed handoff.**  The streamed copy is the one place KV bytes
 transit between memories, so it carries the engine's corruption defense:
-a per-page CRC32 over the packed payload words is computed on the prefill
-side before each chunk of pages is copied, and recomputed from the decode
-pool right after.  A mismatch (bit flip in flight, dropped copy) refetches
-the chunk with capped exponential backoff; if the mismatch persists
+a per-page CRC32 over the packed payload words is computed from the
+*source pool*, before the device-to-device transfer, and recomputed from
+the decode pool right after the copy -- so a bit flip anywhere along the
+path (during the transfer itself, or in the pool write) fails
+verification instead of being baked into the expectation.  A mismatch
+refetches the chunk with capped exponential backoff, re-running the
+transfer from the source pool each attempt; if the mismatch persists
 through every attempt the transport raises a classified
 :class:`~repro.engine.resilience.TransportError` and the scheduler
 recomputes the request from its prompt.  Injected transport faults
@@ -50,6 +53,14 @@ import numpy as np
 from repro.kernels import paged_cache
 
 from .resilience import TransportError, page_checksums
+
+
+def _device_transfer(x, device):
+    """The cross-device page copy, hoisted to module level so fault tests
+    can wrap it and corrupt bytes *in flight*: the CRC contract is that
+    corruption during the transfer itself is caught and refetched, not
+    just corruption after it."""
+    return jax.device_put(x, device)
 
 
 class ColocatedTransport:
@@ -93,6 +104,7 @@ class StreamedTransport:
 
     def __init__(self, device_index=None):
         self.device_index = device_index
+        self._task = None  # the one in-flight prefill this pool serves
 
     def setup(self, engine) -> None:
         devs = jax.devices()
@@ -118,6 +130,13 @@ class StreamedTransport:
                                    if self._cross else src)
 
     def begin(self, engine, task) -> None:
+        if self._task is not None:
+            raise ValueError(
+                "StreamedTransport's single-slot source pool serves one "
+                "in-flight prefill at a time; give each prefill worker "
+                "its own transport "
+                "(Engine(transport=[StreamedTransport(), ...]))")
+        self._task = task
         for li in engine.attn_layers:
             self.src_states[li] = paged_cache.set_seq_len(
                 self.src_states[li], 0, 0)
@@ -146,9 +165,10 @@ class StreamedTransport:
         for li in engine.attn_layers:
             engine.states[li] = paged_cache.set_seq_len(
                 engine.states[li], task.slot, task.n_tokens)
+        self._task = None
 
     def abort(self, engine, task) -> None:
-        pass  # begin() resets the source lengths for the next task
+        self._task = None  # begin() resets the source lengths next task
 
     def _copy_pages(self, engine, task, lo: int, hi: int) -> None:
         if lo >= hi:
@@ -160,14 +180,22 @@ class StreamedTransport:
             engine.pool.tables[task.slot, lo:hi].copy(), jnp.int32)
         for li in engine.attn_layers:
             src = self.src_states[li]
-            kpg, vpg = src.k_pool[src_ids], src.v_pool[src_ids]
-            if self._cross:  # the actual device-to-device page transfer
-                kpg = jax.device_put(kpg, engine.device)
-                vpg = jax.device_put(vpg, engine.device)
+            src_k, src_v = src.k_pool[src_ids], src.v_pool[src_ids]
             # prefill-side truth: CRC per page over the packed words,
-            # before anything can go wrong in the copy
-            want = page_checksums(kpg, vpg)
+            # computed from the SOURCE pool BEFORE the device-to-device
+            # transfer -- a bit flip during the transfer itself must fail
+            # verification, not be baked into the expectation (checksums
+            # of the transferred buffers would verify corruption clean)
+            want = page_checksums(src_k, src_v)
             for attempt in range(retry.max_attempts):
+                kpg, vpg = src_k, src_v
+                if self._cross:
+                    # the actual device-to-device page transfer, re-run
+                    # from the source pool on every refetch attempt (a
+                    # corrupted transfer is recovered by transferring
+                    # again, not by rewriting the corrupted buffers)
+                    kpg = _device_transfer(kpg, engine.device)
+                    vpg = _device_transfer(vpg, engine.device)
                 fault = injector.take_transport()
                 kw, vw = kpg, vpg
                 if fault is not None and fault.kind == "page_corrupt":

@@ -24,10 +24,11 @@ from repro.kernels import paged_cache
 class PrefillTask:
     """One in-flight prompt: chunk cursor, stream cursor, and result."""
 
-    def __init__(self, request, slot: int, n_tokens: int):
+    def __init__(self, request, slot: int, n_tokens: int, worker: int = 0):
         self.request = request
         self.slot = slot
         self.n_tokens = n_tokens   # KV rows the prompt occupies
+        self.worker = worker       # prefill worker / transport index
         self.offset = 0            # tokens already prefilled
         self.streamed = 0          # pages already handed to the decode pool
         self.done = False

@@ -95,6 +95,30 @@ def add_speculative_args(ap):
     return ap
 
 
+def add_router_args(ap):
+    """Async serving front-end flags (serve.py; docs/engine.md "Router").
+
+    ``--prefill-workers`` works with or without ``--router``: the engine
+    itself runs N concurrent prefill tasks (one transport each), the
+    router just feeds it from an async queue.
+    """
+    ap.add_argument("--router", action="store_true",
+                    help="serve through the asyncio request router "
+                         "(concurrent submissions with per-request "
+                         "futures; tokens stay bit-identical to the "
+                         "synchronous run)")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="concurrent prefill workers, one transport (and "
+                         "with --disaggregate one streamed source pool, "
+                         "spread over the extra devices) each; the decode "
+                         "batch stays single (default: 1)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="router backpressure: cap on requests in flight "
+                         "(queued + serving); submit() awaits when full "
+                         "(default: unbounded)")
+    return ap
+
+
 def add_resilience_args(ap):
     """Fault-injection and recovery flags (serve.py and the chaos bench).
 

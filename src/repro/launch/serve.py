@@ -22,6 +22,12 @@ out of one block-table page pool:
   * ``--disaggregate`` moves prefill to a second device (simulate hosts
     with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``) and
     streams finished KV pages into the decode pool page-by-page;
+  * ``--router`` serves through the asyncio front-end
+    (:mod:`repro.engine.router`) and ``--prefill-workers N`` runs N
+    concurrent prefill workers -- one transport (one streamed source
+    pool, one simulated device) each -- feeding the single decode batch;
+    ``--max-pending`` bounds the in-flight queue (backpressure).  Tokens
+    stay bit-identical to the synchronous single-worker run;
   * admission is gated on pool occupancy; when the pool runs dry the most
     recently admitted sequence is evicted back to the queue (LIFO) and its
     pages reused immediately -- the vLLM memory model on top of
@@ -39,6 +45,7 @@ out of one block-table page pool:
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import sys
 
@@ -51,10 +58,11 @@ from repro.core.policy import get_policy
 from repro.tuning.artifact import load_policy
 from repro.engine import (ColocatedTransport, Engine, EngineStats,
                           FaultPlan, Request, SpeculativeDecoder,
-                          StreamedTransport, exit_code_for, format_error)
+                          StreamedTransport, exit_code_for, format_error,
+                          run_router)
 from repro.kernels import dispatch
 from repro.launch.cli import (add_backend_args, add_resilience_args,
-                              add_speculative_args)
+                              add_router_args, add_speculative_args)
 from repro.models import qparams
 from repro.models.registry import build
 
@@ -103,9 +111,13 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=2)")
     ap.add_argument("--stats-out", default=None,
                     help="write per-step engine stats as JSON lines here")
+    add_router_args(ap)
     add_speculative_args(ap)
     add_resilience_args(ap)
     args = ap.parse_args(argv)
+    if args.prefill_workers < 1:
+        raise ValueError(
+            f"--prefill-workers must be >= 1, got {args.prefill_workers}")
 
     # the policy-level override wins inside attention.decode_impl(), so no
     # config rewrite / model rebuild is needed; with no explicit flag,
@@ -154,19 +166,41 @@ def main(argv=None):
         fault_plan = FaultPlan.load(args.fault_plan)
         print(f"[serve] fault plan: {fault_plan.describe()}")
 
-    transport = StreamedTransport() if args.disaggregate \
-        else ColocatedTransport()
+    n_workers = args.prefill_workers
+    if args.disaggregate:
+        # one streamed source pool per worker, spread across the non-
+        # decode devices (worker i's pool on device 1 + i mod (ndev - 1))
+        ndev = len(jax.devices())
+        transports = [
+            StreamedTransport(device_index=(1 + i % (ndev - 1))
+                              if ndev > 1 else 0)
+            for i in range(n_workers)]
+    else:
+        transports = [ColocatedTransport() for _ in range(n_workers)]
+    transport = transports[0]
     engine = Engine(model, cfg, policy, params,
                     slots=args.slots, capacity=args.capacity,
                     page_size=args.page_size, pool_pages=args.pool_pages,
-                    prefill_chunk=args.prefill_chunk, transport=transport,
+                    prefill_chunk=args.prefill_chunk,
+                    transport=transports, prefill_workers=n_workers,
                     stats=EngineStats(args.stats_out),
                     speculative=speculative,
                     fault_plan=fault_plan,
                     deadline_steps=args.deadline_steps,
                     max_requeues=args.max_requeues,
                     watchdog_s=args.watchdog_s)
-    engine.run(reqs)
+    if args.router:
+        # async front-end: submissions flow through the Router's queue
+        # into the same engine; a ticket's classified per-request failure
+        # comes back on the Request, engine-fatal errors raise here
+        asyncio.run(run_router(engine, reqs,
+                               max_pending=args.max_pending))
+        print(f"[serve] router: {n_workers} prefill worker(s), "
+              f"queue wait mean: {engine.summary['queue_wait_mean_s']}s, "
+              f"per-worker prefill chunks: "
+              f"{engine.summary['prefill_chunks_by_worker']}")
+    else:
+        engine.run(reqs)
 
     s = engine.summary
     st = engine.pool.stats()
